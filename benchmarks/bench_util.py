@@ -1,0 +1,54 @@
+"""Timing + dataset helpers shared by the paper-experiment benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core.engine import Dataset
+from repro.data.treegen import TreeSpec, make_edge_table
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, repeat: int = 5,
+              **kwargs) -> float:
+    """Median wall-time (us) of fn(*args); blocks on all outputs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+_DATASETS: dict = {}
+
+
+def tree_dataset(num_vertices: int, height: int, payload_cols: int,
+                 seed: int = 0) -> Dataset:
+    key = (num_vertices, height, payload_cols, seed)
+    if key not in _DATASETS:
+        spec = TreeSpec(num_vertices=num_vertices, height=height,
+                        payload_cols=payload_cols, seed=seed)
+        _DATASETS[key] = Dataset.prepare(make_edge_table(spec),
+                                         spec.num_vertices)
+    return _DATASETS[key]
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def level_caps(num_vertices: int, height: int, depth: int | None = None):
+    """Volcano-style block sizing: frontier capacity ~ a few max level
+    widths, result capacity ~ the depth-bounded result size (a real engine
+    sizes blocks to the data, not the table — oversized static buffers
+    charge every engine O(capacity) in padding work per level and in the
+    final materialize)."""
+    from repro.core import EngineCaps
+    frontier = min(num_vertices, max(2048, 8 * num_vertices // max(height, 1)))
+    result = num_vertices if depth is None else         min(num_vertices, frontier * (depth + 2))
+    return EngineCaps(frontier=frontier, result=result)

@@ -1,0 +1,42 @@
+"""Experiment 1 (paper Fig. 5): BFS with only traversal columns.
+
+Table = (id, from, to, name): no payload, so late materialization has the
+least to win — the paper found PRecursive still ahead (2 of 4 attribute
+streams touched per level) and TRecursive ~= PostgreSQL.
+Engines: the paper's four + the beyond-paper bitmap/hybrid engines.
+"""
+from __future__ import annotations
+
+from repro.core import EngineCaps
+from repro.core.engine import RecursiveQuery, run_query
+
+from .bench_util import emit, level_caps, time_call, tree_dataset
+
+ENGINES = ("precursive", "trecursive", "rowstore", "rowstore_index",
+           "bitmap", "hybrid")
+
+
+def run(num_vertices: int = 200_000, height: int = 60,
+        depths=(5, 10, 20), repeat: int = 5) -> dict:
+    ds = tree_dataset(num_vertices, height, payload_cols=0)
+    caps = level_caps(num_vertices, height)
+    out = {}
+    for depth in depths:
+        base = None
+        for eng in ENGINES:
+            q = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
+                               caps=caps)
+            us = time_call(run_query, q, ds, 0, repeat=repeat)
+            if eng == "rowstore":
+                base = us
+            out[(eng, depth)] = us
+        for eng in ENGINES:
+            us = out[(eng, depth)]
+            speedup = out[("rowstore", depth)] / us
+            emit(f"exp1/{eng}/d{depth}", us,
+                 f"speedup_vs_rowstore={speedup:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

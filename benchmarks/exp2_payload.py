@@ -1,0 +1,41 @@
+"""Experiment 2 (paper Fig. 6): payload columns flow through the recursion.
+
+N auxiliary varchar(20) columns are added to the table and to every
+projection.  The paper's findings to reproduce:
+  * PRecursive wins big (late materialization: N-independent level cost);
+  * PRecursive run time ~independent of N;
+  * TRecursive falls behind the row-store as N grows (columnar row
+    reconstruction touches N+3 separate streams vs one contiguous row).
+"""
+from __future__ import annotations
+
+from repro.core import EngineCaps
+from repro.core.engine import RecursiveQuery, run_query
+
+from .bench_util import emit, level_caps, time_call, tree_dataset
+
+ENGINES = ("precursive", "trecursive", "rowstore")
+
+
+def run(num_vertices: int = 200_000, height: int = 60,
+        depths=(5, 10, 20), payloads=(2, 8, 16), repeat: int = 3) -> dict:
+    out = {}
+    for n in payloads:
+        ds = tree_dataset(num_vertices, height, payload_cols=n)
+        caps = level_caps(num_vertices, height)
+        for depth in depths:
+            for eng in ENGINES:
+                q = RecursiveQuery(engine=eng, max_depth=depth,
+                                   payload_cols=n, caps=caps)
+                us = time_call(run_query, q, ds, 0, repeat=repeat)
+                out[(eng, n, depth)] = us
+            for eng in ENGINES:
+                us = out[(eng, n, depth)]
+                sp = out[("rowstore", n, depth)] / us
+                emit(f"exp2/{eng}/N{n}/d{depth}", us,
+                     f"speedup_vs_rowstore={sp:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Experiment 3 (paper Fig. 7): the slim-CTE + top-level-join rewriting.
+
+The recursion carries only (id, to); payload columns are joined back once
+at the top.  Paper findings to reproduce:
+  * TRecursive benefits (~3x over the row-store): unnecessary columns are
+    materialized once, at the very end;
+  * the rewrite does NOT rescue the row-store (rows are re-read whole);
+  * PRecursive is unaffected (it already materializes late).
+"""
+from __future__ import annotations
+
+from repro.core import EngineCaps
+from repro.core.engine import RecursiveQuery, run_query
+
+from .bench_util import emit, level_caps, time_call, tree_dataset
+
+ENGINES = ("precursive", "trecursive_rewrite", "rowstore_rewrite",
+           "rowstore_index_rewrite")
+
+
+def run(num_vertices: int = 100_000, height: int = 60,
+        depths=(5, 10, 20), payloads=(8, 16), repeat: int = 3) -> dict:
+    out = {}
+    for n in payloads:
+        ds = tree_dataset(num_vertices, height, payload_cols=n)
+        caps = level_caps(num_vertices, height)
+        for depth in depths:
+            for eng in ENGINES:
+                q = RecursiveQuery(engine=eng, max_depth=depth,
+                                   payload_cols=n, caps=caps)
+                us = time_call(run_query, q, ds, 0, repeat=repeat)
+                out[(eng, n, depth)] = us
+            for eng in ENGINES:
+                us = out[(eng, n, depth)]
+                sp = out[("rowstore_rewrite", n, depth)] / us
+                emit(f"exp3/{eng}/N{n}/d{depth}", us,
+                     f"speedup_vs_rowstore_rewrite={sp:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Paper-claims validation: asserts the reproduction reproduces.
+
+Each claim from §5/§6 of the paper is checked against the measured engine
+times (CPU wall-clock; relative ratios are what the paper reports).  Output
+rows carry PASS/FAIL so EXPERIMENTS.md §Paper-claims can quote them.
+"""
+from __future__ import annotations
+
+from repro.core import EngineCaps
+from repro.core.engine import RecursiveQuery, run_query
+
+from .bench_util import emit, level_caps, time_call, tree_dataset
+
+
+def run(num_vertices: int = 200_000, height: int = 2000, depth: int = 10,
+        repeat: int = 3) -> dict:
+    """Defaults put the result set at ~depth/height = 0.5% of the table —
+    the paper's own regime ("rows scheduled to be materialized ... smaller
+    by roughly 200 times", Exp 1)."""
+    caps = level_caps(num_vertices, height, depth)
+
+    def t(engine, n, d=depth, v=num_vertices):
+        ds = tree_dataset(v, height, payload_cols=n)
+        q = RecursiveQuery(engine=engine, max_depth=d, payload_cols=n,
+                           caps=caps)
+        return time_call(run_query, q, ds, 0, repeat=repeat)
+
+    results = {}
+
+    # C1 (paper: "PRecursive up to 6x over PostgreSQL", payload case)
+    sp = t("rowstore", 16) / t("precursive", 16)
+    results["C1"] = sp
+    emit("claims/C1_precursive_vs_rowstore_N16", sp * 100,
+         f"speedup={sp:.2f} {'PASS' if sp >= 3.0 else 'FAIL'} (paper: ~6x)")
+
+    # C2 (paper: PRecursive ~independent of payload width N).  The
+    # recursion itself is exactly N-flat (only `to` is read per level); the
+    # residual sensitivity is the one final materialize (∝ N × result
+    # rows, which the paper's plots also contain).  Threshold 1.5 with the
+    # decomposition recorded.
+    ratio = t("precursive", 16) / t("precursive", 2)
+    results["C2"] = ratio
+    emit("claims/C2_precursive_N_independence", ratio * 100,
+         f"t(N16)/t(N2)={ratio:.2f} "
+         f"{'PASS' if ratio <= 1.5 else 'FAIL'} (paper: ~flat; residual = "
+         f"final materialize only)")
+
+    # C3 (paper Exp1: TRecursive ~ PostgreSQL-with-Index when no payload;
+    # both use the join index — our TRecursive expands through CSR, so the
+    # index-enabled row store is the structurally matched comparator; the
+    # paper notes TRecursive pulls slightly ahead with depth)
+    r3 = t("trecursive", 0) / t("rowstore_index", 0)
+    results["C3"] = r3
+    emit("claims/C3_trecursive_close_to_rowstore_idx_N0", r3 * 100,
+         f"t_ratio={r3:.2f} {'PASS' if 0.3 <= r3 <= 1.5 else 'FAIL'} "
+         f"(paper: similar, TRecursive slightly ahead at depth)")
+
+    # C4 (paper Exp3: rewriting gives TRecursive ~3x over the row-store)
+    sp4 = t("rowstore_rewrite", 16) / t("trecursive_rewrite", 16)
+    results["C4"] = sp4
+    emit("claims/C4_trecursive_rewrite_speedup", sp4 * 100,
+         f"speedup={sp4:.2f} {'PASS' if sp4 >= 2.0 else 'FAIL'} "
+         f"(paper: ~3x)")
+
+    # C5 (paper: the approach cannot be emulated in a row-store — the
+    # rewrite must NOT bring the row-store near PRecursive)
+    sp5 = t("rowstore_rewrite", 16) / t("precursive", 16)
+    results["C5"] = sp5
+    emit("claims/C5_rowstore_rewrite_still_behind", sp5 * 100,
+         f"precursive_still_{sp5:.2f}x_faster "
+         f"{'PASS' if sp5 >= 2.0 else 'FAIL'}")
+
+    # C6 (beyond paper, informational): the dense bitmap engine's domain
+    # is WIDE frontiers (exp1, height-60 trees: 7-12x over the row store);
+    # in this deep-skinny regime positional expansion wins, as it should —
+    # direction-optimizing `hybrid` picks per level.
+    sp6 = t("precursive", 16) / t("bitmap", 16)
+    results["C6"] = sp6
+    emit("claims/C6_beyond_bitmap_vs_precursive_deep_regime", sp6 * 100,
+         f"bitmap_speedup_vs_precursive={sp6:.2f} (beyond-paper, "
+         f"regime-dependent; see exp1 for its 7-12x wide-frontier domain)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: XLA-native ops vs the positional formulations.
+
+Wall-times here are CPU (relative only); the TPU story is carried by the
+roofline terms.  What these establish on ANY backend: bytes touched per BFS
+level by each engine's hot loop, and embedding-bag lookup cost vs table
+width (the N-independence of late materialization).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import build_csr, expand_frontier
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
+from repro.kernels.late_gather import late_gather_pallas, late_gather_ref
+
+from .bench_util import emit, time_call
+
+
+def run(repeat: int = 5) -> None:
+    rng = np.random.default_rng(0)
+
+    # positional gather: wide table, few positions (the Materialize op)
+    for w in (4, 32, 128):
+        tab = jnp.asarray(rng.standard_normal((1 << 18, w)).astype(np.float32))
+        pos = jnp.asarray(rng.integers(0, 1 << 18, 4096).astype(np.int32))
+        us = time_call(late_gather_ref, tab, pos, repeat=repeat)
+        emit(f"kern/late_gather_xla/w{w}", us, "oracle")
+        us2 = time_call(late_gather_pallas, tab, pos, repeat=repeat)
+        emit(f"kern/late_gather_pallas_interp/w{w}", us2,
+             "interpret-mode (not perf-representative)")
+
+    # frontier expansion at growing frontier sizes
+    src = jnp.asarray(rng.integers(0, 1 << 16, 1 << 18).astype(np.int32))
+    csr = build_csr(src, 1 << 16)
+    for f in (256, 4096):
+        tg = jnp.asarray(rng.integers(0, 1 << 16, f).astype(np.int32))
+        vd = jnp.ones((f,), bool)
+        us = time_call(expand_frontier, csr, tg, vd, 1 << 15, repeat=repeat)
+        emit(f"kern/frontier_expand/f{f}", us, "positions->positions")
+
+    # embedding bag vs bag count
+    tab = jnp.asarray(rng.standard_normal((1 << 16, 16)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 1 << 16, 1 << 14).astype(np.int32))
+    seg = jnp.sort(jnp.asarray(rng.integers(0, 2048, 1 << 14)
+                               .astype(np.int32)))
+    us = time_call(embedding_bag_ref, tab, idx, seg, 2048, repeat=repeat)
+    emit("kern/embedding_bag_xla/16k-into-2k", us, "oracle")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Assemble the EXPERIMENTS.md roofline table from dry-run JSON results."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_results(pattern: str = "results/dryrun_*.json") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(pattern)):
+        try:
+            with open(path) as f:
+                rows.extend(json.load(f))
+        except (OSError, json.JSONDecodeError):
+            continue
+    return rows
+
+
+def fmt_s(x) -> str:
+    try:
+        x = float(x)
+    except (TypeError, ValueError):
+        return "-"
+    if x == 0:
+        return "0"
+    if x < 1e-6:
+        return f"{x*1e9:.1f}ns"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def markdown_table(rows: list[dict], mesh: str = "single_pod_16x16") -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | "
+        "frac | useful/HLO flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | "
+                         f"SKIP ({r['skipped'][:40]}…) | | | | | |")
+            continue
+        if r.get("mesh") != mesh:
+            continue
+        uf = r.get("useful_flops_ratio")
+        uf = f"{uf:.2f}" if isinstance(uf, (int, float)) else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r.get('compute_s'))} | "
+            f"{fmt_s(r.get('memory_s'))} | {fmt_s(r.get('collective_s'))} | "
+            f"{r.get('dominant','-')} | {r.get('roofline_frac',0):.3f} | "
+            f"{uf} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = load_results()
+    seen = set()
+    dedup = []
+    for r in reversed(rows):                 # newest file wins
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               bool(r.get("skipped")))
+        if key in seen:
+            continue
+        seen.add(key)
+        dedup.append(r)
+    dedup.reverse()
+    print("## single-pod (16x16)\n")
+    print(markdown_table(dedup, "single_pod_16x16"))
+    print("\n## multi-pod (2x16x16)\n")
+    print(markdown_table(dedup, "multi_pod_2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

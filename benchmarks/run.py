@@ -1,0 +1,56 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks datasets for
+CI-speed runs; full sizes reproduce the paper's relative results.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: exp1,exp2,exp3,kern")
+    args = ap.parse_args(argv)
+
+    from . import (exp1_bfs, exp2_payload, exp3_rewrite, exp_claims,
+                   kernels_bench)
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+
+    if not only or "exp1" in only:
+        if args.quick:
+            exp1_bfs.run(num_vertices=20_000, height=10, depths=(4, 8),
+                         repeat=3)
+        else:
+            exp1_bfs.run()
+    if not only or "exp2" in only:
+        if args.quick:
+            exp2_payload.run(num_vertices=20_000, height=10, depths=(4, 8),
+                             payloads=(2, 16), repeat=3)
+        else:
+            exp2_payload.run()
+    if not only or "exp3" in only:
+        if args.quick:
+            exp3_rewrite.run(num_vertices=20_000, height=10, depths=(4, 8),
+                             payloads=(16,), repeat=3)
+        else:
+            exp3_rewrite.run()
+    if not only or "claims" in only:
+        if args.quick:
+            exp_claims.run(num_vertices=50_000, height=500, depth=8,
+                           repeat=3)
+        else:
+            exp_claims.run()
+    if not only or "kern" in only:
+        kernels_bench.run(repeat=3 if args.quick else 5)
+
+
+if __name__ == "__main__":
+    main()

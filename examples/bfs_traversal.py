@@ -1,0 +1,63 @@
+"""End-to-end driver for the paper's engine, including the DISTRIBUTED
+positional BFS on 8 (placeholder) devices — the pattern that runs unchanged
+on the 512-chip production mesh.
+
+    PYTHONPATH=src python examples/bfs_traversal.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time                      # noqa: E402
+
+import jax                       # noqa: E402
+import jax.numpy as jnp          # noqa: E402
+import numpy as np               # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro.core import EngineCaps                            # noqa: E402
+from repro.core.distributed_bfs import make_distributed_pbfs  # noqa: E402
+from repro.core.engine import Dataset, RecursiveQuery, run_query  # noqa: E402
+from repro.data.treegen import TreeSpec, make_edge_table     # noqa: E402
+from repro.launch.mesh import make_mesh                      # noqa: E402
+
+
+def main():
+    spec = TreeSpec(num_vertices=262_145, height=40, payload_cols=8, seed=1)
+    table = make_edge_table(spec)
+    ds = Dataset.prepare(table, spec.num_vertices)
+    caps = EngineCaps(frontier=1 << 16, result=1 << 18)
+
+    print("=== single-device PRecursive, depth sweep ===")
+    for depth in (5, 10, 20, 40):
+        q = RecursiveQuery("precursive", depth, 8, caps)
+        r = jax.block_until_ready(run_query(q, ds, 0))
+        t0 = time.perf_counter()
+        r = jax.block_until_ready(run_query(q, ds, 0))
+        print(f"depth {depth:3d}: {1e3*(time.perf_counter()-t0):7.2f} ms  "
+              f"rows={int(r.count)} overflow={bool(r.overflow)}")
+
+    print("\n=== distributed PRecursive over an 8-device mesh ===")
+    mesh = make_mesh((8,), ("data",))
+    fn = make_distributed_pbfs(mesh, ("data",), spec.num_vertices,
+                               caps=EngineCaps(frontier=1 << 14,
+                                               result=1 << 15),
+                               max_depth=20, num_payload_cols=8)
+    sh = NamedSharding(mesh, P("data"))
+    src = jax.device_put(np.asarray(table.column("from")), sh)
+    dst = jax.device_put(np.asarray(table.column("to")), sh)
+    pay = jax.device_put(
+        np.concatenate([np.asarray(table.column("column1"))], axis=1), sh)
+    out = jax.block_until_ready(fn(src, dst, pay, jnp.int32(0)))
+    t0 = time.perf_counter()
+    gpos, vals, counts, depths, ovfs = jax.block_until_ready(
+        fn(src, dst, pay, jnp.int32(0)))
+    rows = int(np.sum(np.asarray(counts)))
+    print(f"20-hop traversal on 8 shards: "
+          f"{1e3*(time.perf_counter()-t0):7.2f} ms, rows={rows}")
+    print("per-shard result counts:", np.asarray(counts).ravel().tolist())
+    print("values materialized shard-locally; only vertex ids crossed the "
+          "mesh (one all_gather per level).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""GraphSAGE minibatch training with the positional neighbor sampler —
+the paper's PRecursive engine applied to GNN data loading.
+
+Synthetic graph with Reddit-like statistics (default scaled down for CPU;
+--full for 233k nodes / 115M edges).
+
+    PYTHONPATH=src python examples/gnn_reddit.py --steps 100
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core.csr import build_csr
+from repro.data.graphgen import make_graph
+from repro.data.sampler import gather_block_features, sample_block
+from repro.models.gnn import (init_gnn, make_gnn_train_step,
+                              sage_block_forward)
+from repro.optim import AdamW, linear_warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--nodes", type=int, default=20_000)
+    ap.add_argument("--edges", type=int, default=400_000)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--full", action="store_true",
+                    help="Reddit-scale: 233k nodes / 115M edges")
+    args = ap.parse_args()
+    if args.full:
+        args.nodes, args.edges = 232_965, 114_615_892
+
+    fanout = (15, 10)
+    cfg = GNNConfig(name="sage", kind="graphsage", n_layers=2, d_hidden=128,
+                    d_feat=64, num_classes=41, sample_sizes=fanout)
+    g = make_graph(args.nodes, args.edges, cfg.d_feat,
+                   num_classes=cfg.num_classes, seed=0)
+    csr = build_csr(jnp.asarray(g.src), args.nodes)
+    feats, labels = jnp.asarray(g.feats), jnp.asarray(g.labels)
+    dst = jnp.asarray(g.dst)
+
+    params = init_gnn(jax.random.PRNGKey(0), cfg, cfg.d_feat,
+                      cfg.num_classes)
+    opt = AdamW(lr=linear_warmup_cosine(1e-3, 20, args.steps))
+    state = opt.init(params)
+    step = jax.jit(make_gnn_train_step(cfg, opt, block=True))
+
+    t0 = time.time()
+    for s in range(args.steps):
+        key = jax.random.PRNGKey(s)
+        seeds = jax.random.randint(key, (args.batch,), 0, args.nodes,
+                                   jnp.int32)
+        layers = sample_block(key, csr, dst, seeds, fanout)   # positions
+        block = {"layer_feats": gather_block_features(feats, layers),
+                 "labels": jnp.take(labels, seeds)}           # ONE gather
+        params, state, m = step(params, state, block)
+        if s % 20 == 0:
+            print(f"step {s:4d} loss={float(m['loss']):.4f}")
+    dt = time.time() - t0
+    print(f"\n{args.steps} steps in {dt:.1f}s "
+          f"({args.steps*args.batch/dt:.0f} seeds/s); sampler moved only "
+          f"node positions until the final feature gather.")
+
+
+if __name__ == "__main__":
+    main()

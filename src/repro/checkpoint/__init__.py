@@ -1,0 +1,2 @@
+from .store import (save_checkpoint, restore_checkpoint,      # noqa: F401
+                    CheckpointManager)

@@ -1,0 +1,4 @@
+"""Arch configs + registry (``--arch <id>`` resolution)."""
+from .base import (LMConfig, MoEConfig, MLAConfig, GNNConfig,   # noqa: F401
+                   RecsysConfig, BFSConfig)
+from .registry import ARCHS, ASSIGNED, Cell, cells, get_config, shapes_for  # noqa: F401

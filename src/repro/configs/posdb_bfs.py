@@ -1,0 +1,15 @@
+"""The paper's own workload as an arch: distributed positional BFS.
+
+1M-vertex tree, 8 payload columns, depth-16 traversal — the production-mesh
+deployment of the PRecursive engine (edges row-sharded, frontier exchanged
+by all_gather, values never cross a link).
+"""
+from repro.configs.base import BFSConfig
+
+CONFIG = BFSConfig(name="posdb-bfs", engine="precursive",
+                   num_vertices=1 << 20, payload_cols=8, max_depth=16,
+                   frontier_cap=1 << 15, result_cap=1 << 20)
+
+SMOKE = BFSConfig(name="posdb-bfs-smoke", engine="precursive",
+                  num_vertices=4096, payload_cols=2, max_depth=8,
+                  frontier_cap=1024, result_cap=4096)

@@ -1,0 +1,129 @@
+"""Architecture & shape registry — the source of truth for the dry-run grid.
+
+10 assigned architectures x their own 4-shape sets = 40 cells, plus the
+paper's own workload (``posdb-bfs``).  ``cells()`` enumerates every cell
+with its skip-status; ``launch/steps.py`` turns a cell into (step_fn,
+ShapeDtypeStruct inputs, shardings) for lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Iterator
+
+FAMILIES = ("lm", "gnn", "recsys", "bfs")
+
+ARCHS: dict[str, tuple[str, str]] = {
+    # arch id                  family    config module
+    "deepseek-v2-lite-16b":   ("lm", "repro.configs.deepseek_v2_lite_16b"),
+    "phi3.5-moe-42b":         ("lm", "repro.configs.phi35_moe_42b"),
+    "qwen2-0.5b":             ("lm", "repro.configs.qwen2_0_5b"),
+    "stablelm-1.6b":          ("lm", "repro.configs.stablelm_1_6b"),
+    "stablelm-12b":           ("lm", "repro.configs.stablelm_12b"),
+    "gatedgcn":               ("gnn", "repro.configs.gatedgcn"),
+    "graphsage-reddit":       ("gnn", "repro.configs.graphsage_reddit"),
+    "egnn":                   ("gnn", "repro.configs.egnn"),
+    "gat-cora":               ("gnn", "repro.configs.gat_cora"),
+    "deepfm":                 ("recsys", "repro.configs.deepfm"),
+    "posdb-bfs":              ("bfs", "repro.configs.posdb_bfs"),
+}
+
+ASSIGNED = tuple(a for a in ARCHS if a != "posdb-bfs")
+
+LM_SHAPES: dict[str, dict[str, Any]] = {
+    "train_4k":    dict(kind="train",   seq=4096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768,  batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32768,  batch=128),
+    "long_500k":   dict(kind="decode",  seq=524288, batch=1),
+}
+
+GNN_SHAPES: dict[str, dict[str, Any]] = {
+    "full_graph_sm": dict(kind="full_graph", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7),
+    "minibatch_lg":  dict(kind="minibatch", n_nodes=232965,
+                          n_edges=114615892, batch_nodes=1024,
+                          fanout=(15, 10), d_feat=602, n_classes=41),
+    "ogb_products":  dict(kind="full_graph", n_nodes=2449029,
+                          n_edges=61859140, d_feat=100, n_classes=47),
+    "molecule":      dict(kind="molecule", n_nodes=30, n_edges=64,
+                          batch=128, d_feat=16, n_classes=2),
+}
+
+RECSYS_SHAPES: dict[str, dict[str, Any]] = {
+    "train_batch":    dict(kind="train", batch=65536),
+    "serve_p99":      dict(kind="serve", batch=512),
+    "serve_bulk":     dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_000_000),
+}
+
+BFS_SHAPES: dict[str, dict[str, Any]] = {
+    "traverse_1m": dict(kind="bfs"),
+}
+
+# reduced dims for per-cell smoke tests (same code path, CPU-sized)
+SMOKE_LM_SHAPES = {
+    "train_4k":    dict(kind="train",   seq=32,  batch=2),
+    "prefill_32k": dict(kind="prefill", seq=32,  batch=2),
+    "decode_32k":  dict(kind="decode",  seq=32,  batch=2),
+    "long_500k":   dict(kind="decode",  seq=64,  batch=1),
+}
+SMOKE_GNN_SHAPES = {
+    "full_graph_sm": dict(kind="full_graph", n_nodes=120, n_edges=480,
+                          d_feat=24, n_classes=5),
+    "minibatch_lg":  dict(kind="minibatch", n_nodes=500, n_edges=4000,
+                          batch_nodes=16, fanout=(4, 3), d_feat=24,
+                          n_classes=5),
+    "ogb_products":  dict(kind="full_graph", n_nodes=300, n_edges=1500,
+                          d_feat=24, n_classes=5),
+    "molecule":      dict(kind="molecule", n_nodes=12, n_edges=30, batch=8,
+                          d_feat=8, n_classes=2),
+}
+SMOKE_RECSYS_SHAPES = {
+    "train_batch":    dict(kind="train", batch=64),
+    "serve_p99":      dict(kind="serve", batch=16),
+    "serve_bulk":     dict(kind="serve", batch=128),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=512),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    family: str
+    dims: dict
+    skip: str | None = None           # reason if the cell is skipped
+
+
+def get_config(arch: str, smoke: bool = False):
+    family, mod_name = ARCHS[arch]
+    mod = importlib.import_module(mod_name)
+    return (mod.SMOKE if smoke else mod.CONFIG), family
+
+
+def shapes_for(family: str, smoke: bool = False) -> dict[str, dict]:
+    if family == "lm":
+        return SMOKE_LM_SHAPES if smoke else LM_SHAPES
+    if family == "gnn":
+        return SMOKE_GNN_SHAPES if smoke else GNN_SHAPES
+    if family == "recsys":
+        return SMOKE_RECSYS_SHAPES if smoke else RECSYS_SHAPES
+    return BFS_SHAPES
+
+
+def cells(include_bfs: bool = False, smoke: bool = False) -> Iterator[Cell]:
+    for arch, (family, _) in ARCHS.items():
+        if family == "bfs" and not include_bfs:
+            continue
+        cfg, _ = get_config(arch, smoke)
+        for shape_id, dims in shapes_for(family, smoke).items():
+            skip = None
+            if family == "lm" and shape_id == "long_500k" and not smoke:
+                if getattr(cfg, "attn_window", None) is None:
+                    skip = ("pure full-attention arch: 512k-KV decode cell "
+                            "reserved for sub-quadratic attention "
+                            "(DESIGN.md §4); run with --attn-window for the "
+                            "documented extra")
+            yield Cell(arch=arch, shape=shape_id, family=family,
+                       dims=dict(dims), skip=skip)

@@ -1,0 +1,81 @@
+"""CSR adjacency index — the engine's join index over ``edges.from``.
+
+PosDB/PostgreSQL accelerate the recursive join with a B-tree/hash index on
+the join column.  The TPU-native equivalent is a CSR permutation index:
+
+    perm    : (E,) int32 — edge positions sorted by their ``from`` vertex
+    indptr  : (V+1,) int32 — per-vertex range into ``perm``
+
+Lookup of "all edges with from == v" is then the contiguous slice
+``perm[indptr[v] : indptr[v+1]]`` — positions in, positions out, no values
+touched.  This is what makes the PRecursive expansion purely positional.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CSRIndex", "build_csr", "expand_frontier", "csr_degrees"]
+
+
+class CSRIndex(NamedTuple):
+    indptr: jax.Array      # (V+1,) int32
+    perm: jax.Array        # (E,)  int32 — edge positions grouped by source
+
+    @property
+    def num_vertices(self) -> int:
+        return self.indptr.shape[0] - 1   # static under tracing
+
+    @property
+    def num_edges(self) -> int:
+        return self.perm.shape[0]
+
+
+def build_csr(src: jax.Array, num_vertices: int) -> CSRIndex:
+    """Build the index (sort-based, O(E log E)); jit-safe."""
+    e = src.shape[0]
+    perm = jnp.argsort(src, stable=True).astype(jnp.int32)
+    counts = jnp.zeros((num_vertices,), jnp.int32).at[src].add(1, mode="drop")
+    indptr = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts, dtype=jnp.int32)])
+    return CSRIndex(indptr=indptr, perm=perm)
+
+
+def csr_degrees(csr: CSRIndex, vertices: jax.Array, valid: jax.Array) -> jax.Array:
+    v = jnp.clip(vertices, 0, csr.num_vertices - 1)
+    deg = csr.indptr[v + 1] - csr.indptr[v]
+    return jnp.where(valid & (vertices >= 0) & (vertices < csr.num_vertices),
+                     deg, 0)
+
+
+def expand_frontier(csr: CSRIndex, targets: jax.Array, valid: jax.Array,
+                    capacity: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One BFS level: expand every target vertex through the CSR index.
+
+    Pure positional dataflow — the PRecursive hot loop.  For each live
+    ``targets[i]`` emits the positions of all edges whose source is that
+    vertex, concatenated in frontier order, padded to ``capacity``.
+
+    Returns (edge_positions (capacity,), total (scalar), overflowed (bool)).
+
+    Vectorized two-phase expansion: per-target degrees -> exclusive scan for
+    output offsets -> searchsorted inverts the scan so each output slot finds
+    its producing target.  (The Pallas ``frontier_expand`` kernel implements
+    the same contract with VMEM-tiled binary search; see kernels/.)
+    """
+    deg = csr_degrees(csr, targets, valid)                        # (F,)
+    ends = jnp.cumsum(deg, dtype=jnp.int32)                       # inclusive
+    starts = ends - deg
+    total = ends[-1] if deg.shape[0] > 0 else jnp.zeros((), jnp.int32)
+
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    srcslot = jnp.searchsorted(ends, j, side="right").astype(jnp.int32)
+    srcslot = jnp.minimum(srcslot, deg.shape[0] - 1)
+    within = j - starts[srcslot]
+    v = jnp.clip(targets[srcslot], 0, csr.num_vertices - 1)
+    epos = csr.perm[jnp.minimum(csr.indptr[v] + within, csr.num_edges - 1)]
+    live = j < jnp.minimum(total, capacity)
+    epos = jnp.where(live, epos, csr.num_edges)                   # sentinel pad
+    return epos.astype(jnp.int32), jnp.minimum(total, capacity), total > capacity

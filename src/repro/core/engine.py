@@ -1,0 +1,122 @@
+"""Query layer: the paper's three experiment queries as engine-dispatched
+plans.
+
+A ``RecursiveQuery`` describes the SQL of §5.1 (Listings 1.1/1.2/1.3):
+which payload columns exist, what the recursion carries, whether the Exp-3
+rewrite is applied, and which engine executes it.  ``plan_repr`` renders the
+Volcano tree of Fig. 3/4 for the chosen engine so the operator mapping is
+auditable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+from .bitmap import bitmap_bfs, hybrid_bfs
+from .csr import CSRIndex, build_csr
+from .recursive import (BFSResult, EngineCaps, precursive_bfs, rowstore_bfs,
+                        rowstore_rewrite_bfs, trecursive_bfs,
+                        trecursive_rewrite_bfs)
+from .table import ColumnTable, RowTable, payload_names
+
+EngineName = Literal["precursive", "trecursive", "rowstore", "rowstore_index",
+                     "bitmap", "hybrid", "trecursive_rewrite",
+                     "rowstore_rewrite", "rowstore_index_rewrite"]
+
+ENGINE_NAMES: tuple[str, ...] = (
+    "precursive", "trecursive", "rowstore", "rowstore_index", "bitmap",
+    "hybrid", "trecursive_rewrite", "rowstore_rewrite",
+    "rowstore_index_rewrite")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecursiveQuery:
+    """One recursive CTE query instance (a paper experiment cell)."""
+
+    engine: EngineName
+    max_depth: int
+    payload_cols: int                 # the paper's N
+    caps: EngineCaps
+    dedup: bool = True                # BFS semantics (UNION ALL if False)
+
+    @property
+    def out_cols(self) -> tuple[str, ...]:
+        return ("id", "from", "to", "name",
+                *payload_names(self.payload_cols))
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataset:
+    """A prepared graph: columnar + row layouts + the join index."""
+
+    table: ColumnTable
+    rows: RowTable
+    csr: CSRIndex
+    num_vertices: int
+
+    @classmethod
+    def prepare(cls, table: ColumnTable, num_vertices: int) -> "Dataset":
+        return cls(table=table, rows=RowTable.from_column_table(table),
+                   csr=build_csr(table.column("from"), num_vertices),
+                   num_vertices=num_vertices)
+
+
+def run_query(q: RecursiveQuery, ds: Dataset, root: int) -> BFSResult:
+    rt = jnp.int32(root)
+    kw = dict(caps=q.caps, max_depth=q.max_depth, out_cols=q.out_cols,
+              dedup=q.dedup)
+    if q.engine == "precursive":
+        return precursive_bfs(ds.table, ds.csr, rt, **kw)
+    if q.engine == "trecursive":
+        return trecursive_bfs(ds.table, ds.csr, rt, **kw)
+    if q.engine == "rowstore":
+        return rowstore_bfs(ds.rows, ds.csr, rt, use_index=False, **kw)
+    if q.engine == "rowstore_index":
+        return rowstore_bfs(ds.rows, ds.csr, rt, use_index=True, **kw)
+    if q.engine == "bitmap":
+        kw.pop("dedup")
+        return bitmap_bfs(ds.table, ds.num_vertices, rt, **kw)
+    if q.engine == "hybrid":
+        kw.pop("dedup")
+        return hybrid_bfs(ds.table, ds.csr, rt, **kw)
+    if q.engine == "trecursive_rewrite":
+        return trecursive_rewrite_bfs(ds.table, ds.csr, rt, **kw)
+    if q.engine == "rowstore_rewrite":
+        return rowstore_rewrite_bfs(ds.rows, ds.csr, rt, use_index=False, **kw)
+    if q.engine == "rowstore_index_rewrite":
+        return rowstore_rewrite_bfs(ds.rows, ds.csr, rt, use_index=True, **kw)
+    raise ValueError(f"unknown engine {q.engine!r}")
+
+
+_PLANS = {
+    "precursive": """\
+Materialize[{cols}]                <- ONE late gather, after the fixed point
+  PRecursive(maxrec={d})
+    Filter[from = {root}] -> PosBlock            (non-recursive child)
+    IndexJoin[CSR(from)](PRecursiveCTE, edges)   (recursive child: pos -> pos)""",
+    "trecursive": """\
+TRecursive(maxrec={d})
+  Materialize[{cols}](Filter[from = {root}])    (non-recursive child)
+  Join[from = cte.to]                            (recursive child)
+    TRecursiveCTE
+    Materialize[{cols}](edges)                  <- (3+N) gathers EVERY level""",
+    "rowstore": """\
+Recursive(maxrec={d})                            (PostgreSQL emulation)
+  SeqScan[from = {root}] -> full rows
+  HashJoin[from = cte.to]
+    Hash(cte)
+    SeqScan(edges)                              <- full-width scan EVERY level""",
+}
+
+
+def plan_repr(engine: str, max_depth: int, payload_cols: int,
+              root: int = 0) -> str:
+    base = {"rowstore_index": "rowstore", "hybrid": "precursive",
+            "bitmap": "precursive", "trecursive_rewrite": "trecursive",
+            "rowstore_rewrite": "rowstore",
+            "rowstore_index_rewrite": "rowstore"}.get(engine, engine)
+    cols = ", ".join(("id", "from", "to", "name",
+                      *payload_names(payload_cols)))
+    return _PLANS[base].format(d=max_depth, cols=cols, root=root)

@@ -1,0 +1,116 @@
+"""Position blocks — the paper's core intermediate representation.
+
+PosDB's positional operators exchange blocks of row ids instead of value
+tuples.  Under XLA every buffer is static-shaped, so a position block is a
+fixed-capacity ``int32`` vector plus a live count; dead slots hold an
+out-of-range sentinel so downstream gathers mask to zero (see
+``ColumnTable.take``).
+
+This module also exposes the *positional processing* primitives reused across
+the framework (MoE dispatch, embedding lookup, neighbor sampling): they are
+the paper's late-materialization discipline packaged as a library.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PosBlock", "empty_block", "block_from_mask", "append_block",
+    "compact_mask", "take_late", "sort_positions_by_key",
+]
+
+
+class PosBlock(NamedTuple):
+    """Fixed-capacity block of row positions.
+
+    positions : (cap,) int32 — valid entries first, sentinel padding after
+    count     : ()     int32 — number of live entries
+    """
+
+    positions: jax.Array
+    count: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.positions.shape[0]
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.count
+
+
+def empty_block(capacity: int, sentinel: int) -> PosBlock:
+    return PosBlock(
+        positions=jnp.full((capacity,), sentinel, dtype=jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def compact_mask(mask: jax.Array, capacity: int, sentinel: int) -> PosBlock:
+    """Turn a boolean row mask into a compacted position block.
+
+    The columnar Filter operator: emits the positions of matching rows.
+    Deterministic (ascending) order; overflow beyond ``capacity`` is dropped
+    (callers check ``count`` vs capacity to detect it).
+    """
+    count = jnp.sum(mask, dtype=jnp.int32)
+    idx = jnp.nonzero(mask, size=capacity, fill_value=sentinel)[0].astype(jnp.int32)
+    return PosBlock(idx, jnp.minimum(count, capacity))
+
+
+def block_from_mask(values: jax.Array, mask: jax.Array, capacity: int,
+                    sentinel: int) -> tuple[PosBlock, jax.Array]:
+    """Compact ``values[mask]`` into a block; returns (block, overflow)."""
+    n = values.shape[0]
+    count = jnp.sum(mask, dtype=jnp.int32)
+    order = jnp.argsort(~mask, stable=True)            # valid slots first
+    gathered = jnp.take(values, order[:min(capacity, n)], axis=0)
+    if capacity > n:
+        gathered = jnp.pad(gathered, (0, capacity - n))
+    live = jnp.arange(capacity, dtype=jnp.int32) < jnp.minimum(count, capacity)
+    out = jnp.where(live, gathered, sentinel)
+    return PosBlock(out.astype(jnp.int32), jnp.minimum(count, capacity)), count > capacity
+
+
+def append_block(buf: jax.Array, buf_count: jax.Array, block: PosBlock
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Append a block's live entries into a larger result buffer.
+
+    Returns (new_buffer, new_count, overflowed).  Entries past the buffer
+    capacity are dropped (and flagged) rather than wrapped.
+    """
+    cap_r = buf.shape[0]
+    slots = buf_count + jnp.arange(block.capacity, dtype=jnp.int32)
+    live = block.valid_mask() & (slots < cap_r)
+    safe_slots = jnp.where(live, slots, cap_r)          # scatter-drop padding
+    buf = buf.at[safe_slots].set(jnp.where(live, block.positions, 0),
+                                 mode="drop")
+    new_count = jnp.minimum(buf_count + block.count, cap_r)
+    return buf, new_count, (buf_count + block.count) > cap_r
+
+
+# ---------------------------------------------------------------------------
+# Late materialization + positional processing primitives (framework-wide API)
+# ---------------------------------------------------------------------------
+
+def take_late(table, block: PosBlock, names=None):
+    """The Materialize operator: one gather at the very end of a positional
+    plan.  ``table`` is a ColumnTable; returns dict of (cap, ...) arrays with
+    dead slots zeroed."""
+    return table.take(block.positions, names)
+
+
+def sort_positions_by_key(keys: jax.Array, num_buckets: int
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Stable-sort positions by an integer bucket key.
+
+    The positional MoE-dispatch primitive: returns (order, bucket_counts)
+    where ``order`` lists original positions grouped by bucket.  Tokens are
+    *gathered once* along ``order``, processed per contiguous bucket, and
+    scattered back — values move twice, positions do all the routing.
+    """
+    order = jnp.argsort(keys, stable=True).astype(jnp.int32)
+    counts = jnp.zeros((num_buckets,), jnp.int32).at[keys].add(1, mode="drop")
+    return order, counts

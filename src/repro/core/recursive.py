@@ -1,0 +1,340 @@
+"""The paper's contribution: recursive (BFS) query engines.
+
+Four engines share one fixed-point skeleton (``jax.lax.while_loop``) and
+differ only in what flows through the recursion — exactly the axis the paper
+studies:
+
+=================  ==========================================================
+``precursive``     position blocks only; join columns read per level; ALL
+                   output columns gathered once at the end (late
+                   materialization).  The paper's main contribution
+                   (PRecursive/PRecursiveCTE, Fig. 4).
+``trecursive``     materialized tuple blocks over columnar storage (early
+                   materialization; TRecursive/TRecursiveCTE, Fig. 3).
+``rowstore``       PostgreSQL emulation: interleaved rows, per-level hash
+                   join realized as a full scan + membership probe; every
+                   row access reads the full row width.
+``rowstore_index`` PostgreSQL-with-index emulation: CSR join index avoids
+                   the scan but row gathers still read full rows.
+=================  ==========================================================
+
+Beyond the paper, :mod:`repro.core.bitmap` adds a dense-frontier engine and
+:mod:`repro.core.distributed_bfs` the multi-device one.
+
+Semantics note: the SQL in the paper is ``UNION ALL`` over a *tree*, where
+every edge is reached at most once and BFS/UNION-ALL coincide.  On general
+graphs the engines implement BFS semantics (per-vertex dedup via a visited
+bitmap, within-level dedup via scatter-argmin) when ``dedup=True``; with
+``dedup=False`` they reproduce raw UNION ALL walks up to ``max_depth``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSRIndex, expand_frontier
+from .positions import PosBlock, append_block, compact_mask, empty_block
+from .table import ColumnTable, RowTable
+
+__all__ = [
+    "EngineCaps", "BFSResult", "precursive_bfs", "trecursive_bfs",
+    "rowstore_bfs", "trecursive_rewrite_bfs", "rowstore_rewrite_bfs",
+    "dedup_targets",
+]
+
+
+class EngineCaps(NamedTuple):
+    """Static buffer capacities (the Volcano block sizes of the TPU port)."""
+
+    frontier: int   # max edges emitted by a single BFS level
+    result: int     # max edges in the full result
+
+
+class BFSResult(NamedTuple):
+    values: Dict[str, jax.Array]   # (result_cap, ...) materialized outputs
+    positions: jax.Array           # (result_cap,) edge positions (or -1s)
+    count: jax.Array               # () live rows
+    depth: jax.Array               # () levels actually executed
+    overflow: jax.Array            # () any capacity overflow observed
+
+
+def dedup_targets(targets: jax.Array, valid: jax.Array, visited: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """BFS vertex dedup: drop already-visited targets and, within the level,
+    keep only the first occurrence of each vertex (scatter-argmin ticket).
+
+    Returns (keep_mask, new_visited)."""
+    cap = targets.shape[0]
+    nv = visited.shape[0]
+    safe = jnp.clip(targets, 0, nv - 1)
+    fresh = valid & ~visited[safe]
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    ticket = jnp.full((nv,), cap, jnp.int32).at[safe].min(
+        jnp.where(fresh, slots, cap), mode="drop")
+    keep = fresh & (ticket[safe] == slots)
+    new_visited = visited.at[safe].set(jnp.where(keep, True, visited[safe]),
+                                       mode="drop")
+    return keep, new_visited
+
+
+def _seed_block(from_col: jax.Array, root, cap: int, sentinel: int) -> PosBlock:
+    return compact_mask(from_col == root, cap, sentinel)
+
+
+# ---------------------------------------------------------------------------
+# PRecursive — the paper's positional engine
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
+                                             "dedup", "expand_fn"))
+def precursive_bfs(table: ColumnTable, csr: CSRIndex, root: jax.Array,
+                   *, caps: EngineCaps, max_depth: int,
+                   out_cols: tuple[str, ...], dedup: bool = True,
+                   expand_fn: Callable | None = None) -> BFSResult:
+    """Positional BFS with late materialization.
+
+    Per level the engine touches exactly one value column (``to``) to turn
+    edge positions into target vertices; everything else is positions.  The
+    single materialize happens after the fixed point.
+    """
+    expand = expand_fn or expand_frontier
+    e = table.num_rows
+    to_col = table.column("to")
+    nv = csr.num_vertices
+
+    frontier = _seed_block(table.column("from"), root, caps.frontier, e)
+    result = jnp.full((caps.result,), e, jnp.int32)
+    result, rcount, roverflow = append_block(result, jnp.zeros((), jnp.int32),
+                                             frontier)
+    visited = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)].set(True)
+
+    def cond(state):
+        frontier, _, _, visited, depth, _ = state
+        return (frontier.count > 0) & (depth < max_depth)
+
+    def body(state):
+        frontier, result, rcount, visited, depth, overflow = state
+        fvalid = frontier.valid_mask()
+        # the ONLY per-level value read: positions -> target vertices
+        targets = jnp.where(fvalid,
+                            to_col[jnp.minimum(frontier.positions, e - 1)], -1)
+        if dedup:
+            keep, visited = dedup_targets(targets, fvalid, visited)
+        else:
+            keep = fvalid
+        targets = jnp.where(keep, targets, -1)
+        epos, total, ovf = expand(csr, targets, keep, caps.frontier)
+        nxt = PosBlock(epos, total)
+        result, rcount, ovf2 = append_block(result, rcount, nxt)
+        return (nxt, result, rcount, visited, depth + 1,
+                overflow | ovf | ovf2)
+
+    state = (frontier, result, rcount, visited, jnp.zeros((), jnp.int32),
+             roverflow)
+    frontier, result, rcount, visited, depth, overflow = jax.lax.while_loop(
+        cond, body, state)
+
+    block = PosBlock(result, rcount)
+    values = table.take(block.positions, out_cols)     # the late materialize
+    return BFSResult(values, block.positions, rcount, depth, overflow)
+
+
+# ---------------------------------------------------------------------------
+# TRecursive — tuple blocks over columnar storage (early materialization)
+# ---------------------------------------------------------------------------
+
+def _append_values(bufs, count, vals, block_count, cap_r):
+    cap_f = next(iter(vals.values())).shape[0]
+    slots = count + jnp.arange(cap_f, dtype=jnp.int32)
+    live = (jnp.arange(cap_f, dtype=jnp.int32) < block_count) & (slots < cap_r)
+    safe = jnp.where(live, slots, cap_r)
+    out = {}
+    for k, buf in bufs.items():
+        v = vals[k]
+        mask = live.reshape(live.shape + (1,) * (v.ndim - 1))
+        out[k] = buf.at[safe].set(jnp.where(mask, v, 0), mode="drop")
+    new_count = jnp.minimum(count + block_count, cap_r)
+    return out, new_count, (count + block_count) > cap_r
+
+
+@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
+                                             "dedup"))
+def trecursive_bfs(table: ColumnTable, csr: CSRIndex, root: jax.Array,
+                   *, caps: EngineCaps, max_depth: int,
+                   out_cols: tuple[str, ...], dedup: bool = True) -> BFSResult:
+    """Tuple-based BFS: the recursion carries fully materialized tuples.
+
+    Per level, the join output is immediately materialized into ALL
+    ``out_cols`` (the paper's Fig. 3 plan: Join over Materialize) — (3+N)
+    column gathers per level instead of PRecursive's one.
+    """
+    e = table.num_rows
+    nv = csr.num_vertices
+
+    seed = _seed_block(table.column("from"), root, caps.frontier, e)
+    carry_cols = tuple(dict.fromkeys(out_cols + ("to",)))  # 'to' drives join
+    seed_vals = table.take(seed.positions, carry_cols)      # early materialize
+
+    rbufs = {k: jnp.zeros((caps.result,) + v.shape[1:], v.dtype)
+             for k, v in seed_vals.items() if k in out_cols}
+    rbufs, rcount, rovf = _append_values(
+        rbufs, jnp.zeros((), jnp.int32),
+        {k: seed_vals[k] for k in rbufs}, seed.count, caps.result)
+    visited = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)].set(True)
+
+    def cond(state):
+        _, fcount, _, _, visited, depth, _ = state
+        return (fcount > 0) & (depth < max_depth)
+
+    def body(state):
+        fvals, fcount, rbufs, rcount, visited, depth, overflow = state
+        fvalid = jnp.arange(caps.frontier, dtype=jnp.int32) < fcount
+        targets = jnp.where(fvalid, fvals["to"], -1)   # from the tuple block
+        if dedup:
+            keep, visited = dedup_targets(targets, fvalid, visited)
+        else:
+            keep = fvalid
+        targets = jnp.where(keep, targets, -1)
+        epos, total, ovf = expand_frontier(csr, targets, keep, caps.frontier)
+        nxt_vals = table.take(epos, carry_cols)         # early materialize
+        rbufs2, rcount2, ovf2 = _append_values(
+            rbufs, rcount, {k: nxt_vals[k] for k in rbufs}, total, caps.result)
+        return (nxt_vals, total, rbufs2, rcount2, visited, depth + 1,
+                overflow | ovf | ovf2)
+
+    state = (seed_vals, seed.count, rbufs, rcount, visited,
+             jnp.zeros((), jnp.int32), rovf)
+    fvals, fcount, rbufs, rcount, visited, depth, overflow = \
+        jax.lax.while_loop(cond, body, state)
+
+    return BFSResult({k: rbufs[k] for k in out_cols},
+                     jnp.full((caps.result,), -1, jnp.int32),
+                     rcount, depth, overflow)
+
+
+# ---------------------------------------------------------------------------
+# Row-store emulation (PostgreSQL / PostgreSQL+index baselines)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
+                                             "dedup", "use_index"))
+def rowstore_bfs(rt: RowTable, csr: CSRIndex, root: jax.Array,
+                 *, caps: EngineCaps, max_depth: int,
+                 out_cols: tuple[str, ...], dedup: bool = True,
+                 use_index: bool = False) -> BFSResult:
+    """Row-store BFS.  ``use_index=False`` = hash-join-by-scan (PostgreSQL
+    default): every level scans the full interleaved table to probe the
+    frontier's vertex set.  ``use_index=True`` = index join via CSR, but row
+    gathers still read full rows (heap pages)."""
+    e = rt.num_rows
+    nv = csr.num_vertices
+    from_col = rt.column("from")           # strided: drags full rows along
+    to_slot, width = rt.slot("to"), rt.width
+
+    seed = compact_mask(from_col == root, caps.frontier, e)
+    seed_rows = rt.take_rows(seed.positions)            # full-width gather
+
+    rbuf = jnp.zeros((caps.result, width), jnp.float32)
+    rbufs, rcount, rovf = _append_values({"rows": rbuf},
+                                         jnp.zeros((), jnp.int32),
+                                         {"rows": seed_rows}, seed.count,
+                                         caps.result)
+    visited = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)].set(True)
+
+    def cond(state):
+        _, fcount, _, _, visited, depth, _ = state
+        return (fcount > 0) & (depth < max_depth)
+
+    def body(state):
+        frows, fcount, rbufs, rcount, visited, depth, overflow = state
+        fvalid = jnp.arange(caps.frontier, dtype=jnp.int32) < fcount
+        targets = jnp.where(fvalid, frows[:, to_slot].astype(jnp.int32), -1)
+        if dedup:
+            keep, visited = dedup_targets(targets, fvalid, visited)
+        else:
+            keep = fvalid
+        targets = jnp.where(keep, targets, -1)
+        if use_index:
+            epos, total, ovf = expand_frontier(csr, targets, keep,
+                                               caps.frontier)
+            nxt = PosBlock(epos, total)
+        else:
+            # hash-join emulation: build the frontier's vertex set, then SCAN
+            # the whole table probing it (row-store: the scan touches every
+            # byte of every row, not just `from`).
+            probe = jnp.zeros((nv,), bool).at[
+                jnp.clip(targets, 0, nv - 1)].set(keep, mode="drop")
+            scan_from = from_col.astype(jnp.int32)       # full-table read
+            hit = probe[jnp.clip(scan_from, 0, nv - 1)] & (scan_from >= 0)
+            nxt = compact_mask(hit, caps.frontier, e)
+            ovf = jnp.sum(hit, dtype=jnp.int32) > caps.frontier
+            total = nxt.count
+        nxt_rows = rt.take_rows(nxt.positions)           # full-width gather
+        rbufs2, rcount2, ovf2 = _append_values(rbufs, rcount,
+                                               {"rows": nxt_rows}, total,
+                                               caps.result)
+        return (nxt_rows, total, rbufs2, rcount2, visited, depth + 1,
+                overflow | ovf | ovf2)
+
+    state = (seed_rows, seed.count, rbufs, rcount, visited,
+             jnp.zeros((), jnp.int32), rovf)
+    frows, fcount, rbufs, rcount, visited, depth, overflow = \
+        jax.lax.while_loop(cond, body, state)
+
+    values = rt.project(rbufs["rows"], out_cols)
+    return BFSResult(values, jnp.full((caps.result,), -1, jnp.int32),
+                     rcount, depth, overflow)
+
+
+# ---------------------------------------------------------------------------
+# Experiment-3 rewrites: slim recursive core + one top-level join on id
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
+                                             "dedup"))
+def trecursive_rewrite_bfs(table: ColumnTable, csr: CSRIndex, root: jax.Array,
+                           *, caps: EngineCaps, max_depth: int,
+                           out_cols: tuple[str, ...], dedup: bool = True
+                           ) -> BFSResult:
+    """The paper's Exp-3 rewriting for the tuple engine: the CTE carries only
+    (id, to); payload columns are joined back once at the top level via a
+    hash table on ``id`` (realized as an inverse-permutation probe array)."""
+    slim = trecursive_bfs(table, csr, root, caps=caps, max_depth=max_depth,
+                          out_cols=("id",), dedup=dedup)
+    e = table.num_rows
+    id_col = table.column("id")
+    # hash build: id -> position (ids are a permutation of positions)
+    probe = jnp.zeros((e,), jnp.int32).at[id_col].set(
+        jnp.arange(e, dtype=jnp.int32), mode="drop")
+    live = jnp.arange(caps.result, dtype=jnp.int32) < slim.count
+    ids = jnp.where(live, slim.values["id"].astype(jnp.int32), -1)
+    pos = jnp.where(live, probe[jnp.clip(ids, 0, e - 1)], e)
+    values = table.take(pos, out_cols)                   # single wide gather
+    return BFSResult(values, pos, slim.count, slim.depth, slim.overflow)
+
+
+@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
+                                             "dedup", "use_index"))
+def rowstore_rewrite_bfs(rt: RowTable, csr: CSRIndex, root: jax.Array,
+                         *, caps: EngineCaps, max_depth: int,
+                         out_cols: tuple[str, ...], dedup: bool = True,
+                         use_index: bool = False) -> BFSResult:
+    """Exp-3 rewriting on the row-store: the slim CTE still gathers full rows
+    (heap pages) per level, and the top-level join gathers them again —
+    demonstrating the paper's point that the rewrite cannot rescue a
+    row-store."""
+    slim = rowstore_bfs(rt, csr, root, caps=caps, max_depth=max_depth,
+                        out_cols=("id",), dedup=dedup, use_index=use_index)
+    e = rt.num_rows
+    id_col = rt.column("id").astype(jnp.int32)           # strided scan
+    probe = jnp.zeros((e,), jnp.int32).at[jnp.clip(id_col, 0, e - 1)].set(
+        jnp.arange(e, dtype=jnp.int32), mode="drop")
+    live = jnp.arange(caps.result, dtype=jnp.int32) < slim.count
+    ids = jnp.where(live, slim.values["id"].astype(jnp.int32), -1)
+    pos = jnp.where(live, probe[jnp.clip(ids, 0, e - 1)], e)
+    rows = rt.take_rows(pos)                             # full rows again
+    values = rt.project(rows, out_cols)
+    return BFSResult(values, pos, slim.count, slim.depth, slim.overflow)

@@ -1,0 +1,170 @@
+"""Columnar tables — the storage layer of the position-enabled engine.
+
+A ``ColumnTable`` is the JAX analogue of a PosDB table: a dict of equal-length
+device arrays, one per column.  Positions (row ids) index into every column.
+
+``RowTable`` is the row-store emulation used as the PostgreSQL baseline: all
+columns are interleaved into a single row-major ``(rows, width)`` array so that
+touching *any* attribute of a row drags the full row through the memory
+system — the defining cost asymmetry the paper exploits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ColumnTable", "RowTable", "payload_names"]
+
+
+def payload_names(n: int) -> list[str]:
+    """Column names for the paper's N auxiliary payload columns."""
+    return [f"column{i + 1}" for i in range(n)]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ColumnTable:
+    """A columnar table: name -> (num_rows,) or (num_rows, k) array.
+
+    All columns share the same leading dimension.  Gathers go through
+    :meth:`take` which masks out-of-range positions (the static-shape padding
+    convention used throughout the engine: padded position slots hold
+    ``num_rows`` and gather a zero row).
+    """
+
+    columns: Dict[str, jax.Array]
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(dict(zip(names, children)))
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_numpy(cls, cols: Mapping[str, np.ndarray]) -> "ColumnTable":
+        return cls({k: jnp.asarray(v) for k, v in cols.items()})
+
+    # -- basic properties ------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def column(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def select(self, names: Sequence[str]) -> "ColumnTable":
+        return ColumnTable({n: self.columns[n] for n in names})
+
+    # -- positional access (the late-materialization primitive) -----------
+    def take(self, positions: jax.Array, names: Sequence[str] | None = None
+             ) -> Dict[str, jax.Array]:
+        """Gather ``positions`` from the requested columns.
+
+        Out-of-range positions (the padding sentinel) yield zeros, so callers
+        can carry fixed-capacity position buffers without branching.
+        """
+        names = self.names if names is None else tuple(names)
+        n = self.num_rows
+        safe = jnp.minimum(positions, n - 1)
+        valid = positions < n
+        out = {}
+        for name in names:
+            col = self.columns[name]
+            g = jnp.take(col, safe, axis=0)
+            mask = valid.reshape(valid.shape + (1,) * (g.ndim - valid.ndim))
+            out[name] = jnp.where(mask, g, jnp.zeros((), g.dtype))
+        return out
+
+    def width_bytes(self, names: Sequence[str] | None = None) -> int:
+        names = self.names if names is None else tuple(names)
+        total = 0
+        for name in names:
+            col = self.columns[name]
+            per_row = int(np.prod(col.shape[1:])) if col.ndim > 1 else 1
+            total += per_row * col.dtype.itemsize
+        return total
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RowTable:
+    """Row-store emulation: one interleaved row-major ``(rows, width)`` array.
+
+    Column access slices with stride ``width`` — on real hardware every
+    element read drags its whole row's cache lines along, reproducing the
+    row-store penalty the paper measures against PostgreSQL.  Row gathers
+    read the full width and then project, exactly like a heap-page read.
+    """
+
+    data: jax.Array                      # (rows, width) float32
+    layout: tuple[str, ...]              # column name per slot
+
+    def tree_flatten(self):
+        return (self.data,), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        return cls(children[0], layout)
+
+    @classmethod
+    def from_column_table(cls, table: ColumnTable) -> "RowTable":
+        cols, layout = [], []
+        for name in table.names:
+            col = table.columns[name]
+            if col.ndim == 1:
+                cols.append(col.astype(jnp.float32)[:, None])
+                layout.append(name)
+            else:
+                for j in range(col.shape[1]):
+                    cols.append(col[:, j].astype(jnp.float32)[:, None])
+                    layout.append(f"{name}.{j}")
+        return cls(jnp.concatenate(cols, axis=1), tuple(layout))
+
+    @property
+    def num_rows(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.data.shape[1]
+
+    def slot(self, name: str) -> int:
+        return self.layout.index(name)
+
+    def column(self, name: str) -> jax.Array:
+        """Full-column read.  Strided over rows — the row-store scan cost."""
+        return self.data[:, self.slot(name)]
+
+    def take_rows(self, positions: jax.Array) -> jax.Array:
+        """Gather whole rows (the heap-page read), masking padding slots."""
+        n = self.num_rows
+        safe = jnp.minimum(positions, n - 1)
+        rows = jnp.take(self.data, safe, axis=0)
+        return jnp.where((positions < n)[:, None], rows, 0.0)
+
+    def project(self, rows: jax.Array, names: Sequence[str]) -> Dict[str, jax.Array]:
+        """Project columns back out of gathered full rows; multi-slot
+        (vector) columns are reassembled from their interleaved slots."""
+        out = {}
+        for n in names:
+            if n in self.layout:
+                out[n] = rows[:, self.slot(n)]
+            else:
+                slots = [i for i, nm in enumerate(self.layout)
+                         if nm.startswith(n + ".")]
+                if not slots:
+                    raise KeyError(n)
+                out[n] = rows[:, jnp.asarray(slots)]
+        return out

@@ -1,0 +1,1 @@
+from . import treegen, graphgen, tokens, recsys_stream  # noqa: F401

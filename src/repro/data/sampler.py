@@ -1,0 +1,52 @@
+"""Neighbor sampler — the paper's PRecursive engine applied to GNN training.
+
+The GraphSAGE fan-out sampler is literally a capacity-bounded BFS over
+positions: per hop it expands node *positions* through the CSR index
+(uniformly subsampling each vertex's CSR range to the fan-out) and only at
+the very end materializes features for the sampled nodes — the engine's
+late-materialization discipline verbatim.
+
+Fully jit-compatible (static fan-outs); runs on device so the sampler can be
+fused into the train step for the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSRIndex
+
+
+@functools.partial(jax.jit, static_argnames=("fanouts",))
+def sample_block(key: jax.Array, csr: CSRIndex, dst_of_edge: jax.Array,
+                 seeds: jax.Array, fanouts: tuple[int, ...]):
+    """seeds (B,) -> list of per-hop node-id arrays [seeds, hop1, hop2, ...]
+    (hop l has B * prod(fanouts[:l]) entries; missing neighbors repeat via
+    modular indexing, the standard with-replacement fallback)."""
+    layers = [seeds]
+    cur = seeds
+    for li, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        n = cur.shape[0]
+        v = jnp.clip(cur, 0, csr.num_vertices - 1)
+        start = csr.indptr[v]                        # (n,)
+        deg = csr.indptr[v + 1] - start
+        r = jax.random.randint(sub, (n, f), 0, 1 << 30)
+        off = r % jnp.maximum(deg, 1)[:, None]
+        epos = csr.perm[jnp.minimum(start[:, None] + off,
+                                    csr.num_edges - 1)]
+        nbr = dst_of_edge[epos]                      # (n, f)
+        # isolated vertices sample themselves (self-loop fallback)
+        nbr = jnp.where((deg > 0)[:, None], nbr, cur[:, None])
+        cur = nbr.reshape(-1)
+        layers.append(cur)
+    return layers
+
+
+def gather_block_features(feats: jax.Array, layers: Sequence[jax.Array]):
+    """The ONE late materialization: features for every sampled layer,
+    deepest first (what ``sage_block_forward`` consumes)."""
+    return [jnp.take(feats, l, axis=0) for l in reversed(layers)]

@@ -1,0 +1,26 @@
+"""Synthetic LM token pipeline.
+
+Stateless and seeded: batch ``i`` is a pure function of (seed, step), so a
+restarted/elastically re-sharded job resumes the stream exactly by replaying
+(seed, step) — the fault-tolerance contract used by launch/train.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lm_batch(seed: int, step: int, batch: int, seq_len: int, vocab: int
+             ) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(np.random.PCG64DXSM([seed, step]))
+    # Zipfian-ish token draw (realistic skew, cheap to generate)
+    z = rng.zipf(1.3, size=(batch, seq_len + 1))
+    tok = (z % vocab).astype(np.int32)
+    return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+
+def lm_batch_on_device(key: jax.Array, batch: int, seq_len: int, vocab: int
+                       ) -> dict[str, jax.Array]:
+    tok = jax.random.randint(key, (batch, seq_len + 1), 0, vocab, jnp.int32)
+    return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}

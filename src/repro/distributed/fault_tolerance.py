@@ -1,0 +1,85 @@
+"""Fault-tolerance logic: straggler detection and elastic rescale planning.
+
+Pure, clock-injected logic (unit-testable without hardware):
+
+* ``StragglerMonitor`` — EMA of step wall-times with a deadline multiplier;
+  flags slow steps so the launcher can re-dispatch the microbatch to a hot
+  spare / skip the straggling host's shard for one step (the standard
+  "backup worker" mitigation).
+* ``ElasticPlan`` — given old/new device counts, decides the new mesh shape
+  and the data-parallel rescale factor; together with
+  ``checkpoint.restore_checkpoint(shardings=...)`` this is the restart path
+  when a pod drops out (512 -> 256 chips keeps the model axis, halves DP,
+  doubles grad-accumulation to preserve global batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    ema_decay: float = 0.9
+    deadline_factor: float = 2.5
+    warmup_steps: int = 5
+
+    _ema: float = 0.0
+    _count: int = 0
+    stragglers: int = 0
+
+    def record(self, step_time: float) -> bool:
+        """Record a step time; True -> the step straggled (re-dispatch)."""
+        self._count += 1
+        if self._count <= self.warmup_steps:
+            self._ema = step_time if self._ema == 0.0 else (
+                self.ema_decay * self._ema
+                + (1 - self.ema_decay) * step_time)
+            return False
+        is_straggler = step_time > self.deadline_factor * self._ema
+        if is_straggler:
+            self.stragglers += 1
+        else:                       # stragglers don't poison the EMA
+            self._ema = (self.ema_decay * self._ema
+                         + (1 - self.ema_decay) * step_time)
+        return is_straggler
+
+    @property
+    def deadline(self) -> float:
+        return self.deadline_factor * self._ema if self._count else float(
+            "inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Mesh rescale plan preserving the model axis and the global batch."""
+
+    old_devices: int
+    new_devices: int
+    model_parallel: int
+    old_grad_accum: int = 1
+
+    def __post_init__(self):
+        if self.new_devices % self.model_parallel:
+            raise ValueError(
+                f"cannot keep model axis {self.model_parallel} on "
+                f"{self.new_devices} devices")
+
+    @property
+    def old_dp(self) -> int:
+        return self.old_devices // self.model_parallel
+
+    @property
+    def new_dp(self) -> int:
+        return self.new_devices // self.model_parallel
+
+    @property
+    def new_grad_accum(self) -> int:
+        """Keep global batch: accum scales by the DP shrink factor."""
+        scale = max(1, self.old_dp // max(1, self.new_dp))
+        return self.old_grad_accum * scale
+
+    def new_mesh_shape(self, multi_pod_pods: int | None = None):
+        if multi_pod_pods:
+            return (multi_pod_pods, self.new_dp // multi_pod_pods,
+                    self.model_parallel)
+        return (self.new_dp, self.model_parallel)

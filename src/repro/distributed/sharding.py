@@ -1,0 +1,162 @@
+"""Sharding rules per architecture family.
+
+Mesh axes: ``('pod', 'data', 'model')`` multi-pod or ``('data', 'model')``
+single-pod.  ``pod``+``data`` together form the data-parallel dimension
+(grad all-reduce crosses pods hierarchically — XLA emits ring reductions
+per axis); ``model`` carries tensor/expert/table parallelism.
+
+Rules are *structural*: a spec function inspects a param pytree and returns
+a matching PartitionSpec tree.  ``valid_spec`` drops any axis that does not
+divide the dimension (replicating instead) so imperfect shapes — e.g.
+qwen2's 14 heads on a 16-way model axis — degrade gracefully rather than
+failing to lower; the roofline then shows the cost and the perf loop can
+fix the layout.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+def DP_AXES(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axsize(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def valid_spec(mesh, shape, spec: P) -> P:
+    """Replace non-dividing spec entries with None (replicate)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    fixed = []
+    for dim, ax in zip(shape, entries):
+        fixed.append(ax if ax is not None and dim % _axsize(mesh, ax) == 0
+                     else None)
+    return P(*fixed)
+
+
+def spec_tree_for(mesh, params: Any, rule) -> Any:
+    """Apply ``rule(path, leaf) -> PartitionSpec`` across a pytree, running
+    every result through ``valid_spec``."""
+    def fix(path, leaf):
+        spec = rule(path, leaf)
+        return valid_spec(mesh, leaf.shape, spec)
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+# ---------------------------------------------------------------------------
+# LM rules
+# ---------------------------------------------------------------------------
+
+def _lm_rule(path, leaf):
+    keys = [getattr(p, "key", "") for p in path]
+    name = keys[-1] if keys else ""
+    in_layers = "layers" in keys
+    nd = leaf.ndim
+
+    def L(*spec):                     # layer-stacked params: leading L axis
+        return P(None, *spec) if in_layers else P(*spec)
+
+    if name == "embed":
+        return P(MODEL_AXIS, None)            # vocab-sharded
+    if name == "unembed":
+        return P(None, MODEL_AXIS)
+    if name in ("final_ln",):
+        return P(None)
+    if name in ("ln1", "ln2"):
+        return L(None)
+    # attention
+    if name in ("wq", "wk", "wv", "w_uk", "w_uv"):
+        return L(None, MODEL_AXIS)            # output-feature sharded
+    if name in ("bq", "bk", "bv"):
+        return L(MODEL_AXIS)
+    if name == "wo":
+        return L(MODEL_AXIS, None)
+    if name in ("w_dkv", "w_kr"):
+        return L(None, None)                  # small latent projections
+    # dense FFN (incl. MoE shared expert)
+    if name in ("w1", "w3") and nd == (3 if in_layers else 2):
+        return L(None, MODEL_AXIS)
+    if name == "w2" and nd == (3 if in_layers else 2):
+        return L(MODEL_AXIS, None)
+    # MoE experts: (L, E, d, f) -> expert-sharded on model axis
+    if name in ("w1", "w2", "w3"):
+        return L(MODEL_AXIS, None, None)
+    if name == "router":
+        return L(None, None)
+    return P(*([None] * nd))
+
+
+def lm_param_specs(mesh, params):
+    return spec_tree_for(mesh, params, _lm_rule)
+
+
+def lm_batch_specs(mesh):
+    dp = DP_AXES(mesh)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_specs(mesh, cache):
+    """KVCache(a, b, length): shard batch over DP, head/latent dims over
+    model where divisible."""
+    dp = DP_AXES(mesh)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.ndim == 5:            # (L, B, S, Hkv, hd)
+            return valid_spec(mesh, leaf.shape,
+                              P(None, dp, None, MODEL_AXIS, None))
+        if leaf.ndim == 4:            # (L, B, S, r)
+            return valid_spec(mesh, leaf.shape, P(None, dp, None, None))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# GNN / recsys rules
+# ---------------------------------------------------------------------------
+
+def gnn_batch_specs(mesh, batch):
+    """Edges and node tables row-sharded over the DP axes; small index
+    structures (CSR indptr, seeds) replicated."""
+    dp = DP_AXES(mesh)
+
+    def spec(path, leaf):
+        name = getattr(path[-1], "key", "") if path else ""
+        if leaf.ndim == 0 or name in ("indptr", "offsets"):
+            return P(*([None] * leaf.ndim))
+        return valid_spec(mesh, leaf.shape,
+                          P(dp, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def _recsys_rule(path, leaf):
+    keys = [getattr(p, "key", "") for p in path]
+    name = keys[-1] if keys else ""
+    if name in ("table", "first_order"):
+        return P(MODEL_AXIS, *([None] * (leaf.ndim - 1)))   # row-sharded
+    return P(*([None] * leaf.ndim))
+
+
+def recsys_param_specs(mesh, params):
+    return spec_tree_for(mesh, params, _recsys_rule)
+
+
+def recsys_batch_specs(mesh):
+    dp = DP_AXES(mesh)
+    return {"dense": P(dp, None), "sparse": P(dp, None), "label": P(dp),
+            "offsets": P(None)}

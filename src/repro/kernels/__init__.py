@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships three files per the repo convention:
+``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py`` (jitted wrapper with
+the public contract), ``ref.py`` (pure-jnp oracle).  All kernels validate in
+``interpret=True`` on CPU; BlockSpecs are written for the TPU (8,128)/MXU
+tiling target.
+"""
+from . import late_gather, embedding_bag, spmm_segment, frontier_expand  # noqa: F401

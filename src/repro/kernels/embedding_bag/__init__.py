@@ -1,0 +1,3 @@
+from .ops import embedding_bag, fixed_hot_lookup       # noqa: F401
+from .embedding_bag import embedding_bag_pallas        # noqa: F401
+from .ref import embedding_bag_ref                     # noqa: F401

@@ -1,0 +1,21 @@
+"""Oracle for embedding-bag (ragged gather + segment-sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array,
+                      segment_ids: jax.Array, num_bags: int,
+                      weights: jax.Array | None = None) -> jax.Array:
+    """out[b] = sum_{i: seg[i]=b} w[i] * table[idx[i]].
+
+    table (R, D); indices/segment_ids (I,) int32, seg non-decreasing;
+    indices >= R are treated as padding (contribute zero).
+    """
+    r = table.shape[0]
+    rows = jnp.take(table, jnp.minimum(indices, r - 1), axis=0)
+    rows = jnp.where((indices < r)[:, None], rows, 0.0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernels: CSR frontier expansion (positions -> positions).
+
+One BFS level of the paper's PRecursive operator: every frontier target
+vertex emits the contiguous CSR range of its out-edges.  Two phases, both
+VMEM-tiled:
+
+* **Phase A (`expand_index`)** — rank inversion.  For each output slot ``j``
+  find which frontier slot produced it (``srcslot = #{ends <= j}``) and the
+  edge offset within that vertex's CSR range.  The frontier-sized arrays
+  (cumulative ends, CSR range starts) live wholly in VMEM; the search is a
+  *chunked compare-count* (no dynamic VMEM gather — TPU-safe) followed by a
+  one-hot masked-sum select, which lowers onto the VPU as dense compares.
+* **Phase B** — the positional gather ``perm[gidx]`` reusing the
+  ``late_gather`` machinery (scalar-prefetched indices drive the BlockSpec
+  index_map, so only reached CSR slots are DMA'd).
+
+Output slots beyond the level's total carry the sentinel ``num_edges``
+(gathers mask them to zero downstream, per the engine convention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CHUNK = 512     # frontier chunk per compare-count step
+
+
+def _expand_index_kernel(ends_ref, estart_ref, deg_ref, out_ref,
+                         *, block_c: int, frontier: int, num_edges: int):
+    jb = pl.program_id(0)
+    j = jb * block_c + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
+    ends = ends_ref[...]          # (1, F) cumulative level offsets
+    estart = estart_ref[...]      # (1, F) CSR range starts (indptr[target])
+    deg = deg_ref[...]            # (1, F) per-target degrees
+    total = ends[0, frontier - 1]
+
+    nchunk = (frontier + _CHUNK - 1) // _CHUNK
+
+    # chunked compare-count + one-hot select, fully vectorized:
+    srcslot = jnp.zeros((1, block_c), jnp.int32)
+    start_sel = jnp.zeros((1, block_c), jnp.int32)
+    end_sel = jnp.zeros((1, block_c), jnp.int32)
+    deg_sel = jnp.zeros((1, block_c), jnp.int32)
+
+    def chunk_body(c, srcslot):
+        c0 = c * _CHUNK
+        ends_c = jax.lax.dynamic_slice(ends, (0, c0), (1, _CHUNK))
+        # rank: #{ends <= j} over this chunk  -> (1, block_c)
+        le = (ends_c[0, :][None, :, None] <= j[0, :][None, None, :])
+        cnt = jnp.sum(le.astype(jnp.int32), axis=1)
+        return srcslot + cnt
+
+    srcslot = jax.lax.fori_loop(0, nchunk, chunk_body, srcslot)
+    srcslot = jnp.minimum(srcslot, frontier - 1)
+
+    def sel_body(c, carry):
+        start_sel, end_sel, deg_sel = carry
+        c0 = c * _CHUNK
+        start_c = jax.lax.dynamic_slice(estart, (0, c0), (1, _CHUNK))
+        end_c = jax.lax.dynamic_slice(ends, (0, c0), (1, _CHUNK))
+        deg_c = jax.lax.dynamic_slice(deg, (0, c0), (1, _CHUNK))
+        onehot = (srcslot[0, :][None, :, None] ==
+                  (jax.lax.broadcasted_iota(jnp.int32, (1, 1, _CHUNK), 2) + c0))
+        pick = lambda v: jnp.sum(
+            jnp.where(onehot, v[0, :][None, None, :], 0), axis=2)
+        return (start_sel + pick(start_c), end_sel + pick(end_c),
+                deg_sel + pick(deg_c))
+
+    start_sel, end_sel, deg_sel = jax.lax.fori_loop(
+        0, nchunk, sel_body, (start_sel, end_sel, deg_sel))
+
+    within = j - (end_sel - deg_sel)
+    gidx = start_sel + within
+    live = j < total
+    out_ref[...] = jnp.where(live, gidx, num_edges)
+
+
+@functools.partial(jax.jit, static_argnames=("num_edges", "capacity",
+                                             "block_c", "interpret"))
+def expand_index_pallas(ends: jax.Array, estart: jax.Array, deg: jax.Array,
+                        num_edges: int, *, capacity: int, block_c: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """Phase A: (F,) cumulative ends / CSR starts / degrees -> (capacity,)
+    positions *into perm* (gidx), sentinel-padded."""
+    f = ends.shape[0]
+    pad_f = (-f) % _CHUNK
+    big = jnp.iinfo(jnp.int32).max
+    ends_p = jnp.pad(ends, (0, pad_f), constant_values=big)[None, :]
+    estart_p = jnp.pad(estart, (0, pad_f))[None, :]
+    deg_p = jnp.pad(deg, (0, pad_f))[None, :]
+    fp = f + pad_f
+
+    pad_c = (-capacity) % block_c
+    cp = capacity + pad_c
+
+    out = pl.pallas_call(
+        functools.partial(_expand_index_kernel, block_c=block_c,
+                          frontier=f, num_edges=num_edges),
+        grid=(cp // block_c,),
+        in_specs=[pl.BlockSpec((1, fp), lambda jb: (0, 0)),
+                  pl.BlockSpec((1, fp), lambda jb: (0, 0)),
+                  pl.BlockSpec((1, fp), lambda jb: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_c), lambda jb: (0, jb)),
+        out_shape=jax.ShapeDtypeStruct((1, cp), jnp.int32),
+        interpret=interpret,
+    )(ends_p, estart_p, deg_p)
+    return out[0, :capacity]

@@ -1,0 +1,44 @@
+"""Jitted frontier-expansion wrapper with the engine's contract.
+
+``frontier_expand_fused(csr, targets, valid, capacity)`` is drop-in for
+:func:`repro.core.csr.expand_frontier` (same signature is accepted by
+``precursive_bfs(expand_fn=...)``): phase A (rank inversion) runs as the
+Pallas ``expand_index`` kernel, phase B (the perm gather) reuses the
+``late_gather`` kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSRIndex, csr_degrees
+from repro.kernels.late_gather import late_gather_pallas
+
+from .frontier_expand import expand_index_pallas
+
+
+def frontier_expand_fused(csr: CSRIndex, targets: jax.Array,
+                          valid: jax.Array, capacity: int,
+                          *, interpret: bool = True
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    deg = csr_degrees(csr, targets, valid)
+    ends = jnp.cumsum(deg, dtype=jnp.int32)
+    total = ends[-1]
+    v = jnp.clip(targets, 0, csr.num_vertices - 1)
+    estart = jnp.where(deg > 0, csr.indptr[v], 0)
+
+    gidx = expand_index_pallas(ends, estart, deg, csr.num_edges,
+                               capacity=capacity, interpret=interpret)
+    perm2d = csr.perm[:, None]
+    epos = late_gather_pallas(perm2d, gidx, interpret=interpret)[:, 0]
+    # sentinel rows gather as 0 -> restore the engine's sentinel value
+    epos = jnp.where(gidx >= csr.num_edges, csr.num_edges, epos)
+    return epos.astype(jnp.int32), jnp.minimum(total, capacity), \
+        total > capacity
+
+
+def make_expand_fn(interpret: bool = True):
+    """Engine plug-in: ``precursive_bfs(..., expand_fn=make_expand_fn())``."""
+    return functools.partial(frontier_expand_fused, interpret=interpret)

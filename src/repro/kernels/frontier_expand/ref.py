@@ -1,0 +1,13 @@
+"""Oracle for the BFS frontier expansion — the PRecursive hot loop.
+
+The reference is the engine's own vectorized expansion
+(:func:`repro.core.csr.expand_frontier`), re-exported so the kernel test
+sweeps compare against exactly what the production engine computes.
+"""
+from __future__ import annotations
+
+from repro.core.csr import CSRIndex, expand_frontier
+
+
+def frontier_expand_ref(csr: CSRIndex, targets, valid, capacity: int):
+    return expand_frontier(csr, targets, valid, capacity)

@@ -1,0 +1,3 @@
+from .ops import late_gather, materialize          # noqa: F401
+from .late_gather import late_gather_pallas        # noqa: F401
+from .ref import late_gather_ref                   # noqa: F401

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: positional row gather (the Materialize operator).
+
+The paper's late materialization ends every positional plan with ONE gather
+of the output columns at the surviving positions.  On TPU the gather is
+expressed with a scalar-prefetched position vector driving the input
+BlockSpec ``index_map``: grid step ``i`` DMAs exactly the row
+``positions[i]`` from HBM into VMEM — rows that were never reached are never
+touched, which is the whole point.
+
+Blocking: ``(1, block_w)`` input/output blocks.  A 1-row block underuses the
+(8, 128) sublane tile; the mitigation (documented in EXPERIMENTS.md §Perf)
+is to sort positions so consecutive grid steps hit adjacent HBM pages, and
+to fuse multiple columns into one wide gather (what ``ops.materialize``
+does).  Width is padded to a multiple of 128 lanes by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pos_ref, tab_ref, out_ref, *, num_rows: int):
+    i = pl.program_id(0)
+    valid = pos_ref[i] < num_rows
+    block = tab_ref[...]
+    out_ref[...] = jnp.where(valid, block, jnp.zeros((), block.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def late_gather_pallas(table: jax.Array, positions: jax.Array,
+                       *, block_w: int = 128, interpret: bool = True
+                       ) -> jax.Array:
+    """(R, W) table, (P,) int32 positions -> (P, W) gathered rows."""
+    r, w = table.shape
+    p = positions.shape[0]
+    bw = min(block_w, max(w, 1))
+    pad_w = (-w) % bw
+    if pad_w:
+        table = jnp.pad(table, ((0, 0), (0, pad_w)))
+    wp = w + pad_w
+
+    grid = (p, wp // bw)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec(
+            (1, bw), lambda i, j, pos_ref: (jnp.minimum(pos_ref[i], r - 1), j))],
+        out_specs=pl.BlockSpec((1, bw), lambda i, j, pos_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_rows=r),
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((p, wp), table.dtype),
+        interpret=interpret,
+    )(positions, table)
+    return out[:, :w]

@@ -1,0 +1,15 @@
+"""Oracle for the positional Materialize gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def late_gather_ref(table: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = table[positions[i]]; rows with positions >= num_rows -> 0.
+
+    table: (R, W) any dtype; positions: (P,) int32.  Returns (P, W).
+    """
+    r = table.shape[0]
+    safe = jnp.minimum(positions, r - 1)
+    out = jnp.take(table, safe, axis=0)
+    return jnp.where((positions < r)[:, None], out, jnp.zeros((), table.dtype))

@@ -1,0 +1,3 @@
+from .ops import spmm_segment, gcn_norm_spmm       # noqa: F401
+from .spmm_segment import spmm_segment_pallas      # noqa: F401
+from .ref import spmm_segment_ref                  # noqa: F401

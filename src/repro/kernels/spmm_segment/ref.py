@@ -1,0 +1,19 @@
+"""Oracle for the fused gather-scale-segment-sum (GNN SpMM)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_segment_ref(x: jax.Array, src: jax.Array, seg: jax.Array,
+                     weights: jax.Array, num_out: int) -> jax.Array:
+    """out[v] = sum_{e: seg[e]=v} weights[e] * x[src[e]].
+
+    x (N, D) dense features; src/seg (E,) int32 (seg = destination, assumed
+    sorted by ops.py before the kernel path); weights (E,).
+    src >= N is padding and contributes zero.
+    """
+    n = x.shape[0]
+    rows = jnp.take(x, jnp.minimum(src, n - 1), axis=0)
+    rows = jnp.where((src < n)[:, None], rows, 0.0) * weights[:, None]
+    return jax.ops.segment_sum(rows, seg, num_segments=num_out)

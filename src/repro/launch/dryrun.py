@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices build the production meshes, every
+cell's step function is ``jax.jit(...).lower(*ShapeDtypeStructs).compile()``d
+against them, and the compiled artifact yields the roofline terms
+(launch/roofline.py) recorded in EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results.json
+  python -m repro.launch.dryrun --arch posdb-bfs            # paper's engine
+"""
+import argparse        # noqa: E402
+import json            # noqa: E402
+import sys             # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import numpy as np     # noqa: E402
+
+from repro.configs.registry import ARCHS, cells, get_config, shapes_for  # noqa: E402
+from repro.launch import roofline as rl                                  # noqa: E402
+from repro.launch.mesh import make_production_mesh                       # noqa: E402
+from repro.launch.steps import build_cell                                # noqa: E402
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool,
+             attn_window=None, verbose: bool = True,
+             probe: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    t0 = time.time()
+    if arch == "posdb-bfs":
+        lowered, compiled, extra = _lower_bfs(mesh)
+    else:
+        plan = build_cell(arch, shape_id, mesh, attn_window=attn_window)
+        jf = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                     donate_argnums=plan.donate_argnums)
+        with mesh:
+            lowered = jf.lower(*plan.args)
+            compiled = lowered.compile()
+        extra = {"description": plan.description}
+    t1 = time.time()
+
+    # LM cells contain scans whose bodies HloCostAnalysis counts once;
+    # recover exact per-device costs by affine trip-count probing.
+    exact = None
+    if probe and ARCHS.get(arch, ("", ""))[0] == "lm":
+        from repro.launch.probe import lm_exact_costs
+        exact = lm_exact_costs(arch, shape_id, mesh,
+                               attn_window=attn_window)
+
+    model_flops = None
+    cfg, family = get_config(arch)
+    if family == "lm":
+        dims = shapes_for("lm")[shape_id]
+        if dims["kind"] == "train":
+            model_flops = rl.lm_model_flops(cfg, dims["batch"], dims["seq"],
+                                            train=True)
+        elif dims["kind"] == "decode":
+            model_flops = rl.lm_model_flops(cfg, dims["batch"], 1,
+                                            train=False)
+        else:
+            model_flops = rl.lm_model_flops(cfg, dims["batch"], dims["seq"],
+                                            train=False)
+    result = rl.analyze(lowered, compiled, chips, model_flops=model_flops)
+    if exact is not None:
+        result["rolled_raw"] = {k: result[k] for k in
+                                ("flops", "hbm_bytes", "collective_bytes")}
+        # probe numbers come from cost_analysis -> per-device; globalize
+        gflops = exact["flops"] * chips
+        gbytes = exact["hbm_bytes"] * chips
+        gcoll = exact["collective_bytes"] * chips
+        rf = rl.Roofline(flops=gflops, hbm_bytes=gbytes,
+                         collective_bytes=gcoll, chips=chips)
+        result.update({"flops": gflops, "hbm_bytes": gbytes,
+                       "collective_bytes": gcoll,
+                       "probe": {k: exact[k] for k in exact
+                                 if k.startswith("probe")},
+                       **rf.row()})
+        if model_flops:
+            result["useful_flops_ratio"] = model_flops / max(gflops, 1.0)
+    result.update(extra)
+    result["arch"] = arch
+    result["shape"] = shape_id
+    result["mesh"] = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    result["compile_s"] = round(t1 - t0, 2)
+    if verbose:
+        mem = result.get("memory_analysis")
+        print(f"[{arch} x {shape_id} x {result['mesh']}] "
+              f"compile={result['compile_s']}s "
+              f"flops={result['flops']:.3e} bytes={result['hbm_bytes']:.3e} "
+              f"coll={result['collective_bytes']:.3e} "
+              f"dominant={result['dominant']} "
+              f"frac={result['roofline_frac']:.3f}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  collectives: {result['collectives']}")
+    return result
+
+
+def _lower_bfs(mesh):
+    """Lower the paper's distributed positional BFS on the mesh."""
+    import jax.numpy as jnp
+    from repro.configs.posdb_bfs import CONFIG as bcfg
+    from repro.core.distributed_bfs import make_distributed_pbfs
+    from repro.core.recursive import EngineCaps
+
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    nshards = int(np.prod([mesh.shape[a] for a in axes]))
+    e = bcfg.num_vertices - 1
+    e_pad = -(-e // nshards) * nshards
+    caps = EngineCaps(frontier=bcfg.frontier_cap,
+                      result=bcfg.result_cap // nshards)
+    fn = make_distributed_pbfs(mesh, axes, bcfg.num_vertices, caps=caps,
+                               max_depth=bcfg.max_depth,
+                               num_payload_cols=bcfg.payload_cols)
+    sds = jax.ShapeDtypeStruct
+    args = (sds((e_pad,), jnp.int32), sds((e_pad,), jnp.int32),
+            sds((e_pad, bcfg.payload_cols), jnp.float32),
+            sds((), jnp.int32))
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled, {
+        "description": f"distributed PRecursive BFS V={bcfg.num_vertices} "
+                       f"depth={bcfg.max_depth} shards={nshards}"}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--family", default=None,
+                    help="comma list filter: lm,gnn,recsys,bfs")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the affine trip-count cost probes (LM)")
+    ap.add_argument("--attn-window", type=int, default=None,
+                    help="enable sliding-window attention (long_500k extra)")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    fams = set(args.family.split(",")) if args.family else None
+
+    todo = []
+    if args.all:
+        for c in cells(include_bfs=True):
+            if fams and c.family not in fams:
+                continue
+            todo.append((c.arch, c.shape, c.skip))
+    else:
+        if not args.arch:
+            ap.error("--arch or --all required")
+        fam = ARCHS[args.arch][0]
+        shape_ids = ([args.shape] if args.shape
+                     else list(shapes_for(fam)))
+        for s in shape_ids:
+            skip = None
+            for c in cells(include_bfs=True):
+                if c.arch == args.arch and c.shape == s:
+                    skip = c.skip
+            if args.attn_window is not None:
+                skip = None
+            todo.append((args.arch, s, skip))
+
+    results, failures = [], []
+    for arch, shape_id, skip in todo:
+        if skip:
+            print(f"[{arch} x {shape_id}] SKIP: {skip}")
+            results.append({"arch": arch, "shape": shape_id,
+                            "skipped": skip})
+            continue
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch, shape_id, mp,
+                                        attn_window=args.attn_window,
+                                        probe=not args.no_probe))
+            except Exception:
+                traceback.print_exc()
+                failures.append((arch, shape_id, mp))
+            if args.out:                       # incremental flush
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out} ({len(results)} entries)")
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print(f"dry-run OK: {len(results)} cells")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Measures one cell's exact roofline terms under config overrides, on the
+single-pod production mesh.  LM cells are measured with FULLY UNROLLED
+scans (exact cost_analysis; slower compiles are acceptable for the three
+hillclimbed cells); recsys/GNN cells have no scans so direct measurement is
+already exact.
+
+  python -m repro.launch.hillclimb --cell qwen2-prefill \
+      --set attn_q_block=4096 --set attn_chunk=8192
+  python -m repro.launch.hillclimb --cell deepseek-train --set moe_shard_axis=model
+  python -m repro.launch.hillclimb --cell deepfm-train --lazy-optimizer
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs.registry import get_config, shapes_for            # noqa: E402
+from repro.launch import roofline as rl                              # noqa: E402
+from repro.launch.mesh import make_production_mesh                   # noqa: E402
+from repro.launch.steps import build_lm_cell, build_recsys_cell      # noqa: E402
+
+CELLS = {
+    "qwen2-prefill": ("qwen2-0.5b", "prefill_32k"),
+    "deepseek-train": ("deepseek-v2-lite-16b", "train_4k"),
+    "deepfm-train": ("deepfm", "train_batch"),
+}
+
+
+def _coerce(v: str):
+    if v in ("None", "none"):
+        return None
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def measure(arch, shape, overrides, lazy_optimizer=False, label="variant",
+            use_probe=False):
+    mesh = make_production_mesh(multi_pod=False)
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    cfg, family = get_config(arch)
+    dims = shapes_for(family)[shape]
+
+    if family == "lm" and use_probe:
+        from repro.launch.probe import lm_exact_costs
+        t0 = time.time()
+        exact = lm_exact_costs(arch, shape, mesh, overrides=overrides)
+        rf = rl.Roofline(flops=exact["flops"] * chips,
+                         hbm_bytes=exact["hbm_bytes"] * chips,
+                         collective_bytes=exact["collective_bytes"] * chips,
+                         chips=chips)
+        out = {"flops": rf.flops, "hbm_bytes": rf.hbm_bytes,
+               "collective_bytes": rf.collective_bytes, **rf.row(),
+               "collectives": "(probe)", "label": label,
+               "overrides": {k: str(v) for k, v in overrides.items()},
+               "compile_s": round(time.time() - t0, 1), "method": "probe"}
+        print(f"[{label}] probes={out['compile_s']}s  "
+              f"compute={out['compute_s']:.4g}s "
+              f"memory={out['memory_s']:.4g}s "
+              f"collective={out['collective_s']:.4g}s  "
+              f"dominant={out['dominant']} "
+              f"frac={out['roofline_frac']:.4f}")
+        return out
+
+    if family == "lm":
+        cfg = dataclasses.replace(cfg, unroll=True, **overrides)
+        plan = build_lm_cell(cfg, dims, mesh, concrete=False)
+    elif family == "recsys":
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        plan = build_recsys_cell(cfg, dims, mesh, concrete=False)
+        if lazy_optimizer:
+            from repro.launch.steps import make_optimizer
+            from repro.models.recsys import make_deepfm_train_step_lazy
+            plan.fn = make_deepfm_train_step_lazy(
+                cfg, make_optimizer(),
+                mesh=mesh if lazy_optimizer == "shardmap" else None)
+    else:
+        raise SystemExit(f"hillclimb supports lm/recsys cells, got {family}")
+
+    jf = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                 donate_argnums=plan.donate_argnums)
+    t0 = time.time()
+    with mesh:
+        lowered = jf.lower(*plan.args)
+        compiled = lowered.compile()
+    out = rl.analyze(lowered, compiled, chips)
+    out["label"] = label
+    out["overrides"] = {k: str(v) for k, v in overrides.items()}
+    out["lazy_optimizer"] = lazy_optimizer
+    out["compile_s"] = round(time.time() - t0, 1)
+    print(f"[{label}] compile={out['compile_s']}s  "
+          f"compute={out['compute_s']:.4g}s memory={out['memory_s']:.4g}s "
+          f"collective={out['collective_s']:.4g}s  "
+          f"dominant={out['dominant']} frac={out['roofline_frac']:.4f}")
+    print(f"  flops={out['flops']:.4g} bytes={out['hbm_bytes']:.4g} "
+          f"coll_bytes={out['collective_bytes']:.4g}")
+    print(f"  collectives={out['collectives']}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS), required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE")
+    ap.add_argument("--lazy-optimizer", nargs="?", const="plain",
+                    default=False, choices=["plain", "shardmap"])
+    ap.add_argument("--probe", action="store_true",
+                    help="affine-probe measurement (valid when the scan "
+                         "structure is unchanged by the overrides)")
+    ap.add_argument("--label", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _coerce(v)
+    arch, shape = CELLS[args.cell]
+    label = args.label or (",".join(args.set) or
+                           ("lazy-opt" if args.lazy_optimizer else
+                            "baseline"))
+    res = measure(arch, shape, overrides, args.lazy_optimizer, label,
+                  use_probe=args.probe)
+    res.update({"arch": arch, "shape": shape})
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        existing.append(res)
+        with open(args.out, "w") as f:
+            json.dump(existing, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

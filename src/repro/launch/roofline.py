@@ -1,0 +1,179 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Terms per (arch x shape x mesh), TPU v5e constants:
+
+    compute    = HLO_FLOPs  / (chips * 197e12 FLOP/s bf16)
+    memory     = HLO_bytes  / (chips * 819e9  B/s HBM)
+    collective = coll_bytes / (chips * 50e9   B/s per ICI link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+there, so ``as_text()`` is parsed: sum of operand sizes of every all-gather
+/ all-reduce / reduce-scatter / all-to-all / collective-permute (async
+``-start`` forms counted once, ``-done`` skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|ragged-all-to-all)(-start)?\s*\(([^)]*)\)")
+_DONE_RE = re.compile(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)-done\b")
+
+
+def _bytes_of_type(text: str) -> int:
+    """Sum byte sizes of every shape literal in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of collective ops from (stable)HLO text."""
+    defs: Dict[str, int] = {}
+    by_kind: Dict[str, int] = {}
+    cnt: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, rhs = m.groups()
+            # record result size (type text precedes the op name)
+            defs[name] = _bytes_of_type(rhs.split("(")[0])
+        if _DONE_RE.search(line):
+            continue
+        cm = _COLL_RE.search(line)
+        if not cm:
+            continue
+        kind, _start, operands = cm.groups()
+        total = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            # operands may carry inline types: "bf16[8,128] %x.1"
+            inline = _bytes_of_type(op)
+            if inline:
+                total += inline
+                continue
+            total += defs.get(op, 0)
+        by_kind[kind] = by_kind.get(kind, 0) + total
+        cnt[kind] = cnt.get(kind, 0) + 1
+    return CollectiveStats(by_kind, cnt)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self) -> float:
+        """Useful-compute fraction if perfectly overlapped: compute term
+        over the max term (1.0 = compute-bound at peak)."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "roofline_frac": self.fraction_of_roofline(),
+        }
+
+
+def analyze(lowered, compiled, chips: int, *, model_flops: float | None = None
+            ) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):               # older API returns [dict]
+        cost = cost[0]
+    # cost_analysis of an SPMD-partitioned module is PER-DEVICE (verified in
+    # tests/test_roofline.py); the roofline terms want global HLO totals.
+    flops = float(cost.get("flops", 0.0)) * chips
+    hbm = float(cost.get("bytes accessed", 0.0)) * chips
+    try:
+        text = compiled.as_text()            # post-SPMD partitioning
+    except Exception:
+        text = lowered.as_text()
+    coll = parse_collectives(text)
+    rf = Roofline(flops=flops, hbm_bytes=hbm,
+                  collective_bytes=float(coll.total_bytes) * chips,
+                  chips=chips)
+    out = {"flops": flops, "hbm_bytes": hbm,
+           "collective_bytes": float(coll.total_bytes) * chips,
+           "collectives": dict(coll.count_by_kind),
+           "collective_bytes_by_kind": {k: v * chips for k, v in
+                                        coll.bytes_by_kind.items()},
+           **rf.row()}
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flops_ratio"] = model_flops / max(flops, 1.0)
+    try:
+        mem = compiled.memory_analysis()
+        out["memory_analysis"] = {
+            k: getattr(mem, k) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:                   # CPU backend may not support
+        out["memory_analysis"] = f"unavailable: {e}"
+    return out
+
+
+def lm_model_flops(cfg, batch: int, seq: int, *, train: bool) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)."""
+    n = cfg.active_param_count()
+    mult = 6.0 if train else 2.0
+    return mult * n * batch * seq

@@ -1,0 +1,482 @@
+"""Cell builder: (arch x shape x mesh) -> (step_fn, inputs, shardings).
+
+``build_cell(..., concrete=False)`` produces ShapeDtypeStruct stand-ins for
+every input (weak-type-correct, shardable, no device allocation) — what the
+multi-pod dry-run lowers.  ``concrete=True`` instantiates real (smoke-sized)
+tensors for the per-arch CPU smoke tests, running the *same* code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import BFSConfig, GNNConfig, LMConfig, RecsysConfig
+from repro.configs.registry import get_config, shapes_for
+from repro.distributed.sharding import (DP_AXES, gnn_batch_specs,
+                                        lm_batch_specs, lm_cache_specs,
+                                        lm_param_specs, recsys_batch_specs,
+                                        recsys_param_specs, valid_spec)
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tfm
+from repro.optim import AdamW, linear_warmup_cosine
+
+F32, I32, U32 = jnp.float32, jnp.int32, jnp.uint32
+
+
+@dataclasses.dataclass
+class CellPlan:
+    fn: Callable                 # jittable step
+    args: tuple                  # pytrees of SDS (dry-run) or arrays (smoke)
+    in_shardings: Any            # matching pytree of NamedSharding (or None)
+    donate_argnums: tuple[int, ...] = ()
+    static_argnums: tuple[int, ...] = ()
+    description: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _concretize(tree, seed=0):
+    """Turn a ShapeDtypeStruct pytree into deterministic real arrays."""
+    rng = np.random.default_rng(seed)
+
+    def one(x):
+        if not isinstance(x, jax.ShapeDtypeStruct):
+            return x
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return jnp.asarray(
+                rng.integers(0, 2, x.shape).astype(np.int32), dtype=x.dtype)
+        if x.dtype == jnp.bool_:
+            return jnp.ones(x.shape, jnp.bool_)
+        return jnp.asarray(
+            (rng.standard_normal(x.shape) * 0.05).astype(np.float32),
+            dtype=x.dtype)
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def _shard_tree(mesh, spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _shard_valid(mesh, spec_tree, sds_tree):
+    """NamedShardings with non-dividing axes dropped per actual shapes
+    (lets the same cells lower on tiny test meshes)."""
+    if mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda s, x: NamedSharding(mesh, valid_spec(mesh, x.shape, s)),
+        spec_tree, sds_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def _opt_specs(param_specs):
+    return {"mu": param_specs, "nu": param_specs, "step": P()}
+
+
+def make_optimizer():
+    return AdamW(lr=linear_warmup_cosine(3e-4, 200, 10_000))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_param_sds(cfg: LMConfig):
+    return jax.eval_shape(lambda k: tfm.init_lm(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def build_lm_cell(cfg: LMConfig, dims: dict, mesh, *, concrete: bool
+                  ) -> CellPlan:
+    kind, seq, batch = dims["kind"], dims["seq"], dims["batch"]
+    opt = make_optimizer()
+    params = _lm_param_sds(cfg)
+    pspecs = lm_param_specs(mesh, params) if mesh else None
+
+    if concrete:
+        params_v = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    else:
+        params_v = params
+
+    if kind == "train":
+        step = tfm.make_train_step(cfg, opt)
+        opt_state = jax.eval_shape(opt.init, params)
+        batch_sds = {"tokens": _sds((batch, seq), I32),
+                     "labels": _sds((batch, seq), I32)}
+        in_sh = None
+        if mesh:
+            in_sh = (_shard_tree(mesh, pspecs),
+                     _shard_tree(mesh, _opt_specs(pspecs)),
+                     _shard_valid(mesh, lm_batch_specs(mesh), batch_sds))
+        args = (params_v,
+                opt.init(params_v) if concrete else opt_state,
+                _concretize(batch_sds) if concrete else batch_sds)
+        return CellPlan(step, args, in_sh, donate_argnums=(0, 1),
+                        description=f"train_step {batch}x{seq}")
+
+    if kind == "prefill":
+        def step(params, tokens):
+            return tfm.prefill(params, tokens, cfg)
+
+        batch_sds = _sds((batch, seq), I32)
+        in_sh = None
+        if mesh:
+            cache_sds = jax.eval_shape(
+                lambda: tfm.init_cache(cfg, batch, seq))
+            in_sh = (_shard_tree(mesh, pspecs),
+                     NamedSharding(mesh, valid_spec(
+                         mesh, batch_sds.shape, P(DP_AXES(mesh), None))))
+        args = (params_v,
+                _concretize(batch_sds) if concrete else batch_sds)
+        return CellPlan(step, args, in_sh,
+                        description=f"prefill {batch}x{seq}")
+
+    if kind == "decode":
+        def step(params, tokens, cache):
+            return tfm.decode_step(params, tokens, cache, cfg)
+
+        cache_sds = jax.eval_shape(lambda: tfm.init_cache(cfg, batch, seq))
+        # cache arrives filled to seq-1; one new token is decoded
+        cache_sds = tfm.KVCache(cache_sds.a, cache_sds.b, _sds((), I32))
+        tok_sds = _sds((batch,), I32)
+        in_sh = None
+        if mesh:
+            cspec = lm_cache_specs(mesh, cache_sds)
+            in_sh = (_shard_tree(mesh, pspecs),
+                     NamedSharding(mesh, valid_spec(
+                         mesh, tok_sds.shape, P(DP_AXES(mesh)))),
+                     _shard_valid(mesh, cspec, cache_sds))
+        if concrete:
+            cache_v = tfm.init_cache(cfg, batch, seq)
+            cache_v = tfm.KVCache(cache_v.a, cache_v.b,
+                                  jnp.asarray(seq - 1, I32))
+            args = (params_v, _concretize(tok_sds), cache_v)
+        else:
+            args = (params_v, tok_sds, cache_sds)
+        return CellPlan(step, args, in_sh, donate_argnums=(2,),
+                        description=f"serve_step(decode) {batch}xKV{seq}")
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_loss_graph(cfg: GNNConfig, n_classes: int, pooled: bool):
+    def loss_fn(params, batch):
+        logits = gnn_mod.gnn_forward(params, cfg, batch)
+        if pooled:                       # molecule: graph-level head
+            seg = batch["graph_of_node"]
+            ngraph = batch["labels"].shape[0]
+            pool = jax.ops.segment_sum(logits, seg, num_segments=ngraph)
+            cnt = jax.ops.segment_sum(jnp.ones((logits.shape[0],), F32),
+                                      seg, num_segments=ngraph)
+            pooled_logits = pool / jnp.maximum(cnt, 1.0)[:, None]
+            return gnn_mod.node_xent(pooled_logits, batch["labels"])
+        return gnn_mod.node_xent(logits, batch["labels"],
+                                 batch.get("mask"))
+    return loss_fn
+
+
+def _pad32(n: int) -> int:
+    """Round graph dims up to a multiple of 32 so the (pod,data) axes divide
+    (dry-run SDS only; concrete smoke graphs keep exact published sizes)."""
+    return -(-n // 32) * 32
+
+
+def build_gnn_cell(arch: str, cfg: GNNConfig, dims: dict, mesh,
+                   *, concrete: bool) -> CellPlan:
+    kind = dims["kind"]
+    if mesh is not None and not concrete:
+        dims = dict(dims)
+        for k in ("n_nodes", "n_edges"):
+            if k in dims:
+                dims[k] = _pad32(dims[k])
+    opt = make_optimizer()
+    d_feat, n_classes = dims["d_feat"], dims["n_classes"]
+    init = lambda k: gnn_mod.init_gnn(k, cfg, d_feat, n_classes)
+    params = jax.eval_shape(init, jax.random.PRNGKey(0))
+    params_v = init(jax.random.PRNGKey(0)) if concrete else params
+    # GNN params are small -> replicated; graph data is what shards
+    pspecs = jax.tree_util.tree_map(lambda l: P(*([None] * l.ndim)), params)
+
+    if kind in ("full_graph", "molecule"):
+        if kind == "molecule":
+            v = dims["batch"] * dims["n_nodes"]
+            e = dims["batch"] * dims["n_edges"]
+            nlab = dims["batch"]
+        else:
+            v, e, nlab = dims["n_nodes"], dims["n_edges"], dims["n_nodes"]
+        batch_sds = {"src": _sds((e,), I32), "dst": _sds((e,), I32),
+                     "feats": _sds((v, d_feat), F32),
+                     "labels": _sds((nlab,), I32)}
+        if kind == "full_graph":
+            batch_sds["mask"] = _sds((v,), F32)
+        else:
+            batch_sds["graph_of_node"] = _sds((v,), I32)
+        if cfg.kind == "egnn":
+            batch_sds["coords"] = _sds((v, 3), F32)
+
+        loss_fn = _gnn_loss_graph(cfg, n_classes, pooled=kind == "molecule")
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state, gnorm = opt.update(params, grads, opt_state)
+            return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+        opt_state = jax.eval_shape(opt.init, params)
+        in_sh = None
+        if mesh:
+            in_sh = (_shard_tree(mesh, pspecs),
+                     _shard_tree(mesh, _opt_specs(pspecs)),
+                     _shard_valid(mesh, gnn_batch_specs(mesh, batch_sds),
+                                  batch_sds))
+        if concrete:
+            gb = _concrete_graph(dims, cfg, kind, d_feat, n_classes)
+            args = (params_v, opt.init(params_v), gb)
+        else:
+            args = (params_v, opt_state, batch_sds)
+        return CellPlan(step, args, in_sh, donate_argnums=(0, 1),
+                        description=f"{kind} train_step V={v} E={e}")
+
+    if kind == "minibatch":
+        return _build_minibatch_cell(arch, cfg, dims, mesh, opt, params,
+                                     params_v, pspecs, d_feat, n_classes,
+                                     concrete)
+    raise ValueError(kind)
+
+
+def _concrete_graph(dims, cfg, kind, d_feat, n_classes):
+    from repro.data.graphgen import make_graph, make_molecule_batch
+    if kind == "molecule":
+        g = make_molecule_batch(dims["batch"], dims["n_nodes"],
+                                dims["n_edges"], d_feat, seed=3)
+        rng = np.random.default_rng(5)
+        b = {"src": jnp.asarray(g.src), "dst": jnp.asarray(g.dst),
+             "feats": jnp.asarray(g.feats),
+             "labels": jnp.asarray(g.labels),
+             "graph_of_node": jnp.repeat(
+                 jnp.arange(dims["batch"], dtype=I32), dims["n_nodes"])}
+    else:
+        g = make_graph(dims["n_nodes"], dims["n_edges"], d_feat,
+                       num_classes=n_classes, seed=3)
+        b = {"src": jnp.asarray(g.src), "dst": jnp.asarray(g.dst),
+             "feats": jnp.asarray(g.feats), "labels": jnp.asarray(g.labels),
+             "mask": jnp.ones((g.num_vertices,), F32)}
+    if cfg.kind == "egnn":
+        rng = np.random.default_rng(7)
+        b["coords"] = jnp.asarray(
+            rng.standard_normal((b["feats"].shape[0], 3)).astype(np.float32))
+    return b
+
+
+def _build_minibatch_cell(arch, cfg, dims, mesh, opt, params, params_v,
+                          pspecs, d_feat, n_classes, concrete):
+    """Fused sampler + train step over the full Reddit-scale graph:
+    the sampler is the paper's positional BFS (see data/sampler.py)."""
+    from repro.core.csr import CSRIndex
+    from repro.data.sampler import gather_block_features, sample_block
+
+    v, e = dims["n_nodes"], dims["n_edges"]
+    bsz, fanout = dims["batch_nodes"], tuple(dims["fanout"])
+
+    graph_sds = {"indptr": _sds((v + 1,), I32), "perm": _sds((e,), I32),
+                 "dst": _sds((e,), I32), "feats": _sds((v, d_feat), F32),
+                 "labels": _sds((v,), I32)}
+    if cfg.kind == "egnn":
+        graph_sds["coords"] = _sds((v, 3), F32)
+    seeds_sds = _sds((bsz,), I32)
+
+    is_sage = cfg.kind == "graphsage"
+    sage_cfg = dataclasses.replace(cfg, sample_sizes=fanout) if is_sage \
+        else cfg
+
+    def loss_fn(params, graph, seeds, seed_scalar):
+        csr = CSRIndex(graph["indptr"], graph["perm"])
+        key = jax.random.PRNGKey(seed_scalar)
+        layers = sample_block(key, csr, graph["dst"], seeds, fanout)
+        labels = jnp.take(graph["labels"], seeds, axis=0)
+        if is_sage:
+            block = {"layer_feats": gather_block_features(graph["feats"],
+                                                          layers),
+                     "labels": labels}
+            logits = gnn_mod.sage_block_forward(params, sage_cfg, block)
+            return gnn_mod.node_xent(logits, labels)
+        # generic arch: run on the sampled subgraph (positions -> one gather)
+        nodes = jnp.concatenate(layers)
+        offs = np.cumsum([0] + [int(l.shape[0])
+                                for l in layers]).tolist()
+        srcs, dsts = [], []
+        for li, f in enumerate(fanout):
+            n_par = offs[li + 1] - offs[li]
+            srcs.append(offs[li + 1]
+                        + jnp.arange(n_par * f, dtype=I32))
+            dsts.append(offs[li] + jnp.repeat(
+                jnp.arange(n_par, dtype=I32), f))
+        sub = {"src": jnp.concatenate(srcs), "dst": jnp.concatenate(dsts),
+               "feats": jnp.take(graph["feats"], nodes, axis=0),
+               "labels": labels}
+        if cfg.kind == "egnn":
+            sub["coords"] = jnp.take(graph["coords"], nodes, axis=0)
+        logits = gnn_mod.gnn_forward(params, cfg, sub)
+        return gnn_mod.node_xent(logits[:bsz], labels)
+
+    def step(params, opt_state, graph, seeds, seed_scalar):
+        loss, grads = jax.value_and_grad(loss_fn)(params, graph, seeds,
+                                                  seed_scalar)
+        params, opt_state, gnorm = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    opt_state = jax.eval_shape(opt.init, params)
+    in_sh = None
+    if mesh:
+        in_sh = (_shard_tree(mesh, pspecs),
+                 _shard_tree(mesh, _opt_specs(pspecs)),
+                 _shard_valid(mesh, gnn_batch_specs(mesh, graph_sds),
+                              graph_sds),
+                 NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P()))
+    if concrete:
+        from repro.core.csr import build_csr
+        from repro.data.graphgen import make_graph
+        g = make_graph(v, e, d_feat, num_classes=n_classes, seed=4)
+        csr = build_csr(jnp.asarray(g.src), v)
+        graph_v = {"indptr": csr.indptr, "perm": csr.perm,
+                   "dst": jnp.asarray(g.dst),
+                   "feats": jnp.asarray(g.feats),
+                   "labels": jnp.asarray(g.labels)}
+        if cfg.kind == "egnn":
+            rng = np.random.default_rng(9)
+            graph_v["coords"] = jnp.asarray(
+                rng.standard_normal((v, 3)).astype(np.float32))
+        args = (params_v, opt.init(params_v), graph_v,
+                jnp.arange(bsz, dtype=I32), jnp.asarray(0, I32))
+    else:
+        args = (params_v, opt_state, graph_sds, seeds_sds, _sds((), I32))
+    return CellPlan(step, args, in_sh, donate_argnums=(0, 1),
+                    description=f"sampled train_step B={bsz} "
+                                f"fanout={fanout} over V={v} E={e}")
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def build_recsys_cell(cfg: RecsysConfig, dims: dict, mesh,
+                      *, concrete: bool) -> CellPlan:
+    kind = dims["kind"]
+    opt = make_optimizer()
+    init = lambda k: recsys_mod.init_deepfm(k, cfg)
+    params = jax.eval_shape(init, jax.random.PRNGKey(0))
+    params_v = init(jax.random.PRNGKey(0)) if concrete else params
+    pspecs = recsys_param_specs(mesh, params) if mesh else None
+    nf = cfg.n_dense + cfg.n_sparse
+    offsets = jnp.asarray(recsys_mod.field_offsets(cfg))
+
+    def batch_sds(b):
+        return {"dense": _sds((b, cfg.n_dense), F32),
+                "sparse": _sds((b, cfg.n_sparse), I32),
+                "label": _sds((b,), F32),
+                "offsets": _sds((nf,), I32)}
+
+    def concrete_batch(b):
+        from repro.data.recsys_stream import recsys_batch, vocab_sizes
+        d = recsys_batch(0, 0, b, vocabs=vocab_sizes(cfg.vocab_scale))
+        out = {k: jnp.asarray(v) for k, v in d.items()}
+        out["offsets"] = offsets
+        return out
+
+    if kind == "train":
+        b = dims["batch"]
+        step = recsys_mod.make_deepfm_train_step(cfg, opt)
+        opt_state = jax.eval_shape(opt.init, params)
+        in_sh = None
+        if mesh:
+            in_sh = (_shard_tree(mesh, pspecs),
+                     _shard_tree(mesh, _opt_specs(pspecs)),
+                     _shard_valid(mesh, recsys_batch_specs(mesh),
+                                  batch_sds(b)))
+        args = (params_v,
+                opt.init(params_v) if concrete else opt_state,
+                concrete_batch(b) if concrete else batch_sds(b))
+        return CellPlan(step, args, in_sh, donate_argnums=(0, 1),
+                        description=f"train_step B={b}")
+
+    if kind == "serve":
+        b = dims["batch"]
+
+        def step(params, batch):
+            return recsys_mod.serve_scores(params, cfg, batch["dense"],
+                                           batch["sparse"],
+                                           batch["offsets"])
+
+        in_sh = None
+        if mesh:
+            in_sh = (_shard_tree(mesh, pspecs),
+                     _shard_valid(mesh, recsys_batch_specs(mesh),
+                                  batch_sds(b)))
+        bd = concrete_batch(b) if concrete else batch_sds(b)
+        return CellPlan(step, (params_v, bd), in_sh,
+                        description=f"serve_scores B={b}")
+
+    if kind == "retrieval":
+        nc = dims["n_candidates"]
+
+        def step(params, batch, cand_ids):
+            return recsys_mod.retrieval_scores(
+                params, cfg, batch["dense"], batch["sparse"],
+                batch["offsets"], cand_ids)
+
+        cand_sds = _sds((nc,), I32)
+        in_sh = None
+        if mesh:
+            # single-query context: replicate the (1, ...) batch, shard the
+            # 1M candidate ids over DP
+            rep = {k: P(*([None] * len(v.shape)))
+                   for k, v in batch_sds(1).items()}
+            in_sh = (_shard_tree(mesh, pspecs),
+                     _shard_tree(mesh, rep),
+                     NamedSharding(mesh, valid_spec(
+                         mesh, (nc,), P(DP_AXES(mesh)))))
+        bd = concrete_batch(1) if concrete else batch_sds(1)
+        cand = jnp.arange(nc, dtype=I32) % 1000 if concrete else cand_sds
+        return CellPlan(step, (params_v, bd, cand), in_sh,
+                        description=f"retrieval_scores C={nc}")
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_id: str, mesh=None, *, smoke: bool = False,
+               concrete: bool = False, attn_window: int | None = None
+               ) -> CellPlan:
+    cfg, family = get_config(arch, smoke=smoke)
+    dims = shapes_for(family, smoke=smoke)[shape_id]
+    if family == "lm":
+        if attn_window is not None:
+            cfg = dataclasses.replace(cfg, attn_window=attn_window)
+        if not concrete:
+            # dry-run: unroll scans so cost_analysis counts every layer /
+            # KV chunk (XLA tallies while bodies exactly once otherwise)
+            cfg = dataclasses.replace(cfg, unroll=True)
+        return build_lm_cell(cfg, dims, mesh, concrete=concrete)
+    if family == "gnn":
+        return build_gnn_cell(arch, cfg, dims, mesh, concrete=concrete)
+    if family == "recsys":
+        return build_recsys_cell(cfg, dims, mesh, concrete=concrete)
+    raise ValueError(family)

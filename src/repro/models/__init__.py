@@ -1,0 +1,1 @@
+"""Model zoo: LM transformer (dense/MoE/MLA), GNNs, DeepFM."""

@@ -1,0 +1,273 @@
+"""GNN zoo: GatedGCN, GraphSAGE, EGNN, GAT — on positional message passing.
+
+Message passing here IS the paper's positional discipline: an edge list is a
+join index (positions into the node table), aggregation is a positional join
+(``spmm_segment`` / ``segment_sum``), and node features are materialized by
+gathers only where touched.  JAX has no sparse message-passing primitive —
+this module (plus the ``spmm_segment``/``embedding_bag`` kernels) is the
+framework's own, per the assignment.
+
+All four architectures share one interface:
+  ``init_gnn(key, cfg, d_feat, num_classes)`` / ``gnn_forward(params, cfg,
+  graph)`` where ``graph`` = dict(src, dst, feats[, coords, efeat, mask]).
+Sampled minibatches (GraphSAGE fan-out blocks) use ``sage_block_forward``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.kernels.spmm_segment import spmm_segment
+
+Params = Dict[str, Any]
+
+
+def _dense(key, din, dout):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (din, dout), jnp.float32)
+            * (2.0 / din) ** 0.5,
+            "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def _apply_dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _mlp(key, dims):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [_dense(k, a, b) for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def _apply_mlp(ps, x, act=jax.nn.silu, final_act=False):
+    for i, p in enumerate(ps):
+        x = _apply_dense(p, x)
+        if i < len(ps) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def segment_softmax(scores: jax.Array, seg: jax.Array, num: int) -> jax.Array:
+    smax = jax.ops.segment_max(scores, seg, num_segments=num)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    e = jnp.exp(scores - smax[seg])
+    den = jax.ops.segment_sum(e, seg, num_segments=num)
+    return e / jnp.maximum(den[seg], 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def init_gatedgcn_layer(key, d):
+    ks = jax.random.split(key, 5)
+    return {"A": _dense(ks[0], d, d), "B": _dense(ks[1], d, d),
+            "C": _dense(ks[2], d, d), "U": _dense(ks[3], d, d),
+            "V": _dense(ks[4], d, d),
+            "ln_h": jnp.ones((d,)), "ln_e": jnp.ones((d,))}
+
+
+def gatedgcn_layer(p, h, e, src, dst, n, *, use_pallas=False):
+    """Bresson & Laurent gated graph conv with edge features + residuals."""
+    eh = _apply_dense(p["A"], h)[src] + _apply_dense(p["B"], h)[dst] \
+        + _apply_dense(p["C"], e)
+    eta = jax.nn.sigmoid(eh)                                  # (E, d)
+    vh = _apply_dense(p["V"], h)
+    num = jax.ops.segment_sum(eta * vh[src], dst, num_segments=n)
+    den = jax.ops.segment_sum(eta, dst, num_segments=n)
+    agg = num / (den + 1e-6)
+    h2 = _apply_dense(p["U"], h) + agg
+    h2 = h + jax.nn.relu(h2 * p["ln_h"] /
+                         (jnp.linalg.norm(h2, axis=-1, keepdims=True) /
+                          jnp.sqrt(h2.shape[-1]) + 1e-6))
+    e2 = e + jax.nn.relu(eh * p["ln_e"] /
+                         (jnp.linalg.norm(eh, axis=-1, keepdims=True) /
+                          jnp.sqrt(eh.shape[-1]) + 1e-6))
+    return h2, e2
+
+
+def init_sage_layer(key, din, dout):
+    k1, k2 = jax.random.split(key)
+    return {"self": _dense(k1, din, dout), "nbr": _dense(k2, din, dout)}
+
+
+def sage_layer(p, h, src, dst, n, *, use_pallas=False):
+    deg = jax.ops.segment_sum(jnp.ones_like(src, dtype=h.dtype), dst,
+                              num_segments=n)
+    mean = spmm_segment(h, src, dst, None, n, use_pallas=use_pallas) / \
+        jnp.maximum(deg, 1.0)[:, None]
+    return jax.nn.relu(_apply_dense(p["self"], h) + _apply_dense(p["nbr"],
+                                                                 mean))
+
+
+def init_egnn_layer(key, d):
+    ks = jax.random.split(key, 3)
+    return {"phi_e": _mlp(ks[0], (2 * d + 1, d, d)),
+            "phi_x": _mlp(ks[1], (d, d, 1)),
+            "phi_h": _mlp(ks[2], (2 * d, d, d))}
+
+
+def egnn_layer(p, h, x, src, dst, n):
+    """E(n)-equivariant layer (Satorras et al.): scalar messages from
+    invariant distances; coordinate updates along edge vectors."""
+    dx = x[src] - x[dst]
+    d2 = jnp.sum(dx * dx, axis=-1, keepdims=True)
+    m = _apply_mlp(p["phi_e"], jnp.concatenate([h[src], h[dst], d2], -1),
+                   final_act=True)
+    coef = jnp.tanh(_apply_mlp(p["phi_x"], m))               # bounded update
+    deg = jax.ops.segment_sum(jnp.ones((src.shape[0],), x.dtype), dst,
+                              num_segments=n)
+    xup = jax.ops.segment_sum(dx * coef, dst, num_segments=n) / \
+        jnp.maximum(deg, 1.0)[:, None]
+    magg = jax.ops.segment_sum(m, dst, num_segments=n)
+    h2 = h + _apply_mlp(p["phi_h"], jnp.concatenate([h, magg], -1))
+    return h2, x + xup
+
+
+def init_gat_layer(key, din, dout, heads):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w": jax.random.normal(k1, (din, heads, dout), jnp.float32)
+            * (2.0 / din) ** 0.5,
+            "a_src": jax.random.normal(k2, (heads, dout), jnp.float32) * 0.1,
+            "a_dst": jax.random.normal(k3, (heads, dout), jnp.float32) * 0.1}
+
+
+def gat_layer(p, h, src, dst, n, *, concat=True):
+    """SDDMM edge scores -> segment softmax -> weighted aggregation."""
+    z = jnp.einsum("nd,dhk->nhk", h, p["w"])                  # (N, H, K)
+    s_src = jnp.einsum("nhk,hk->nh", z, p["a_src"])
+    s_dst = jnp.einsum("nhk,hk->nh", z, p["a_dst"])
+    scores = jax.nn.leaky_relu(s_src[src] + s_dst[dst], 0.2)  # (E, H)
+    heads = scores.shape[1]
+    alphas = []
+    for hh in range(heads):                                   # static unroll
+        alphas.append(segment_softmax(scores[:, hh], dst, n))
+    alpha = jnp.stack(alphas, axis=1)                          # (E, H)
+    msg = z[src] * alpha[..., None]
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n)        # (N, H, K)
+    if concat:
+        return jax.nn.elu(agg.reshape(n, -1))
+    return agg.mean(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# full models
+# ---------------------------------------------------------------------------
+
+def init_gnn(key, cfg: GNNConfig, d_feat: int, num_classes: int) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    d = cfg.d_hidden
+    p: Params = {"embed_in": _dense(ks[-1], d_feat, d),
+                 "head": _dense(ks[-2], d, num_classes)}
+    if cfg.kind == "gatedgcn":
+        p["edge_in"] = _dense(ks[-3], 1, d)
+        p["layers"] = [init_gatedgcn_layer(ks[i], d)
+                       for i in range(cfg.n_layers)]
+    elif cfg.kind == "graphsage":
+        p["layers"] = [init_sage_layer(ks[i], d, d)
+                       for i in range(cfg.n_layers)]
+    elif cfg.kind == "egnn":
+        p["layers"] = [init_egnn_layer(ks[i], d)
+                       for i in range(cfg.n_layers)]
+    elif cfg.kind == "gat":
+        heads = cfg.n_heads
+        p["layers"] = [init_gat_layer(ks[i], d if i == 0 else d * heads,
+                                      d, heads)
+                       for i in range(cfg.n_layers - 1)]
+        p["layers"].append(init_gat_layer(ks[cfg.n_layers - 1],
+                                          d * heads if cfg.n_layers > 1
+                                          else d, d, heads))
+        p["head"] = _dense(ks[-2], d * heads, num_classes)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def gnn_forward(params: Params, cfg: GNNConfig, graph: Dict[str, jax.Array],
+                *, use_pallas: bool = False) -> jax.Array:
+    """graph: src, dst (E,) int32; feats (N, F); [coords (N, 3)].
+    Returns per-node logits (N, num_classes)."""
+    src, dst = graph["src"], graph["dst"]
+    n = graph["feats"].shape[0]
+    h = _apply_dense(params["embed_in"], graph["feats"])
+    if cfg.kind == "gatedgcn":
+        e = _apply_dense(params["edge_in"],
+                         jnp.ones((src.shape[0], 1), h.dtype))
+        for lp in params["layers"]:
+            h, e = gatedgcn_layer(lp, h, e, src, dst, n,
+                                  use_pallas=use_pallas)
+    elif cfg.kind == "graphsage":
+        for lp in params["layers"]:
+            h = sage_layer(lp, h, src, dst, n, use_pallas=use_pallas)
+    elif cfg.kind == "egnn":
+        x = graph["coords"]
+        for lp in params["layers"]:
+            h, x = egnn_layer(lp, h, x, src, dst, n)
+    elif cfg.kind == "gat":
+        for i, lp in enumerate(params["layers"]):
+            h = gat_layer(lp, h, src, dst, n,
+                          concat=True)
+    return _apply_dense(params["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# sampled-block forward (GraphSAGE minibatch; the paper's PRecursive applied
+# to neighbor sampling)
+# ---------------------------------------------------------------------------
+
+def sage_block_forward(params: Params, cfg: GNNConfig,
+                       block: Dict[str, jax.Array]) -> jax.Array:
+    """block: layer_feats = [h_L ... h_0] outermost-first node features
+    (gathered late by the sampler), fanouts static.  Layer l aggregates the
+    fan-out children of each layer-(l-1) node by mean."""
+    feats = block["layer_feats"]          # list; feats[i]: (N_i, F)
+    fanouts = cfg.sample_sizes
+    hs = [_apply_dense(params["embed_in"], f) for f in feats]
+    # hs[0] = deepest (largest) layer ... hs[-1] = seeds
+    for li, lp in enumerate(params["layers"]):
+        nxt = []
+        for depth in range(len(hs) - 1):
+            child = hs[depth]             # (N * f, d)
+            parent = hs[depth + 1]        # (N, d)
+            n_par = parent.shape[0]
+            f = child.shape[0] // n_par
+            seg = jnp.repeat(jnp.arange(n_par, dtype=jnp.int32), f)
+            mean = jax.ops.segment_sum(child, seg, num_segments=n_par) / f
+            nxt.append(jax.nn.relu(_apply_dense(lp["self"], parent)
+                                   + _apply_dense(lp["nbr"], mean)))
+        hs = nxt
+    return _apply_dense(params["head"], hs[-1])
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def node_xent(logits: jax.Array, labels: jax.Array,
+              mask: jax.Array | None = None) -> jax.Array:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    per = lse - gold
+    if mask is not None:
+        return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return per.mean()
+
+
+def make_gnn_train_step(cfg: GNNConfig, optimizer, *, block: bool = False):
+    def loss_fn(params, batch):
+        if block:
+            logits = sage_block_forward(params, cfg, batch)
+            return node_xent(logits, batch["labels"]), logits
+        logits = gnn_forward(params, cfg, batch)
+        return node_xent(logits, batch["labels"],
+                         batch.get("mask")), logits
+
+    def step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, gnorm = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step

@@ -1,0 +1,467 @@
+"""Transformer building blocks: RMSNorm, RoPE, chunked (online-softmax)
+attention for GQA and MLA, SwiGLU, and the positional MoE dispatch.
+
+Everything is a pure function over a param pytree; layer stacks are scanned
+(params carry a leading layer axis) so the HLO stays compact at 27-40
+layers and 512 devices.
+
+The MoE dispatch is deliberately built on the paper's positional discipline
+(:func:`repro.core.positions.sort_positions_by_key`): token *positions* are
+sorted by expert id, activations are gathered once into per-expert
+contiguous blocks, and scattered back once — values move exactly twice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, MLAConfig, MoEConfig
+from repro.core.positions import sort_positions_by_key
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / basic ops
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """(..., ) int positions -> (..., dim//2) angles."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, d) with d even; positions: (..., S)."""
+    d = x.shape[-1]
+    ang = rope_angles(positions, d, theta)                 # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array
+           ) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int, q_start, kv_len,
+                      window: int | None = None,
+                      unroll: bool = False) -> jax.Array:
+    """Online-softmax attention scanned over KV chunks.
+
+    q: (B, Hkv, G, Sq, dk) — query heads grouped over their KV head
+    k: (B, Hkv, Skv, dk);  v: (B, Hkv, Skv, dv)
+    q_start: scalar — absolute position of q[...,0,:] (decode offset)
+    kv_len: scalar — number of valid KV positions (cache may be padded)
+
+    Peak memory is O(Sq * chunk) per head instead of O(Sq * Skv); the TPU
+    production path would swap in a fused flash kernel, but the roofline
+    terms (FLOPs/bytes) of this formulation already match it.
+    """
+    b, hkv, g, sq, dk = q.shape
+    skv = k.shape[2]
+    dv = v.shape[-1]
+    scale = dk ** -0.5
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (skv + pad) // chunk
+    kc = k.reshape(b, hkv, n_chunks, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_start + jnp.arange(sq)                       # (Sq,)
+    neg = jnp.float32(-1e30)
+
+    def step(carry, xs):
+        m, l, acc, c0 = carry
+        k_i, v_i = xs
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", q.astype(jnp.float32),
+                       k_i.astype(jnp.float32)) * scale
+        k_pos = c0 + jnp.arange(chunk)                     # (C,)
+        valid = (k_pos < kv_len)[None, :]
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            valid = valid & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(valid[None, None, None], s, neg)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p, v_i.astype(jnp.float32))
+        l = l * corr + p.sum(axis=-1)
+        return (m_new, l, acc, c0 + chunk), None
+
+    m0 = jnp.full((b, hkv, g, sq), neg, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)),
+                                     (kc, vc), unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def blocked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             q_block: int, chunk: int,
+                             window: int | None = None,
+                             unroll: bool = False) -> jax.Array:
+    """Flash-structured self-attention: queries processed in blocks, each
+    scanning only its causal KV *prefix* (triangular skip).
+
+    vs. plain ``chunked_attention`` over the full sequence this (a) halves
+    score FLOPs/bytes (no fully-masked chunks), and (b) shrinks the
+    online-softmax carry from (Sq, dv) to (q_block, dv) per inner step —
+    the carry round-trips were the dominant HBM term of the 32k prefill
+    (EXPERIMENTS.md §Perf).  The terminal version of this structure is the
+    fused Pallas flash kernel where the carry never leaves VMEM.
+    """
+    b, hkv, g, sq, dk = q.shape
+    nqb = -(-sq // q_block)
+    outs = []
+    for i in range(nqb):
+        q0, q1 = i * q_block, min((i + 1) * q_block, sq)
+        kv_end = q1                                # causal prefix only
+        qi = q[:, :, :, q0:q1]
+        ki = k[:, :, :kv_end]
+        vi = v[:, :, :kv_end]
+        outs.append(chunked_attention(
+            qi, ki, vi, causal=True, chunk=min(chunk, kv_end),
+            q_start=q0, kv_len=kv_end, window=window, unroll=unroll))
+    return jnp.concatenate(outs, axis=3)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: LMConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, h * hd), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, hkv * hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, hkv * hd), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (h * hd, d), jnp.float32) * s,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    return p
+
+
+def gqa_project_qkv(p: Params, x: jax.Array, cfg: LMConfig, positions):
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(p: Params, x: jax.Array, cfg: LMConfig, *, positions,
+                  cache=None):
+    """Self-attention.  ``cache=None`` -> train/prefill over x itself;
+    ``cache=(k_cache, v_cache, cur_len)`` -> decode: the new block's K/V are
+    inserted at ``cur_len`` and attention runs over the whole cache."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    if cache is not None:
+        kc, vc, cur = cache                          # (B, Smax, Hkv, hd)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cur, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cur, 0, 0))
+        k_full, v_full, kv_n, q_start = kc, vc, cur + s, cur
+        new_cache = (kc, vc)
+    else:
+        k_full, v_full, kv_n, q_start = k, v, s, 0
+        new_cache = (k, v)
+    qg = q.reshape(b, s, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+    kt = k_full.transpose(0, 2, 1, 3)
+    vt = v_full.transpose(0, 2, 1, 3)
+    if cache is None and cfg.attn_q_block is not None:
+        out = blocked_causal_attention(qg, kt, vt,
+                                       q_block=cfg.attn_q_block,
+                                       chunk=cfg.attn_chunk,
+                                       window=cfg.attn_window,
+                                       unroll=cfg.unroll)
+    else:
+        out = chunked_attention(qg, kt, vt, causal=True,
+                                chunk=cfg.attn_chunk, q_start=q_start,
+                                kv_len=kv_n, window=cfg.attn_window,
+                                unroll=cfg.unroll)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h * hd)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2 family)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: LMConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * (m.nope_head_dim +
+                                                m.rope_head_dim)),
+                                jnp.float32) * s,
+        "w_dkv": jax.random.normal(ks[1], (d, m.kv_lora_rank),
+                                   jnp.float32) * s,
+        "w_kr": jax.random.normal(ks[2], (d, m.rope_head_dim),
+                                  jnp.float32) * s,
+        "w_uk": jax.random.normal(ks[3], (m.kv_lora_rank,
+                                          h * m.nope_head_dim),
+                                  jnp.float32) * (m.kv_lora_rank ** -0.5),
+        "w_uv": jax.random.normal(ks[4], (m.kv_lora_rank, h * m.v_head_dim),
+                                  jnp.float32) * (m.kv_lora_rank ** -0.5),
+        "wo": jax.random.normal(ks[5], (h * m.v_head_dim, d),
+                                jnp.float32) * s,
+    }
+
+
+def mla_compress(p: Params, x: jax.Array, cfg: LMConfig, positions):
+    """x -> (c_kv, k_rope): the ONLY tensors the MLA decode cache stores."""
+    dt = x.dtype
+    m = cfg.mla
+    c = x @ p["w_dkv"].astype(dt)                        # (B,S,kvr)
+    kr = (x @ p["w_kr"].astype(dt))[:, :, None, :]       # (B,S,1,dr)
+    kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0]
+    return c, kr
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: LMConfig, *, positions,
+                  cache=None):
+    """MLA with the *absorbed* decode path: when ``cache=(c_cache, kr_cache,
+    cur_len)`` is present the new block's latents are inserted at
+    ``cur_len`` and scores/values are computed directly in the latent
+    (kv_lora) space — q is folded through W_uk and the attention output
+    through W_uv, so the cache stays (kv_lora + rope_dim) per position (the
+    paper-faithful MLA memory saving) and no per-step decompression of the
+    history happens."""
+    b, s, d = x.shape
+    m: MLAConfig = cfg.mla
+    h = cfg.n_heads
+    dn, dr, dv, r = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, \
+        m.kv_lora_rank
+    dt = x.dtype
+
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+
+    c_new, kr_new = mla_compress(p, x, cfg, positions)
+
+    if cache is None:
+        # prefill/train: decompress and run standard MHA
+        c, kr = c_new, kr_new
+        kn = (c @ p["w_uk"].astype(dt)).reshape(b, s, h, dn)
+        v = (c @ p["w_uv"].astype(dt)).reshape(b, s, h, dv)
+        kfull = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :],
+                                                      (b, s, h, dr))], -1)
+        qfull = jnp.concatenate([qn, qr], -1)
+        qg = qfull.reshape(b, s, h, 1, dn + dr).transpose(0, 2, 3, 1, 4)
+        if cfg.attn_q_block is not None:
+            out = blocked_causal_attention(
+                qg, kfull.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                q_block=cfg.attn_q_block, chunk=cfg.attn_chunk,
+                window=cfg.attn_window, unroll=cfg.unroll)
+        else:
+            out = chunked_attention(qg, kfull.transpose(0, 2, 1, 3),
+                                    v.transpose(0, 2, 1, 3), causal=True,
+                                    chunk=cfg.attn_chunk, q_start=0,
+                                    kv_len=s, window=cfg.attn_window,
+                                    unroll=cfg.unroll)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h * dv)
+        new_cache = (c_new, kr_new)
+    else:
+        # absorbed decode: scores in latent space against the c/kr cache
+        cc, krc, cur = cache
+        cc = jax.lax.dynamic_update_slice(cc, c_new.astype(cc.dtype),
+                                          (0, cur, 0))
+        krc = jax.lax.dynamic_update_slice(krc, kr_new.astype(krc.dtype),
+                                           (0, cur, 0))
+        kv_len = cur + s
+        smax = cc.shape[1]
+        w_uk = p["w_uk"].astype(dt).reshape(r, h, dn)
+        q_lat = jnp.einsum("bshn,rhn->bshr", qn, w_uk)    # fold W_uk into q
+        scale = (dn + dr) ** -0.5
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat, cc)
+        s_rot = jnp.einsum("bshd,btd->bhst", qr, krc)
+        scores = (s_lat + s_rot).astype(jnp.float32) * scale
+        t_pos = jnp.arange(smax)
+        q_pos = cur + jnp.arange(s)
+        mask = (t_pos[None, :] < kv_len) & \
+            (q_pos[:, None] >= t_pos[None, :])
+        if cfg.attn_window is not None:
+            mask = mask & (q_pos[:, None] - t_pos[None, :] < cfg.attn_window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        pattn = jax.nn.softmax(scores, axis=-1).astype(dt)
+        o_lat = jnp.einsum("bhst,btr->bshr", pattn, cc)     # latent output
+        w_uv = p["w_uv"].astype(dt).reshape(r, h, dv)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv).reshape(b, s, h * dv)
+        new_cache = (cc, krc)
+
+    return out @ p["wo"].astype(dt), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense + MoE FFN
+# ---------------------------------------------------------------------------
+
+def init_dense_ffn(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": jax.random.normal(k1, (d, f), jnp.float32) * d ** -0.5,
+            "w3": jax.random.normal(k2, (d, f), jnp.float32) * d ** -0.5,
+            "w2": jax.random.normal(k3, (f, d), jnp.float32) * f ** -0.5}
+
+
+def dense_ffn(p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    return swiglu(x, p["w1"].astype(dt), p["w3"].astype(dt),
+                  p["w2"].astype(dt))
+
+
+def init_moe(key, cfg: LMConfig):
+    e: MoEConfig = cfg.moe
+    d, f = cfg.d_model, e.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e.num_experts),
+                                    jnp.float32) * d ** -0.5,
+        "w1": jax.random.normal(ks[1], (e.num_experts, d, f),
+                                jnp.float32) * d ** -0.5,
+        "w3": jax.random.normal(ks[2], (e.num_experts, d, f),
+                                jnp.float32) * d ** -0.5,
+        "w2": jax.random.normal(ks[3], (e.num_experts, f, d),
+                                jnp.float32) * f ** -0.5,
+    }
+    if e.num_shared:
+        p["shared"] = init_dense_ffn(ks[4], d, e.num_shared * f)
+    return p
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: LMConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    """Positional top-k MoE.  Returns (output, aux_loss).
+
+    Dispatch = the paper's positional discipline: positions sorted by expert
+    (``sort_positions_by_key``), ONE gather into (E, C, d) contiguous expert
+    blocks, batched expert GEMMs, ONE weighted scatter back.
+    """
+    e: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = e.top_k
+    n_e = e.num_experts
+    cap = int(e.capacity_factor * t * k / n_e + 1)
+    cap = max(8, -(-cap // 8) * 8)                   # round up, MXU-friendly
+    dt = x.dtype
+
+    xt = x.reshape(t, d)
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)             # (T, k)
+    gates = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(t * k)
+    order, counts = sort_positions_by_key(flat_e, n_e)     # paper primitive
+    starts = jnp.cumsum(counts) - counts
+    sorted_e = flat_e[order]
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, n_e * cap)
+    token_of = (order // k).astype(jnp.int32)
+
+    dispatch = jnp.full((n_e * cap,), t, jnp.int32).at[slot].set(
+        jnp.where(keep, token_of, t), mode="drop")
+    gate_sorted = gates.reshape(t * k)[order].astype(dt)
+
+    if cfg.moe_shard_axis is None:
+        # paper-faithful baseline path (EXPERIMENTS.md §Perf HC2 baseline):
+        # slot-gather combine; GSPMD resolves the cross-shard gathers with
+        # zero-fill + all-reduce of (T*k, d) f32 partials.
+        xg = jnp.take(xt, jnp.minimum(dispatch, t - 1), axis=0)
+        xg = jnp.where((dispatch < t)[:, None], xg, 0).reshape(n_e, cap, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg,
+                                   p["w1"].astype(dt))) * \
+            jnp.einsum("ecd,edf->ecf", xg, p["w3"].astype(dt))
+        y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt)).reshape(
+            n_e * cap, d)
+        y_rows = jnp.take(y, jnp.minimum(slot, n_e * cap - 1), axis=0)
+        out = jnp.zeros((t, d), dt).at[jnp.where(keep, token_of, t)].add(
+            y_rows * jnp.where(keep, gate_sorted, 0)[:, None], mode="drop")
+    else:
+        # staged expert-parallel dispatch (beyond-paper §Perf HC2):
+        #  1. gather stays in token-row sharding (all-gather of bf16
+        #     activations, not f32 zero-fill all-reduce);
+        #  2. one explicit reshard token-rows -> expert-major (all-to-all);
+        #  3. combine scatters expert outputs DIRECTLY to tokens (no
+        #     (T*k, d) slot-gather intermediate at all).
+        from jax.sharding import PartitionSpec as _P
+        ax = cfg.moe_shard_axis
+        dpx = tuple(cfg.moe_data_axes.split(",")) if cfg.moe_data_axes \
+            else None
+        p_rows = _P(dpx, None) if dpx else _P(None, None)
+        wsc = jax.lax.with_sharding_constraint
+
+        xg_flat = jnp.take(xt, jnp.minimum(dispatch, t - 1), axis=0)
+        xg_flat = jnp.where((dispatch < t)[:, None], xg_flat, 0)
+        xg_flat = wsc(xg_flat, p_rows)                  # token-row sharded
+        xg = wsc(xg_flat.reshape(n_e, cap, d), _P(ax, None, None))
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg,
+                                   p["w1"].astype(dt))) * \
+            jnp.einsum("ecd,edf->ecf", xg, p["w3"].astype(dt))
+        y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt))
+        y = wsc(y, _P(ax, None, None))                  # expert-major
+        yflat = wsc(y.reshape(n_e * cap, d), p_rows)    # all-to-all back
+        gate_by_slot = jnp.zeros((n_e * cap,), dt).at[slot].set(
+            jnp.where(keep, gate_sorted, 0), mode="drop")
+        out = jnp.zeros((t, d), dt).at[dispatch].add(
+            yflat * gate_by_slot[:, None], mode="drop")
+        out = wsc(out, p_rows)
+
+    if e.num_shared:
+        out = out + dense_ffn(p["shared"], xt)
+
+    # GShard/Switch load-balance auxiliary
+    frac = counts.astype(jnp.float32) / jnp.maximum(t * k, 1)
+    pmean = probs.mean(axis=0)
+    aux = n_e * jnp.sum(frac * pmean) * e.router_aux_weight
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,301 @@
+"""DeepFM over one huge row-sharded embedding table.
+
+All 39 fields (13 bucketized numeric + 26 categorical) share a single
+concatenated table with static per-field offsets: ids+offsets are positions
+into that table — the framework's purest instance of the paper's positional
+late-materialization (rows are gathered only where hit; under a sharded
+mesh only positions cross the network).  The lookup runs through the
+``embedding_bag``/``late_gather`` kernels.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.data.recsys_stream import vocab_sizes
+
+Params = Dict[str, Any]
+
+N_BUCKETS_DENSE = 1000
+
+
+def field_vocabs(cfg: RecsysConfig) -> list[int]:
+    return [N_BUCKETS_DENSE] * cfg.n_dense + vocab_sizes(cfg.vocab_scale)
+
+
+def field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    v = field_vocabs(cfg)
+    return np.concatenate([[0], np.cumsum(v)[:-1]]).astype(np.int32)
+
+
+def total_rows(cfg: RecsysConfig) -> int:
+    """Table rows padded to a mesh-friendly multiple (512 covers every axis
+    size we deploy) so row-wise model-parallel sharding always divides."""
+    raw = int(sum(field_vocabs(cfg)))
+    return -(-raw // 512) * 512
+
+
+def init_deepfm(key, cfg: RecsysConfig) -> Params:
+    rows = total_rows(cfg)
+    nf = cfg.n_dense + cfg.n_sparse
+    ks = jax.random.split(key, 3 + len(cfg.mlp_dims) + 1)
+    mlp_dims = (nf * cfg.embed_dim, *cfg.mlp_dims, 1)
+    mlp = []
+    for i, (a, b) in enumerate(zip(mlp_dims[:-1], mlp_dims[1:])):
+        k1, k2 = jax.random.split(ks[3 + i])
+        mlp.append({"w": jax.random.normal(k1, (a, b), jnp.float32)
+                    * (2.0 / a) ** 0.5,
+                    "b": jnp.zeros((b,), jnp.float32)})
+    tdt = jnp.dtype(cfg.table_dtype)
+    return {
+        "table": (jax.random.normal(ks[0], (rows, cfg.embed_dim),
+                                    jnp.float32) * 0.01).astype(tdt),
+        "first_order": (jax.random.normal(ks[1], (rows,), jnp.float32)
+                        * 0.01).astype(tdt),
+        "bias": jnp.zeros((), jnp.float32),
+        "mlp": mlp,
+    }
+
+
+def featurize(cfg: RecsysConfig, dense: jax.Array, sparse: jax.Array,
+              offsets: jax.Array) -> jax.Array:
+    """-> (B, 39) positions into the shared table (the positional step)."""
+    buckets = jnp.clip(((jax.nn.sigmoid(dense) * N_BUCKETS_DENSE)
+                        .astype(jnp.int32)), 0, N_BUCKETS_DENSE - 1)
+    ids = jnp.concatenate([buckets, sparse], axis=1)
+    return ids + offsets[None, :]
+
+
+def deepfm_forward(params: Params, cfg: RecsysConfig, dense: jax.Array,
+                   sparse: jax.Array, offsets: jax.Array,
+                   *, use_pallas: bool = False) -> jax.Array:
+    """-> (B,) logits."""
+    b = dense.shape[0]
+    pos = featurize(cfg, dense, sparse, offsets)              # (B, 39)
+    if use_pallas:
+        from repro.kernels.embedding_bag import fixed_hot_lookup
+        emb = fixed_hot_lookup(params["table"], pos, use_pallas=True)
+    else:
+        emb = jnp.take(params["table"], pos, axis=0)          # (B, 39, D)
+    emb = emb.astype(jnp.float32)
+    fo = jnp.take(params["first_order"], pos, axis=0).astype(
+        jnp.float32).sum(axis=1)                                    # (B,)
+    # FM second order: ½[(Σv)² − Σv²] summed over embed dim
+    s = emb.sum(axis=1)
+    fm2 = 0.5 * (jnp.sum(s * s, -1) - jnp.sum(emb * emb, (-1, -2)))
+    h = emb.reshape(b, -1)
+    for i, lp in enumerate(params["mlp"]):
+        h = h @ lp["w"] + lp["b"]
+        if i < len(params["mlp"]) - 1:
+            h = jax.nn.relu(h)
+    return params["bias"] + fo + fm2 + h[:, 0]
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def make_deepfm_train_step(cfg: RecsysConfig, optimizer,
+                           *, use_pallas: bool = False):
+    def loss_fn(params, batch):
+        logits = deepfm_forward(params, cfg, batch["dense"], batch["sparse"],
+                                batch["offsets"], use_pallas=use_pallas)
+        return bce_loss(logits, batch["label"])
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, gnorm = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def _dedup_positions(pos_flat: jax.Array, grads_flat: jax.Array,
+                     num_rows: int):
+    """Aggregate duplicate row positions (paper discipline: sort positions,
+    segment-sum values).  Returns (unique_pos (N,), agg_grads (N, ...)) with
+    sentinel ``num_rows`` padding past the unique count."""
+    n = pos_flat.shape[0]
+    order = jnp.argsort(pos_flat, stable=True)
+    ps = pos_flat[order]
+    gs = grads_flat[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), ps[1:] != ps[:-1]])
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1           # (n,)
+    agg = jax.ops.segment_sum(gs, seg, num_segments=n)
+    upos = jnp.full((n,), num_rows, jnp.int32).at[seg].set(ps, mode="drop")
+    return upos, agg
+
+
+def make_deepfm_train_step_lazy(cfg: RecsysConfig, opt, mesh=None,
+                                model_axis: str = "model"):
+    """Beyond-paper §Perf optimization: POSITIONAL optimizer updates.
+
+    The dense AdamW step streams the full 33.8M-row table + both moments
+    every step even though a 65k batch touches <0.7% of rows.  Here the
+    table and first_order params (and their moments) receive row-sparse
+    updates at exactly the touched positions — the paper's
+    late-materialization discipline applied to the optimizer.  Weight decay
+    is lazy (applied only to touched rows), the standard trade-off of
+    sparse optimizers.  ``opt`` supplies the AdamW hyperparameters; dense
+    (small) params still take the ordinary dense update.
+
+    With ``mesh`` given (iteration 3 of §Perf HC3), the row update runs
+    inside ``shard_map`` over the table's row-sharding axis: the small
+    (position, aggregated-grad) lists are replicated once and every shard
+    updates ONLY its own row range locally — positions cross the mesh,
+    table/moment values never do (the paper's distributed discipline,
+    applied to the optimizer), and GSPMD's zero-fill all-reduce fallback
+    for cross-shard scatters disappears.
+    """
+
+    def loss_from_rows(small, emb_rows, fo_rows, batch):
+        b = batch["dense"].shape[0]
+        fo = fo_rows.sum(axis=1)
+        s = emb_rows.sum(axis=1)
+        fm2 = 0.5 * (jnp.sum(s * s, -1) - jnp.sum(emb_rows * emb_rows,
+                                                  (-1, -2)))
+        h = emb_rows.reshape(b, -1)
+        for i, lp in enumerate(small["mlp"]):
+            h = h @ lp["w"] + lp["b"]
+            if i < len(small["mlp"]) - 1:
+                h = jax.nn.relu(h)
+        logits = small["bias"] + fo + fm2 + h[:, 0]
+        return bce_loss(logits, batch["label"])
+
+    def step(params, opt_state, batch):
+        rows_n = params["table"].shape[0]
+        pos = featurize(cfg, batch["dense"], batch["sparse"],
+                        batch["offsets"])                    # (B, F)
+        emb_rows = jnp.take(params["table"], pos, axis=0).astype(
+            jnp.float32)                                     # ONE gather
+        fo_rows = jnp.take(params["first_order"], pos, axis=0).astype(
+            jnp.float32)
+        small = {"mlp": params["mlp"], "bias": params["bias"]}
+
+        loss, (g_small, g_emb, g_fo) = jax.value_and_grad(
+            loss_from_rows, argnums=(0, 1, 2))(small, emb_rows, fo_rows,
+                                               batch)
+
+        stp = opt_state["step"] + 1
+        lr = opt.lr(stp)
+        c1 = 1 - opt.b1 ** stp.astype(jnp.float32)
+        c2 = 1 - opt.b2 ** stp.astype(jnp.float32)
+
+        def adam_slice(p_rows, g_rows, mu_rows, nu_rows):
+            pdt = p_rows.dtype
+            p32 = p_rows.astype(jnp.float32)
+            g32 = g_rows.astype(jnp.float32)
+            mu2 = opt.b1 * mu_rows + (1 - opt.b1) * g32
+            nu2 = opt.b2 * nu_rows + (1 - opt.b2) * g32 * g32
+            upd = (mu2 / c1) / (jnp.sqrt(nu2 / c2) + opt.eps) \
+                + opt.weight_decay * p32
+            return (p32 - lr * upd).astype(pdt), mu2, nu2
+
+        def lazy_update(name, grads_flat, width):
+            pf = pos.reshape(-1)
+            gf = grads_flat.reshape((-1,) + ((width,) if width else ()))
+            upos, agg = _dedup_positions(pf, gf, rows_n)
+            if mesh is None:
+                safe = jnp.minimum(upos, rows_n - 1)
+                p_rows = jnp.take(params[name], safe, axis=0)
+                mu_rows = jnp.take(opt_state["mu"][name], safe, axis=0)
+                nu_rows = jnp.take(opt_state["nu"][name], safe, axis=0)
+                p2, mu2, nu2 = adam_slice(p_rows, agg, mu_rows, nu_rows)
+                new_p = params[name].at[upos].set(p2, mode="drop")
+                new_mu = opt_state["mu"][name].at[upos].set(mu2,
+                                                            mode="drop")
+                new_nu = opt_state["nu"][name].at[upos].set(nu2,
+                                                            mode="drop")
+                return new_p, new_mu, new_nu
+            # owner-local shard_map update: values never cross shards
+            from jax.sharding import PartitionSpec as _P
+            nsh = mesh.shape[model_axis]
+            rows_loc = rows_n // nsh
+            upos_r = jax.lax.with_sharding_constraint(upos, _P(None))
+            agg_r = jax.lax.with_sharding_constraint(
+                agg, _P(*([None] * agg.ndim)))
+
+            def upd_shard(p_loc, mu_loc, nu_loc, up, ag):
+                base = jax.lax.axis_index(model_axis) * rows_loc
+                lpos = jnp.where((up >= base) & (up < base + rows_loc),
+                                 up - base, rows_loc)       # drop-sentinel
+                safe = jnp.minimum(lpos, rows_loc - 1)
+                pr = jnp.take(p_loc, safe, axis=0)
+                mr = jnp.take(mu_loc, safe, axis=0)
+                nr = jnp.take(nu_loc, safe, axis=0)
+                p2, mu2, nu2 = adam_slice(pr, ag, mr, nr)
+                return (p_loc.at[lpos].set(p2, mode="drop"),
+                        mu_loc.at[lpos].set(mu2, mode="drop"),
+                        nu_loc.at[lpos].set(nu2, mode="drop"))
+
+            row_sp = _P(model_axis, *([None] * (params[name].ndim - 1)))
+            rep_i = _P(None)
+            rep_g = _P(*([None] * agg.ndim))
+            fn = jax.shard_map(
+                upd_shard, mesh=mesh,
+                in_specs=(row_sp, row_sp, row_sp, rep_i, rep_g),
+                out_specs=(row_sp, row_sp, row_sp), check_vma=False)
+            return fn(params[name], opt_state["mu"][name],
+                      opt_state["nu"][name], upos_r, agg_r)
+
+        new_table, mu_t, nu_t = lazy_update("table", g_emb, cfg.embed_dim)
+        new_fo, mu_f, nu_f = lazy_update("first_order", g_fo, 0)
+
+        # dense update for the small params
+        def dense_upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu2 = opt.b1 * mu + (1 - opt.b1) * g32
+            nu2 = opt.b2 * nu + (1 - opt.b2) * g32 * g32
+            upd = (mu2 / c1) / (jnp.sqrt(nu2 / c2) + opt.eps) \
+                + opt.weight_decay * p
+            return p - lr * upd, mu2, nu2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(small)
+        outs = [dense_upd(p, g, mu, nu) for p, g, mu, nu in zip(
+            flat_p, jax.tree_util.tree_leaves(g_small),
+            jax.tree_util.tree_leaves({"mlp": opt_state["mu"]["mlp"],
+                                       "bias": opt_state["mu"]["bias"]}),
+            jax.tree_util.tree_leaves({"mlp": opt_state["nu"]["mlp"],
+                                       "bias": opt_state["nu"]["bias"]}))]
+        new_small = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        mu_small = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        nu_small = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+
+        new_params = {"table": new_table, "first_order": new_fo,
+                      "mlp": new_small["mlp"], "bias": new_small["bias"]}
+        new_state = {
+            "mu": {"table": mu_t, "first_order": mu_f,
+                   "mlp": mu_small["mlp"], "bias": mu_small["bias"]},
+            "nu": {"table": nu_t, "first_order": nu_f,
+                   "mlp": nu_small["mlp"], "bias": nu_small["bias"]},
+            "step": stp,
+        }
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in
+                             jax.tree_util.tree_leaves((g_small, g_emb,
+                                                        g_fo))))
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def serve_scores(params: Params, cfg: RecsysConfig, dense, sparse, offsets,
+                 *, use_pallas: bool = False) -> jax.Array:
+    return jax.nn.sigmoid(deepfm_forward(params, cfg, dense, sparse, offsets,
+                                         use_pallas=use_pallas))
+
+
+def retrieval_scores(params: Params, cfg: RecsysConfig, dense, sparse,
+                     offsets, cand_ids: jax.Array) -> jax.Array:
+    """Score ONE query context against ``n_candidates`` items: the user
+    context folds to a single FM vector, candidates are scored with one
+    batched dot against their (late-materialized) embedding rows."""
+    pos = featurize(cfg, dense, sparse, offsets)              # (1, 39)
+    u = jnp.take(params["table"], pos[0], axis=0).sum(axis=0)   # (D,)
+    cand = jnp.take(params["table"], cand_ids, axis=0)        # (C, D)
+    cand_fo = jnp.take(params["first_order"], cand_ids, axis=0)
+    return cand @ u + cand_fo                                  # (C,)

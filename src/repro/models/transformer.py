@@ -1,0 +1,213 @@
+"""Decoder-only LM: init / train / prefill / decode, scanned over layers.
+
+All five assigned LM architectures (dense GQA: qwen2-0.5b, stablelm-1.6b/12b;
+MoE: phi3.5-moe; MLA+MoE: deepseek-v2-lite) instantiate this one module with
+different ``LMConfig``s.  Layer params carry a leading ``n_layers`` axis and
+the stack is a ``jax.lax.scan`` (with rematerialization for training), so the
+lowered HLO stays compact for the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+
+from .layers import (dense_ffn, gqa_attention, init_dense_ffn, init_gqa,
+                     init_mla, init_moe, mla_attention, moe_ffn, rmsnorm)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: LMConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    attn = init_mla(k1, cfg) if cfg.mla is not None else init_gqa(k1, cfg)
+    ffn = init_moe(k2, cfg) if cfg.moe is not None else \
+        init_dense_ffn(k2, cfg.d_model, cfg.d_ff)
+    return {"attn": attn, "ffn": ffn,
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+
+
+def init_lm(key, cfg: LMConfig) -> Params:
+    ke, kl, ku = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "layers": layers,
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": jax.random.normal(ku, (cfg.d_model, cfg.vocab),
+                                     jnp.float32) * cfg.d_model ** -0.5,
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(lp: Params, x: jax.Array, cfg: LMConfig, positions,
+               cache=None):
+    attn_fn = mla_attention if cfg.mla is not None else gqa_attention
+    a, new_cache = attn_fn(lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                           cfg, positions=positions, cache=cache)
+    h = x + a
+    z = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = moe_ffn(lp["ffn"], z, cfg)
+    else:
+        f, aux = dense_ffn(lp["ffn"], z), jnp.zeros((), jnp.float32)
+    return h + f, aux, new_cache
+
+
+def forward(params: Params, tokens: jax.Array, cfg: LMConfig,
+            *, remat: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> final hidden states (B, S, D) + total aux loss."""
+    remat = cfg.remat if remat is None else remat
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        x, aux = carry
+        y, a, _ = _layer_fwd(lp, x, cfg, positions)
+        return (y, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.dots_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"], unroll=cfg.unroll)
+    return rmsnorm(x, params["final_ln"], cfg.norm_eps), aux
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: LMConfig
+            ) -> tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked cross-entropy: the (B, S, V) logits tensor never fully
+    materializes — the unembed+softmax runs per sequence chunk."""
+    h, aux = forward(params, batch["tokens"], cfg)
+    b, s, d = h.shape
+    ck = min(cfg.loss_chunk, s)
+    n = s // ck
+    hc = h.reshape(b, n, ck, d).transpose(1, 0, 2, 3)
+    lc = batch["labels"].reshape(b, n, ck).transpose(1, 0, 2)
+    w = params["unembed"]
+
+    def step(tot, xs):
+        hx, lx = xs
+        logits = (hx @ w.astype(hx.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hc, lc),
+                          unroll=cfg.unroll)
+    xent = tot / (b * s)
+    return xent + aux, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Position-addressed cache.  GQA: a=(L,B,Smax,Hkv,hd) keys, b=values.
+    MLA: a=(L,B,Smax,kv_lora) latents, b=(L,B,Smax,rope_dim) rope keys."""
+
+    a: jax.Array
+    b: jax.Array
+    length: jax.Array       # () int32
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=None) -> KVCache:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    if cfg.mla is not None:
+        a = jnp.zeros((cfg.n_layers, batch, max_len, cfg.mla.kv_lora_rank),
+                      dt)
+        c = jnp.zeros((cfg.n_layers, batch, max_len, cfg.mla.rope_head_dim),
+                      dt)
+    else:
+        a = jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                       cfg.head_dim), dt)
+        c = jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                       cfg.head_dim), dt)
+    return KVCache(a, c, jnp.zeros((), jnp.int32))
+
+
+def _block_fwd(params: Params, tokens: jax.Array, cfg: LMConfig,
+               cache: KVCache) -> tuple[jax.Array, KVCache]:
+    """Run a token block through all layers against the cache (covers both
+    prefill, block size S, and decode, block size 1).
+
+    Prefill (S > 1, empty cache) runs the STREAMING attention path (chunked
+    online-softmax / q-blocked triangular — same as training) and then
+    inserts the fresh K/V (or MLA latents) into the cache; the legacy
+    attend-against-the-padded-cache path (kept under
+    ``cfg.prefill_via_cache`` as the §Perf HC1 baseline) materializes
+    O(S·S_max) scores and round-trips the online-softmax carry."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    cur = cache.length
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = cur + jnp.arange(s)
+    streaming_prefill = s > 1 and not cfg.prefill_via_cache
+
+    def body(x, xs):
+        lp, ca, cb = xs
+        if streaming_prefill:               # fresh-context attention
+            y, _, (fa, fb) = _layer_fwd(lp, x, cfg, positions)
+            na = jax.lax.dynamic_update_slice(
+                ca, fa.astype(ca.dtype), (0, cur) + (0,) * (ca.ndim - 2))
+            nb = jax.lax.dynamic_update_slice(
+                cb, fb.astype(cb.dtype), (0, cur) + (0,) * (cb.ndim - 2))
+            return y, (na, nb)
+        y, _, new_cache = _layer_fwd(lp, x, cfg, positions,
+                                     cache=(ca, cb, cur))
+        return y, new_cache
+
+    x, (na, nb) = jax.lax.scan(body, x, (params["layers"], cache.a, cache.b),
+                               unroll=cfg.unroll)
+    h = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = (h[:, -1] @ params["unembed"].astype(dt)).astype(jnp.float32)
+    return logits, KVCache(na, nb, cur + s)
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: LMConfig,
+            max_len: int | None = None) -> tuple[jax.Array, KVCache]:
+    """tokens (B, S) -> (last-token logits (B, V), filled cache)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len or s)
+    return _block_fwd(params, tokens, cfg, cache)
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: KVCache,
+                cfg: LMConfig) -> tuple[jax.Array, KVCache]:
+    """One new token per sequence: tokens (B,) + cache -> logits (B, V)."""
+    return _block_fwd(params, tokens[:, None], cfg, cache)
+
+
+# ---------------------------------------------------------------------------
+# train step (optimizer applied by the caller-supplied update fn)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: LMConfig, optimizer):
+    """Returns ``step(params, opt_state, batch) -> (params, opt_state,
+    metrics)`` — the function the launcher jits/shards."""
+
+    def step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lm_loss, has_aux=True)(params, batch, cfg)
+        params, opt_state, gnorm = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm, **parts}
+
+    return step

@@ -1,0 +1,3 @@
+from .adamw import AdamW, sgd_momentum     # noqa: F401
+from .schedule import (constant, cosine_decay, linear_warmup_cosine)  # noqa: F401
+from .clip import global_norm, clip_by_global_norm                    # noqa: F401

@@ -1,0 +1,91 @@
+"""AdamW with decoupled weight decay, fp32 moments, global-norm clipping.
+
+Optimizer states follow the param pytree, so pjit shards them identically to
+the params (ZeRO-1-style: each device holds the moments of its own param
+shards for free under GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .clip import clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable          # step -> learning rate
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, params, grads, state):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state["step"] + 1
+        lr = self.lr(step)
+        c1 = 1 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu2 = self.b1 * mu + (1 - self.b1) * g32
+            nu2 = self.b2 * nu + (1 - self.b2) * g32 * g32
+            mhat = mu2 / c1
+            vhat = nu2 / c2
+            p32 = p.astype(jnp.float32)
+            step_v = mhat / (jnp.sqrt(vhat) + self.eps) \
+                + self.weight_decay * p32
+            return (p32 - lr * step_v).astype(p.dtype), mu2, nu2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_mu = jax.tree_util.tree_leaves(state["mu"])
+        flat_nu = jax.tree_util.tree_leaves(state["nu"])
+        out = [upd(p, g, m, n)
+               for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, gnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class sgd_momentum:
+    lr: Callable
+    momentum: float = 0.9
+    max_grad_norm: float = 1.0
+
+    def init(self, params):
+        return {"vel": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state["step"] + 1
+        lr = self.lr(step)
+
+        def upd(p, g, v):
+            v2 = self.momentum * v + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * v2).astype(p.dtype), v2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        out = [upd(p, g, v) for p, g, v in zip(
+            flat_p, jax.tree_util.tree_leaves(grads),
+            jax.tree_util.tree_leaves(state["vel"]))]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        return new_p, {"vel": new_v, "step": step}, gnorm

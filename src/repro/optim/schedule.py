@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * c)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(1, total_steps - warmup), final_frac)
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.float32(lr) * s / max(1, warmup)
+        return jnp.where(s < warmup, warm, cos(s - warmup))
+    return fn

@@ -1,0 +1,36 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run sets its own 512-device flag in a
+# separate process; see test_dryrun_small.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def tree_dataset():
+    """Shared small tree: table + row table + CSR + python-oracle levels."""
+    import jax.numpy as jnp
+    from repro.core import build_csr
+    from repro.core.engine import Dataset
+    from repro.data.treegen import TreeSpec, bfs_reference, make_edge_table
+
+    spec = TreeSpec(num_vertices=3000, height=10, payload_cols=4, seed=11)
+    table = make_edge_table(spec)
+    ds = Dataset.prepare(table, spec.num_vertices)
+    src = np.asarray(table.column("from"))
+    dst = np.asarray(table.column("to"))
+    levels = bfs_reference(src, dst, 0, 10, spec.num_vertices)
+    return spec, ds, levels
+
+
+def subprocess_env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return env

@@ -1,0 +1,63 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, restore_checkpoint,
+                              save_checkpoint)
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "layers": [jnp.ones((2,)), jnp.zeros((3,))]},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    path = save_checkpoint(str(tmp_path), 7, t)
+    like = jax.tree_util.tree_map(jnp.zeros_like, t)
+    r = restore_checkpoint(path, like)
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    files = os.listdir(tmp_path)
+    assert files == ["ckpt_00000001.npz"]
+
+
+def test_manager_rotation_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, {"x": jnp.asarray(float(s))})
+    assert m.latest_step() == 4
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["ckpt_00000003.npz", "ckpt_00000004.npz"]
+    step, tree = m.restore_latest({"x": jnp.asarray(0.0)})
+    assert step == 4 and float(tree["x"]) == 4.0
+
+
+def test_async_save(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=True)
+    m.save(5, {"x": jnp.arange(1000.0)})
+    m.wait()
+    step, tree = m.restore_latest({"x": jnp.zeros(1000)})
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(tree["x"]), np.arange(1000.0))
+
+
+def test_restore_missing_key_raises(tmp_path):
+    path = save_checkpoint(str(tmp_path), 1, {"a": jnp.asarray(1.0)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(path, {"b": jnp.asarray(0.0)})
+
+
+def test_empty_dir_restore(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    step, tree = m.restore_latest({"x": jnp.asarray(0.0)})
+    assert step is None and tree is None

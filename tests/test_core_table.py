@@ -1,0 +1,46 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import ColumnTable, RowTable, payload_names
+
+
+def _table():
+    return ColumnTable.from_numpy({
+        "id": np.arange(10, dtype=np.int32),
+        "from": np.arange(10, dtype=np.int32) % 3,
+        "to": (np.arange(10, dtype=np.int32) * 7) % 10,
+        "name": np.arange(40, dtype=np.float32).reshape(10, 4),
+    })
+
+
+def test_take_masks_sentinel():
+    t = _table()
+    out = t.take(jnp.asarray([0, 5, 10, 12], jnp.int32))   # 10+ = padding
+    assert out["id"].tolist() == [0, 5, 0, 0]
+    assert np.all(np.asarray(out["name"][2:]) == 0.0)
+    assert np.allclose(np.asarray(out["name"][1]), [20, 21, 22, 23])
+
+
+def test_select_and_width():
+    t = _table()
+    sel = t.select(["id", "name"])
+    assert sel.names == ("id", "name")
+    assert t.width_bytes(["id"]) == 4
+    assert t.width_bytes(["name"]) == 16
+
+
+def test_rowtable_roundtrip():
+    t = _table()
+    rt = RowTable.from_column_table(t)
+    assert rt.width == 3 + 4
+    assert np.allclose(np.asarray(rt.column("to")),
+                       np.asarray(t.column("to")).astype(np.float32))
+    rows = rt.take_rows(jnp.asarray([3, 11], jnp.int32))
+    assert rows.shape == (2, 7)
+    assert np.all(np.asarray(rows[1]) == 0.0)            # padding row
+    proj = rt.project(rows, ["id", "from"])
+    assert proj["id"][0] == 3.0
+
+
+def test_payload_names():
+    assert payload_names(3) == ["column1", "column2", "column3"]

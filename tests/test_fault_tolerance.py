@@ -1,0 +1,38 @@
+import pytest
+
+from repro.distributed.fault_tolerance import ElasticPlan, StragglerMonitor
+
+
+def test_straggler_detection():
+    m = StragglerMonitor(warmup_steps=3, deadline_factor=2.0)
+    for _ in range(10):
+        assert not m.record(1.0)
+    assert m.record(5.0)          # 5x the EMA -> straggler
+    assert m.stragglers == 1
+    # the straggler must not poison the EMA
+    assert not m.record(1.1)
+    assert abs(m.deadline - 2.0) < 0.3
+
+
+def test_straggler_warmup_never_flags():
+    m = StragglerMonitor(warmup_steps=5)
+    assert not m.record(100.0)
+    assert not m.record(0.001)
+
+
+def test_elastic_plan_512_to_256():
+    p = ElasticPlan(old_devices=512, new_devices=256, model_parallel=16)
+    assert p.old_dp == 32 and p.new_dp == 16
+    assert p.new_grad_accum == 2            # global batch preserved
+    assert p.new_mesh_shape() == (16, 16)
+    assert p.new_mesh_shape(multi_pod_pods=1) == (1, 16, 16)
+
+
+def test_elastic_plan_rejects_impossible():
+    with pytest.raises(ValueError):
+        ElasticPlan(old_devices=512, new_devices=100, model_parallel=16)
+
+
+def test_elastic_upscale():
+    p = ElasticPlan(old_devices=256, new_devices=512, model_parallel=16)
+    assert p.new_grad_accum == 1            # never shrinks below 1

@@ -1,0 +1,98 @@
+"""Hypothesis property suites over the engine's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineCaps, build_csr
+from repro.core.engine import Dataset, RecursiveQuery, run_query
+from repro.core.positions import (append_block, block_from_mask,
+                                  compact_mask, sort_positions_by_key,
+                                  PosBlock)
+from repro.core.table import ColumnTable
+from repro.data.treegen import TreeSpec, bfs_reference, make_edge_table
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=60),
+       st.integers(1, 80))
+def test_compact_mask_invariants(mask, cap):
+    m = np.array(mask)
+    blk = compact_mask(jnp.asarray(m), cap, sentinel=999)
+    n = int(blk.count)
+    assert n == min(int(m.sum()), cap)
+    got = np.asarray(blk.positions)[:n]
+    assert got.tolist() == list(np.nonzero(m)[0][:cap])    # ordered
+    assert np.all(np.asarray(blk.positions)[n:] == 999)    # sentinel
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_append_block_never_wraps(seed):
+    rng = np.random.default_rng(seed)
+    cap_r = int(rng.integers(4, 40))
+    buf = jnp.full((cap_r,), -1, jnp.int32)
+    count = jnp.zeros((), jnp.int32)
+    total = 0
+    overflowed = False
+    for _ in range(3):
+        k = int(rng.integers(0, 20))
+        pos = jnp.asarray(rng.integers(0, 100, max(k, 1)).astype(np.int32))
+        blk = PosBlock(pos, jnp.asarray(min(k, pos.shape[0]), jnp.int32))
+        buf, count, ovf = append_block(buf, count, blk)
+        total += int(blk.count)
+        overflowed |= bool(ovf)
+    assert int(count) == min(total, cap_r)
+    assert overflowed == (total > cap_r)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+def test_sort_positions_groups_by_bucket(seed, nb):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, nb, int(rng.integers(1, 100))).astype(np.int32)
+    order, counts = sort_positions_by_key(jnp.asarray(keys), nb)
+    sorted_keys = keys[np.asarray(order)]
+    assert np.all(np.diff(sorted_keys) >= 0)               # grouped
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.bincount(keys, minlength=nb))
+    # a permutation: every position exactly once
+    assert sorted(np.asarray(order).tolist()) == list(range(len(keys)))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_engine_equivalence_random_trees(seed):
+    """PRecursive == TRecursive == bitmap == oracle on random trees."""
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(20, 300))
+    h = int(rng.integers(2, 10))
+    depth = int(rng.integers(0, h + 2))
+    spec = TreeSpec(num_vertices=v, height=h, payload_cols=1,
+                    seed=seed % 10_000)
+    ds = Dataset.prepare(make_edge_table(spec), v)
+    caps = EngineCaps(frontier=v + 8, result=v + 8)
+    ref = bfs_reference(np.asarray(ds.table.column("from")),
+                        np.asarray(ds.table.column("to")), 0, depth, v)
+    ref_ids = sorted(
+        int(np.asarray(ds.table.column("id"))[p])
+        for p in set().union(*ref[:depth + 1]))
+    for eng in ("precursive", "trecursive", "bitmap", "rowstore"):
+        r = run_query(RecursiveQuery(eng, depth, 1, caps), ds, 0)
+        got = sorted(int(x) for x in
+                     np.asarray(r.values["id"])[:int(r.count)])
+        assert got == ref_ids, eng
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_block_from_mask_matches_nonzero(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 80))
+    vals = rng.integers(0, 1000, n).astype(np.int32)
+    mask = rng.random(n) < 0.5
+    cap = int(rng.integers(1, 100))
+    blk, ovf = block_from_mask(jnp.asarray(vals), jnp.asarray(mask), cap, -1)
+    expect = vals[mask][:cap]
+    got = np.asarray(blk.positions)[:int(blk.count)]
+    np.testing.assert_array_equal(got, expect)
+    assert bool(ovf) == (int(mask.sum()) > cap)
