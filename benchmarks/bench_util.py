@@ -38,7 +38,12 @@ def tree_dataset(num_vertices: int, height: int, payload_cols: int,
     return _DATASETS[key]
 
 
+RESULTS: list[tuple[str, float, str]] = []
+
+
 def emit(name: str, us: float, derived: str) -> None:
+    """Print one CSV row and record it for ``run.py --json``."""
+    RESULTS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}")
 
 

@@ -4,16 +4,22 @@ Table = (id, from, to, name): no payload, so late materialization has the
 least to win — the paper found PRecursive still ahead (2 of 4 attribute
 streams touched per level) and TRecursive ~= PostgreSQL.
 Engines: the paper's four + the beyond-paper bitmap/hybrid engines.
+
+Beyond the paper, a batched-roots cell times the serving path: ONE
+vmap-batched dispatch answering ``BATCH_ROOTS`` users' traversals at once,
+reported as us-per-root against the sequential loop.
 """
 from __future__ import annotations
 
 from repro.core import EngineCaps
-from repro.core.engine import RecursiveQuery, run_query
+from repro.core.engine import RecursiveQuery, run_query, run_query_batch
 
 from .bench_util import emit, level_caps, time_call, tree_dataset
 
 ENGINES = ("precursive", "trecursive", "rowstore", "rowstore_index",
            "bitmap", "hybrid")
+
+BATCH_ROOTS = 8
 
 
 def run(num_vertices: int = 200_000, height: int = 60,
@@ -22,19 +28,33 @@ def run(num_vertices: int = 200_000, height: int = 60,
     caps = level_caps(num_vertices, height)
     out = {}
     for depth in depths:
-        base = None
         for eng in ENGINES:
             q = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
                                caps=caps)
             us = time_call(run_query, q, ds, 0, repeat=repeat)
-            if eng == "rowstore":
-                base = us
             out[(eng, depth)] = us
         for eng in ENGINES:
             us = out[(eng, depth)]
             speedup = out[("rowstore", depth)] / us
             emit(f"exp1/{eng}/d{depth}", us,
                  f"speedup_vs_rowstore={speedup:.2f}")
+
+    # batched multi-root serving cell: one dispatch, BATCH_ROOTS roots
+    roots = list(range(BATCH_ROOTS))
+    depth = depths[0]
+    q = RecursiveQuery(engine="precursive", max_depth=depth, payload_cols=0,
+                       caps=caps)
+
+    def _sequential():
+        return [run_query(q, ds, r) for r in roots]
+
+    us_seq = time_call(_sequential, repeat=repeat)
+    us_batch = time_call(run_query_batch, q, ds, roots, repeat=repeat)
+    out[("batch", depth)] = us_batch
+    emit(f"exp1/precursive_batch{BATCH_ROOTS}/d{depth}",
+         us_batch / BATCH_ROOTS,
+         f"per_root_speedup_vs_sequential="
+         f"{us_seq / max(us_batch, 1e-9):.2f}")
     return out
 
 

@@ -1,26 +1,35 @@
 """Benchmark harness: one entry per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks datasets for
-CI-speed runs; full sizes reproduce the paper's relative results.
+CI-speed runs — it is the documented CI profile:
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_bfs.json
+
+``--json PATH`` additionally writes every emitted row as
+``{name: {"us_per_call": float, "derived": str}}`` so the perf trajectory
+can be tracked across PRs (one BENCH_bfs.json artifact per run).  Full
+sizes (no ``--quick``) reproduce the paper's relative results.
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="small datasets; the CI profile")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows as JSON (e.g. BENCH_bfs.json)")
     ap.add_argument("--only", default=None,
-                    help="comma list: exp1,exp2,exp3,kern")
+                    help="comma list: exp1,exp2,exp3,claims,kern")
     args = ap.parse_args(argv)
 
-    from . import (exp1_bfs, exp2_payload, exp3_rewrite, exp_claims,
-                   kernels_bench)
+    from . import (bench_util, exp1_bfs, exp2_payload, exp3_rewrite,
+                   exp_claims, kernels_bench)
 
+    bench_util.RESULTS.clear()     # fresh per invocation (notebook reuse)
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
 
@@ -50,6 +59,13 @@ def main(argv=None) -> None:
             exp_claims.run()
     if not only or "kern" in only:
         kernels_bench.run(repeat=3 if args.quick else 5)
+
+    if args.json:
+        rows = {name: {"us_per_call": us, "derived": derived}
+                for name, us, derived in bench_util.RESULTS}
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

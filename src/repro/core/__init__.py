@@ -3,6 +3,8 @@ from .table import ColumnTable, RowTable, payload_names            # noqa: F401
 from .positions import (PosBlock, empty_block, compact_mask,       # noqa: F401
                         append_block, take_late, sort_positions_by_key)
 from .csr import CSRIndex, build_csr, expand_frontier              # noqa: F401
+from .operators import (Context, Pipeline, TraversalState,         # noqa: F401
+                        fixed_point, execute, execute_batch)
 from .recursive import (EngineCaps, BFSResult, precursive_bfs,     # noqa: F401
                         trecursive_bfs, rowstore_bfs,
                         trecursive_rewrite_bfs, rowstore_rewrite_bfs)

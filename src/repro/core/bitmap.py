@@ -1,143 +1,80 @@
-"""Beyond-paper engine: dense-frontier (bitmap) BFS.
+"""Beyond-paper engines: dense-frontier (bitmap) and direction-optimizing
+BFS, as operator-pipeline compositions.
 
 The paper's engines keep the frontier *sparse* (position lists).  On TPU a
 dense boolean frontier over vertices is often better: one level becomes a
 masked scatter over the full edge list — a boolean-semiring SpMV with no
 data-dependent shapes, perfectly vectorizable on the VPU and trivially
-shardable (edges split across devices, frontier psum-OR'ed).
+shardable.  Both engines below run through the same
+:func:`~repro.core.operators.fixed_point` driver as the paper's pipelines:
 
-``hybrid_bfs`` direction-optimizes per level: while the frontier is small it
-runs the paper's positional expansion (work ∝ frontier edges); once the
-frontier covers more than ``switch_frac`` of vertices it flips to the dense
-step (work ∝ E but stream-friendly).  Late materialization is preserved:
-the result is an edge *mask*, compacted to positions and gathered once.
+* ``bitmap``  — Seed(dense) → DenseBitmapStep, finished by CompactEmitted
+  (the emitted-edge mask is compacted to positions and late-materialized, so
+  the dense plan keeps the paper's positional contract);
+* ``hybrid``  — Seed(pos) → HybridStep: positional CSRIndexJoin while the
+  frontier is small, dense push once it covers > ``switch_frac`` of the
+  vertices (direction-optimizing BFS).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from .csr import CSRIndex, expand_frontier
-from .positions import PosBlock, compact_mask
-from .recursive import BFSResult, EngineCaps, dedup_targets
+from .csr import CSRIndex
+from .operators import (BFSResult, CompactEmitted, Context, DenseBitmapStep,
+                        EngineCaps, HybridStep, Pipeline, Seed, bitmap_level,
+                        check_direction, execute)
 from .table import ColumnTable
 
-__all__ = ["bitmap_bfs", "hybrid_bfs", "bitmap_level"]
+__all__ = ["bitmap_bfs", "hybrid_bfs", "bitmap_level", "bitmap_plan",
+           "hybrid_plan"]
 
 
-def bitmap_level(from_col: jax.Array, to_col: jax.Array,
-                 frontier_v: jax.Array, visited: jax.Array
-                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """One dense push step.  Returns (edge_hit_mask, next_frontier, visited).
+def bitmap_plan(caps: EngineCaps, max_depth: int,
+                out_cols: tuple[str, ...],
+                direction: str = "outbound") -> Pipeline:
+    """Dense-frontier BFS (always-push): O(E) work per level, state is two
+    bitmaps + one edge mask; ``inclusive`` matches the dense loop's
+    emit-inside-the-body level accounting."""
+    check_direction(direction)
+    return Pipeline(
+        name="BitmapBFS", rep="dense",
+        seed=Seed(kind="dense"),
+        ops=(DenseBitmapStep(),),
+        finisher=CompactEmitted(tuple(out_cols)),
+        caps=caps, max_depth=max_depth, inclusive=True, tracks_emitted=True)
 
-    edge_hit_mask marks edges whose source is in the frontier (these are the
-    rows the CTE emits this level)."""
-    nv = frontier_v.shape[0]
-    hit = frontier_v[jnp.clip(from_col, 0, nv - 1)]
-    tgt = jnp.clip(to_col, 0, nv - 1)
-    nxt = jnp.zeros((nv,), bool).at[tgt].max(hit, mode="drop")
-    nxt = nxt & ~visited
-    visited = visited | nxt
-    return hit, nxt, visited
+
+def hybrid_plan(caps: EngineCaps, max_depth: int,
+                out_cols: tuple[str, ...], switch_frac: float = 0.05,
+                direction: str = "outbound") -> Pipeline:
+    """Direction-optimizing BFS: the per-level operator flips between the
+    paper's positional expansion and the dense push."""
+    check_direction(direction)
+    return Pipeline(
+        name="HybridBFS", rep="pos",
+        seed=Seed(mark_emitted=True),
+        ops=(HybridStep(switch_frac=switch_frac),),
+        finisher=CompactEmitted(tuple(out_cols)),
+        caps=caps, max_depth=max_depth, tracks_emitted=True)
 
 
-@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
-                                             "num_vertices"))
-def bitmap_bfs(table: ColumnTable, num_vertices: int, root: jax.Array,
+def bitmap_bfs(table: ColumnTable, num_vertices: int, root,
                *, caps: EngineCaps, max_depth: int,
                out_cols: tuple[str, ...]) -> BFSResult:
-    """Dense-frontier BFS (always-push).  Work per level is O(E) regardless
-    of frontier size; intermediate state is 2 bitmaps + 1 edge mask."""
-    from_col = table.column("from")
-    to_col = table.column("to")
-    nv = num_vertices
-
-    frontier = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)].set(True)
-    visited = frontier
-    emitted = jnp.zeros((table.num_rows,), bool)
-
-    def cond(state):
-        frontier, _, _, depth = state
-        return jnp.any(frontier) & (depth <= max_depth)
-
-    def body(state):
-        frontier, visited, emitted, depth = state
-        hit, nxt, visited = bitmap_level(from_col, to_col, frontier, visited)
-        return nxt, visited, emitted | hit, depth + 1
-
-    frontier, visited, emitted, depth = jax.lax.while_loop(
-        cond, body, (frontier, visited, emitted, jnp.zeros((), jnp.int32)))
-
-    block = compact_mask(emitted, caps.result, table.num_rows)
-    values = table.take(block.positions, out_cols)      # late materialize
-    overflow = jnp.sum(emitted, dtype=jnp.int32) > caps.result
-    return BFSResult(values, block.positions, block.count, depth, overflow)
+    """Dense-frontier BFS over the raw edge columns (no index needed)."""
+    ctx = Context(table=table, rows=None, csr=None,
+                  join_src=table.column("from"),
+                  join_dst=table.column("to"))
+    plan = bitmap_plan(caps, max_depth, out_cols)
+    return execute(plan, ctx, root, num_vertices)
 
 
-@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
-                                             "switch_frac"))
-def hybrid_bfs(table: ColumnTable, csr: CSRIndex, root: jax.Array,
+def hybrid_bfs(table: ColumnTable, csr: CSRIndex, root,
                *, caps: EngineCaps, max_depth: int,
                out_cols: tuple[str, ...], switch_frac: float = 0.05
                ) -> BFSResult:
-    """Direction-optimizing BFS: positional expansion for small frontiers,
-    dense push for large ones.  State carries both representations; each
-    level converts the cheap way (positions->bitmap is a scatter;
-    bitmap->positions is a bounded compact)."""
-    e = table.num_rows
-    nv = csr.num_vertices
-    from_col, to_col = table.column("from"), table.column("to")
-    threshold = max(1, int(nv * switch_frac))
-
-    seed = compact_mask(from_col == root, caps.frontier, e)
-    emitted = jnp.zeros((e,), bool).at[
-        jnp.where(seed.valid_mask(), seed.positions, e)].set(
-            seed.valid_mask(), mode="drop")
-    visited = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)].set(True)
-
-    def cond(state):
-        frontier, _, _, depth, _ = state
-        return (frontier.count > 0) & (depth < max_depth)
-
-    def sparse_step(frontier, visited):
-        fvalid = frontier.valid_mask()
-        targets = jnp.where(fvalid,
-                            to_col[jnp.minimum(frontier.positions, e - 1)], -1)
-        keep, visited = dedup_targets(targets, fvalid, visited)
-        targets = jnp.where(keep, targets, -1)
-        epos, total, ovf = expand_frontier(csr, targets, keep, caps.frontier)
-        return PosBlock(epos, total), visited, ovf
-
-    def dense_step(frontier, visited):
-        fvalid = frontier.valid_mask()
-        targets = to_col[jnp.minimum(frontier.positions, e - 1)]
-        tgt_v = jnp.zeros((nv,), bool).at[jnp.clip(targets, 0, nv - 1)].set(
-            fvalid, mode="drop")
-        tgt_v = tgt_v & ~visited
-        visited = visited | tgt_v
-        hit = tgt_v[jnp.clip(from_col, 0, nv - 1)]
-        nxt = compact_mask(hit, caps.frontier, e)
-        ovf = jnp.sum(hit, dtype=jnp.int32) > caps.frontier
-        return nxt, visited, ovf
-
-    def body(state):
-        frontier, visited, emitted, depth, overflow = state
-        nxt, visited, ovf = jax.lax.cond(
-            frontier.count < threshold, sparse_step, dense_step,
-            frontier, visited)
-        emitted = emitted.at[jnp.where(nxt.valid_mask(), nxt.positions, e)
-                             ].set(nxt.valid_mask(), mode="drop")
-        return nxt, visited, emitted, depth + 1, overflow | ovf
-
-    state = (seed, visited, emitted, jnp.zeros((), jnp.int32),
-             jnp.zeros((), bool))
-    frontier, visited, emitted, depth, overflow = jax.lax.while_loop(
-        cond, body, state)
-
-    block = compact_mask(emitted, caps.result, e)
-    values = table.take(block.positions, out_cols)
-    overflow = overflow | (jnp.sum(emitted, dtype=jnp.int32) > caps.result)
-    return BFSResult(values, block.positions, block.count, depth, overflow)
+    """Direction-optimizing BFS (positional below the switch threshold,
+    dense push above it)."""
+    ctx = Context(table=table, rows=None, csr=csr,
+                  join_src=table.column("from"),
+                  join_dst=table.column("to"))
+    plan = hybrid_plan(caps, max_depth, out_cols, switch_frac)
+    return execute(plan, ctx, root, num_vertices=csr.num_vertices)

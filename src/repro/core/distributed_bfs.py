@@ -1,4 +1,6 @@
-"""Distributed positional BFS — PRecursive over a device mesh.
+"""Distributed positional BFS — PRecursive over a device mesh, expressed as
+an operator pipeline on the SAME :func:`~repro.core.operators.fixed_point`
+driver as the single-device engines.
 
 PosDB is "a disk-based *distributed* column-store"; the paper evaluates a
 single node.  This module supplies the distributed engine the paper implies,
@@ -7,11 +9,12 @@ mapped onto JAX collectives:
 * every column of the edge table is row-sharded over the BFS axes
   (``('pod','data')`` on the production mesh) — each device owns a slab of
   edges and builds a *local* CSR join index over them;
-* the frontier is a replicated block of target **vertices** (small); each
-  level every shard expands it through its local CSR into local edge
-  positions — pure shard-local positional work;
-* next-level targets are unioned with one ``all_gather`` of vertex ids per
-  level — the only collective, O(frontier) bytes, *never* values;
+* the per-level pipeline is ``CSRIndexJoin`` (shard-local positional
+  expansion of the replicated vertex frontier) → ``AppendUnionAll``
+  (shard-local result positions) → ``ShardTargetExchange`` (the shard-aware
+  operator: ONE tiled ``all_gather`` of vertex ids per level — the only
+  collective, O(frontier) bytes, *never* values — followed by replicated
+  dedup so every shard derives the identical next frontier);
 * result positions stay shard-local; the final late materialization is a
   shard-local gather, so payload bytes cross no link at any point.
 
@@ -20,18 +23,42 @@ wire carries positions, values move zero times.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .csr import build_csr, expand_frontier
-from .positions import PosBlock, append_block, block_from_mask
-from .recursive import EngineCaps, dedup_targets
+from .csr import build_csr
+from .operators import (AppendUnionAll, Context, CSRIndexJoin, EngineCaps,
+                        Pipeline, RawPositions, Seed, ShardTargetExchange,
+                        fixed_point)
 
-__all__ = ["make_distributed_pbfs"]
+__all__ = ["make_distributed_pbfs", "distributed_plan", "shard_map_compat"]
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """Version-portable shard_map (jax.shard_map landed after 0.4.x)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def distributed_plan(axis, caps: EngineCaps, max_depth: int) -> Pipeline:
+    """The distributed PRecursive pipeline: vertex-seeded (the frontier is
+    the replicated target block, not edge positions), emit-inside-the-body
+    (``inclusive`` + ``step_tag_offset=0``), shard-aware target union."""
+    return Pipeline(
+        name="DistributedPRecursive", rep="pos",
+        seed=Seed(kind="vertices"),
+        ops=(CSRIndexJoin(),
+             AppendUnionAll("pos", step_tag_offset=0, append_seed=False),
+             ShardTargetExchange(axis)),
+        finisher=RawPositions(),
+        caps=caps, max_depth=max_depth, inclusive=True)
 
 
 def make_distributed_pbfs(mesh, axes: Sequence[str], num_vertices: int,
@@ -49,61 +76,28 @@ def make_distributed_pbfs(mesh, axes: Sequence[str], num_vertices: int,
     for a in axes:
         nshards *= mesh.shape[a]
     ax = axes if len(axes) > 1 else axes[0]
+    plan = distributed_plan(ax, caps, max_depth)
 
     def bfs_local(from_loc, to_loc, payload_loc, root, shard_base):
         e_loc = from_loc.shape[0]
-        csr = build_csr(from_loc, num_vertices)
+        ctx = Context(table=None, rows=None,
+                      csr=build_csr(from_loc, num_vertices),
+                      join_src=from_loc, join_dst=to_loc)
+        r = fixed_point(plan, ctx, root, num_vertices)
 
-        targets = jnp.full((caps.frontier,), -1, jnp.int32).at[0].set(root)
-        tcount = jnp.ones((), jnp.int32)
-        visited = jnp.zeros((num_vertices,), bool).at[
-            jnp.clip(root, 0, num_vertices - 1)].set(True)
-        result = jnp.full((caps.result,), e_loc, jnp.int32)
-        rcount = jnp.zeros((), jnp.int32)
-
-        def cond(state):
-            _, tcount, _, _, _, depth, _ = state
-            return (tcount > 0) & (depth <= max_depth)
-
-        def body(state):
-            targets, tcount, visited, result, rcount, depth, ovf = state
-            valid = jnp.arange(caps.frontier, dtype=jnp.int32) < tcount
-            # local positional expansion (replicated targets -> local epos)
-            epos, total, o1 = expand_frontier(csr, targets, valid,
-                                              caps.frontier)
-            result, rcount, o2 = append_block(result, rcount,
-                                              PosBlock(epos, total))
-            # local targets of the newly reached edges
-            live = jnp.arange(caps.frontier, dtype=jnp.int32) < total
-            tloc = jnp.where(live, to_loc[jnp.minimum(epos, e_loc - 1)], -1)
-            # the one collective: union candidate targets across shards
-            gathered = jax.lax.all_gather(tloc, ax, tiled=True)  # (S*cap,)
-            gvalid = gathered >= 0
-            # replicated dedup -> identical next frontier on every shard
-            keep, visited2 = dedup_targets(gathered, gvalid, visited)
-            nxt, o3 = block_from_mask(gathered, keep, caps.frontier, -1)
-            return (nxt.positions, nxt.count, visited2, result, rcount,
-                    depth + 1, ovf | o1 | o2 | o3)
-
-        state = (targets, tcount, visited, result, rcount,
-                 jnp.zeros((), jnp.int32), jnp.zeros((), bool))
-        targets, tcount, visited, result, rcount, depth, ovf = \
-            jax.lax.while_loop(cond, body, state)
-
-        # shard-local late materialization: payload bytes never leave the shard
-        live = jnp.arange(caps.result, dtype=jnp.int32) < rcount
-        safe = jnp.minimum(result, e_loc - 1)
+        # shard-local late materialization: payload bytes never leave the
+        # shard
+        live = jnp.arange(caps.result, dtype=jnp.int32) < r.count
+        safe = jnp.minimum(r.positions, e_loc - 1)
         vals = jnp.where(live[:, None], payload_loc[safe], 0.0)
-        gpos = jnp.where(live, result + shard_base, -1)
-        return gpos, vals, rcount[None], (depth - 1)[None], ovf[None]
+        gpos = jnp.where(live, r.positions + shard_base, -1)
+        return gpos, vals, r.count[None], (r.depth - 1)[None], \
+            r.overflow[None]
 
     pspec = P(ax)
-    fn = jax.shard_map(
-        bfs_local, mesh=mesh,
-        in_specs=(pspec, pspec, pspec, P(), pspec),
-        out_specs=(pspec, pspec, pspec, pspec, pspec),
-        check_vma=False,
-    )
+    fn = shard_map_compat(bfs_local, mesh,
+                          (pspec, pspec, pspec, P(), pspec),
+                          (pspec, pspec, pspec, pspec, pspec))
 
     @jax.jit
     def run(from_col, to_col, payload, root):

@@ -1,24 +1,41 @@
-"""Query layer: the paper's three experiment queries as engine-dispatched
-plans.
+"""Query layer: paper experiment queries dispatched onto operator pipelines.
 
 A ``RecursiveQuery`` describes the SQL of §5.1 (Listings 1.1/1.2/1.3):
 which payload columns exist, what the recursion carries, whether the Exp-3
-rewrite is applied, and which engine executes it.  ``plan_repr`` renders the
-Volcano tree of Fig. 3/4 for the chosen engine so the operator mapping is
-auditable.
+rewrite is applied, which engine executes it, and the traversal
+``direction``.  Engine dispatch is a *plan-builder registry*
+(:data:`PLAN_BUILDERS`): every engine name maps to a function producing a
+declarative :class:`~repro.core.operators.Pipeline`, and every pipeline runs
+through the single shared :func:`~repro.core.operators.fixed_point` driver.
+
+``plan_repr`` renders the Volcano tree *derived from the actual operator
+composition* (``Pipeline.render``), so the mapping onto the paper's
+Fig. 3/4 operator trees is auditable rather than hand-maintained:
+
+* Fig. 4 (PRecursive)  → Seed → ReadCol → VisitedDedup → CSRIndexJoin →
+  AppendUnionAll, finished by one LateMaterialize;
+* Fig. 3 (TRecursive)  → the same loop + EarlyMaterialize every level,
+  finished by EmitTuples;
+* PostgreSQL baseline  → SeqScan seed + ScanHashJoin + full-row gathers.
+
+Serving path: :func:`run_query_batch` vmaps the driver over a vector of
+roots — ONE jitted XLA dispatch answers a whole batch of users' traversal
+queries (the multi-tenant fan-out the ROADMAP targets).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+from typing import Dict, Literal
 
 import jax.numpy as jnp
 
-from .bitmap import bitmap_bfs, hybrid_bfs
+from .bitmap import bitmap_plan, hybrid_plan
 from .csr import CSRIndex, build_csr
-from .recursive import (BFSResult, EngineCaps, precursive_bfs, rowstore_bfs,
-                        rowstore_rewrite_bfs, trecursive_bfs,
-                        trecursive_rewrite_bfs)
+from .operators import BFSResult, Context, EngineCaps, Pipeline, execute, \
+    execute_batch
+from .recursive import (DIRECTIONS, precursive_plan, rowstore_plan,
+                        rowstore_rewrite_plan, trecursive_plan,
+                        trecursive_rewrite_plan)
 from .table import ColumnTable, RowTable, payload_names
 
 EngineName = Literal["precursive", "trecursive", "rowstore", "rowstore_index",
@@ -30,6 +47,8 @@ ENGINE_NAMES: tuple[str, ...] = (
     "hybrid", "trecursive_rewrite", "rowstore_rewrite",
     "rowstore_index_rewrite")
 
+Direction = Literal["outbound", "inbound", "both"]
+
 
 @dataclasses.dataclass(frozen=True)
 class RecursiveQuery:
@@ -40,6 +59,7 @@ class RecursiveQuery:
     payload_cols: int                 # the paper's N
     caps: EngineCaps
     dedup: bool = True                # BFS semantics (UNION ALL if False)
+    direction: Direction = "outbound"
 
     @property
     def out_cols(self) -> tuple[str, ...]:
@@ -47,14 +67,68 @@ class RecursiveQuery:
                 *payload_names(self.payload_cols))
 
 
+# ---------------------------------------------------------------------------
+# plan-builder registry: engine name -> RecursiveQuery -> Pipeline
+# ---------------------------------------------------------------------------
+
+PLAN_BUILDERS: Dict[str, object] = {
+    "precursive": lambda q: precursive_plan(
+        q.caps, q.max_depth, q.out_cols, q.dedup, q.direction),
+    "trecursive": lambda q: trecursive_plan(
+        q.caps, q.max_depth, q.out_cols, q.dedup, q.direction),
+    "rowstore": lambda q: rowstore_plan(
+        q.caps, q.max_depth, q.out_cols, q.dedup, use_index=False,
+        direction=q.direction),
+    "rowstore_index": lambda q: rowstore_plan(
+        q.caps, q.max_depth, q.out_cols, q.dedup, use_index=True,
+        direction=q.direction),
+    "bitmap": lambda q: bitmap_plan(
+        q.caps, q.max_depth, q.out_cols, q.direction),
+    "hybrid": lambda q: hybrid_plan(
+        q.caps, q.max_depth, q.out_cols, direction=q.direction),
+    "trecursive_rewrite": lambda q: trecursive_rewrite_plan(
+        q.caps, q.max_depth, q.out_cols, q.dedup, q.direction),
+    "rowstore_rewrite": lambda q: rowstore_rewrite_plan(
+        q.caps, q.max_depth, q.out_cols, q.dedup, use_index=False,
+        direction=q.direction),
+    "rowstore_index_rewrite": lambda q: rowstore_rewrite_plan(
+        q.caps, q.max_depth, q.out_cols, q.dedup, use_index=True,
+        direction=q.direction),
+}
+
+
+def build_plan(q: RecursiveQuery) -> Pipeline:
+    try:
+        builder = PLAN_BUILDERS[q.engine]
+    except KeyError:
+        raise ValueError(f"unknown engine {q.engine!r}; "
+                         f"known: {ENGINE_NAMES}") from None
+    return builder(q)
+
+
+def positions_available(engine: str) -> bool:
+    """The positions contract, derived from the engine's actual pipeline:
+    True iff ``BFSResult.positions`` holds real edge positions."""
+    q = RecursiveQuery(engine=engine, max_depth=1, payload_cols=0,
+                       caps=EngineCaps(1, 1))
+    return build_plan(q).carries_positions
+
+
 @dataclasses.dataclass(frozen=True)
 class Dataset:
-    """A prepared graph: columnar + row layouts + the join index."""
+    """A prepared graph: columnar + row layouts + the join index.
+
+    Direction views (the reverse CSR for ``inbound``, the doubled edge view
+    for ``both``) are built on first use and cached on the instance."""
 
     table: ColumnTable
     rows: RowTable
     csr: CSRIndex
     num_vertices: int
+    rcsr: CSRIndex | None = None           # CSR over `to` (inbound)
+    both_src: object = None                # (2E,) concat(from, to)
+    both_dst: object = None                # (2E,) concat(to, from)
+    both_csr: CSRIndex | None = None
 
     @classmethod
     def prepare(cls, table: ColumnTable, num_vertices: int) -> "Dataset":
@@ -62,61 +136,61 @@ class Dataset:
                    csr=build_csr(table.column("from"), num_vertices),
                    num_vertices=num_vertices)
 
+    def ensure_direction(self, direction: str) -> None:
+        if direction not in DIRECTIONS:
+            raise ValueError(f"unknown direction {direction!r}")
+        if direction == "inbound" and self.rcsr is None:
+            object.__setattr__(self, "rcsr", build_csr(
+                self.table.column("to"), self.num_vertices))
+        if direction == "both" and self.both_csr is None:
+            src = jnp.concatenate([self.table.column("from"),
+                                   self.table.column("to")])
+            dst = jnp.concatenate([self.table.column("to"),
+                                   self.table.column("from")])
+            object.__setattr__(self, "both_src", src)
+            object.__setattr__(self, "both_dst", dst)
+            object.__setattr__(self, "both_csr",
+                               build_csr(src, self.num_vertices))
+
+    def context(self, direction: str = "outbound") -> Context:
+        """The direction-resolved join view the operators run against."""
+        self.ensure_direction(direction)
+        if direction == "inbound":
+            return Context(table=self.table, rows=self.rows, csr=self.rcsr,
+                           join_src=self.table.column("to"),
+                           join_dst=self.table.column("from"))
+        if direction == "both":
+            return Context(table=self.table, rows=self.rows,
+                           csr=self.both_csr, join_src=self.both_src,
+                           join_dst=self.both_dst)
+        return Context(table=self.table, rows=self.rows, csr=self.csr,
+                       join_src=self.table.column("from"),
+                       join_dst=self.table.column("to"))
+
 
 def run_query(q: RecursiveQuery, ds: Dataset, root: int) -> BFSResult:
-    rt = jnp.int32(root)
-    kw = dict(caps=q.caps, max_depth=q.max_depth, out_cols=q.out_cols,
-              dedup=q.dedup)
-    if q.engine == "precursive":
-        return precursive_bfs(ds.table, ds.csr, rt, **kw)
-    if q.engine == "trecursive":
-        return trecursive_bfs(ds.table, ds.csr, rt, **kw)
-    if q.engine == "rowstore":
-        return rowstore_bfs(ds.rows, ds.csr, rt, use_index=False, **kw)
-    if q.engine == "rowstore_index":
-        return rowstore_bfs(ds.rows, ds.csr, rt, use_index=True, **kw)
-    if q.engine == "bitmap":
-        kw.pop("dedup")
-        return bitmap_bfs(ds.table, ds.num_vertices, rt, **kw)
-    if q.engine == "hybrid":
-        kw.pop("dedup")
-        return hybrid_bfs(ds.table, ds.csr, rt, **kw)
-    if q.engine == "trecursive_rewrite":
-        return trecursive_rewrite_bfs(ds.table, ds.csr, rt, **kw)
-    if q.engine == "rowstore_rewrite":
-        return rowstore_rewrite_bfs(ds.rows, ds.csr, rt, use_index=False, **kw)
-    if q.engine == "rowstore_index_rewrite":
-        return rowstore_rewrite_bfs(ds.rows, ds.csr, rt, use_index=True, **kw)
-    raise ValueError(f"unknown engine {q.engine!r}")
+    """Execute one query through the shared fixed-point driver."""
+    plan = build_plan(q)
+    return execute(plan, ds.context(q.direction), jnp.int32(root),
+                   ds.num_vertices)
 
 
-_PLANS = {
-    "precursive": """\
-Materialize[{cols}]                <- ONE late gather, after the fixed point
-  PRecursive(maxrec={d})
-    Filter[from = {root}] -> PosBlock            (non-recursive child)
-    IndexJoin[CSR(from)](PRecursiveCTE, edges)   (recursive child: pos -> pos)""",
-    "trecursive": """\
-TRecursive(maxrec={d})
-  Materialize[{cols}](Filter[from = {root}])    (non-recursive child)
-  Join[from = cte.to]                            (recursive child)
-    TRecursiveCTE
-    Materialize[{cols}](edges)                  <- (3+N) gathers EVERY level""",
-    "rowstore": """\
-Recursive(maxrec={d})                            (PostgreSQL emulation)
-  SeqScan[from = {root}] -> full rows
-  HashJoin[from = cte.to]
-    Hash(cte)
-    SeqScan(edges)                              <- full-width scan EVERY level""",
-}
+def run_query_batch(q: RecursiveQuery, ds: Dataset, roots) -> BFSResult:
+    """Execute one query for MANY roots in a single jitted XLA dispatch
+    (vmap over the fixed-point driver).  Every array in the returned
+    ``BFSResult`` gains a leading ``len(roots)`` batch dimension; row i is
+    bit-identical to ``run_query(q, ds, roots[i])``."""
+    plan = build_plan(q)
+    roots = jnp.asarray(roots, jnp.int32)
+    return execute_batch(plan, ds.context(q.direction), roots,
+                         ds.num_vertices)
 
 
 def plan_repr(engine: str, max_depth: int, payload_cols: int,
               root: int = 0) -> str:
-    base = {"rowstore_index": "rowstore", "hybrid": "precursive",
-            "bitmap": "precursive", "trecursive_rewrite": "trecursive",
-            "rowstore_rewrite": "rowstore",
-            "rowstore_index_rewrite": "rowstore"}.get(engine, engine)
-    cols = ", ".join(("id", "from", "to", "name",
-                      *payload_names(payload_cols)))
-    return _PLANS[base].format(d=max_depth, cols=cols, root=root)
+    """Volcano-tree rendering DERIVED from the engine's actual operator
+    composition (not a hand-written template)."""
+    q = RecursiveQuery(engine=engine, max_depth=max_depth,
+                       payload_cols=payload_cols,
+                       caps=EngineCaps(frontier=0, result=0))
+    return build_plan(q).render(root=root)

@@ -1,0 +1,840 @@
+"""Composable positional operator algebra + the unified fixed-point driver.
+
+The paper describes its engines as *Volcano operator trees* (Fig. 3 for the
+tuple-based TRecursive plan, Fig. 4 for the positional PRecursive plan).
+This module is that algebra for the TPU port: every recursive engine is a
+:class:`Pipeline` — a seed operator, a tuple of per-level operators, and a
+finisher — executed by ONE shared :func:`fixed_point` driver (a single
+``jax.lax.while_loop``).  The engines in :mod:`repro.core.recursive`,
+:mod:`repro.core.bitmap` and :mod:`repro.core.distributed_bfs` are thin
+compositions of these operators; ``plan_repr`` in :mod:`repro.core.engine`
+renders the *actual* composition, so the paper-figure mapping is auditable.
+
+Operator → paper mapping
+------------------------
+
+===================  ======================================================
+``Seed``             the non-recursive CTE child (Filter on the root; the
+                     row-store variant is a SeqScan over interleaved rows)
+``ReadTargets``      per-level read of the join column out of the frontier
+                     (positions → one column gather; tuples/rows → free)
+``VisitedDedup``     BFS vertex dedup (visited bitmap + scatter-argmin)
+``CSRIndexJoin``     Fig. 4's IndexJoin: frontier vertices → edge positions
+                     through the CSR join index (positions in, positions out)
+``ScanHashJoin``     Fig. 3's HashJoin realized as PostgreSQL does it on a
+                     heap table: full SeqScan probing the frontier hash
+``DenseBitmapStep``  beyond-paper dense-frontier level (boolean SpMV push)
+``EarlyMaterialize`` Fig. 3's per-level Materialize (tuple/row pipelines)
+``AppendUnionAll``   the recursive UNION ALL: append the level block to the
+                     working result, tagging each row with its BFS level
+``LateMaterialize``  Fig. 4's single post-fixed-point Materialize
+===================  ======================================================
+
+State contract
+--------------
+
+All operators act on one :class:`TraversalState` pytree.  The *frontier
+representation* is the axis the paper studies and is explicit per pipeline:
+
+* ``rep='pos'``   — the frontier is a block of edge positions (PRecursive);
+* ``rep='vals'``  — a block of materialized column values (TRecursive);
+* ``rep='rows'``  — a block of full interleaved rows (row-store emulation);
+* ``rep='dense'`` — a boolean vertex bitmap (beyond-paper bitmap engine).
+
+Positions contract: pipelines whose representation carries positions
+(``'pos'``/``'dense'``, and any pipeline finished by :class:`TopLevelJoin`)
+return real edge positions in ``BFSResult.positions``; pure tuple/row
+pipelines return all ``-1`` — positions are *unavailable* after early
+materialization, exactly the information loss the paper's Fig. 3 plan pays.
+
+Direction support: the join view (``ctx.join_src``/``ctx.join_dst`` and the
+CSR over ``join_src``) decides traversal direction.  ``outbound`` uses
+(from, to); ``inbound`` the reverse; ``both`` a doubled edge view whose
+positions fold back onto real edges at append/materialize time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSRIndex, expand_frontier
+from .positions import PosBlock, append_block, block_from_mask, compact_mask
+from .table import ColumnTable, RowTable
+
+__all__ = [
+    "DIRECTIONS", "check_direction",
+    "EngineCaps", "BFSResult", "Context", "TraversalState", "Operator",
+    "Seed", "ReadTargets", "VisitedDedup", "CSRIndexJoin", "ScanHashJoin",
+    "DenseBitmapStep", "HybridStep", "EarlyMaterialize", "AppendUnionAll",
+    "ShardTargetExchange", "LateMaterialize", "EmitTuples", "ProjectRows",
+    "CompactEmitted", "TopLevelJoin", "RawPositions", "Pipeline",
+    "fixed_point", "execute", "execute_batch", "dedup_targets",
+    "bitmap_level",
+]
+
+
+DIRECTIONS = ("outbound", "inbound", "both")
+
+
+def check_direction(direction: str) -> None:
+    if direction not in DIRECTIONS:
+        raise ValueError(f"unknown direction {direction!r}; "
+                         f"expected one of {DIRECTIONS}")
+
+
+class EngineCaps(NamedTuple):
+    """Static buffer capacities (the Volcano block sizes of the TPU port)."""
+
+    frontier: int   # max edges emitted by a single BFS level
+    result: int     # max edges in the full result
+
+
+class BFSResult(NamedTuple):
+    values: Dict[str, jax.Array]   # (result_cap, ...) materialized outputs
+    positions: jax.Array           # (result_cap,) edge positions (or -1s)
+    count: jax.Array               # () live rows
+    depth: jax.Array               # () levels actually executed
+    overflow: jax.Array            # () any capacity overflow observed
+    row_depths: Optional[jax.Array] = None   # (result_cap,) BFS level per row
+
+
+class Context(NamedTuple):
+    """Runtime inputs of a pipeline: storage + the direction-resolved join
+    view.  ``join_src`` is the column the CSR indexes; ``join_dst`` holds the
+    next vertex reached by each join-space edge."""
+
+    table: Optional[ColumnTable]
+    rows: Optional[RowTable]
+    csr: Optional[CSRIndex]
+    join_src: jax.Array
+    join_dst: jax.Array
+
+
+class TraversalState(NamedTuple):
+    """The shared operator state.  One frontier representation is active per
+    pipeline; the others hold zero-size placeholders so every pipeline runs
+    through the identical ``while_loop`` structure."""
+
+    frontier_pos: jax.Array            # (F,) int32 join-space edge positions
+    frontier_vals: Dict[str, jax.Array]  # tuple rep: name -> (F, ...)
+    frontier_rows: jax.Array           # (F, W) row-store rep
+    frontier_count: jax.Array          # () int32 live frontier entries
+    targets: jax.Array                 # (F,) int32 target vertices
+    keep: jax.Array                    # (F,) bool survivors of dedup
+    frontier_bits: jax.Array           # (V,) bool dense frontier
+    emitted: jax.Array                 # (EJ,) bool emitted-edge mask
+    emit_depth: jax.Array              # (EJ,) int32 level of first emission
+    visited: jax.Array                 # (V,) bool BFS visited set
+    result_pos: jax.Array              # (R,) int32 real result positions
+    result_vals: Dict[str, jax.Array]  # materialized result buffers
+    result_depth: jax.Array            # (R,) int32 BFS level per result row
+    result_count: jax.Array            # () int32
+    depth: jax.Array                   # () int32 levels executed
+    overflow: jax.Array                # () bool
+
+
+# ---------------------------------------------------------------------------
+# shared primitives
+# ---------------------------------------------------------------------------
+
+def dedup_targets(targets: jax.Array, valid: jax.Array, visited: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """BFS vertex dedup: drop already-visited targets and, within the level,
+    keep only the first occurrence of each vertex (scatter-argmin ticket).
+
+    Returns (keep_mask, new_visited)."""
+    cap = targets.shape[0]
+    nv = visited.shape[0]
+    safe = jnp.clip(targets, 0, nv - 1)
+    fresh = valid & ~visited[safe]
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    ticket = jnp.full((nv,), cap, jnp.int32).at[safe].min(
+        jnp.where(fresh, slots, cap), mode="drop")
+    keep = fresh & (ticket[safe] == slots)
+    new_visited = visited.at[safe].set(jnp.where(keep, True, visited[safe]),
+                                       mode="drop")
+    return keep, new_visited
+
+
+def bitmap_level(from_col: jax.Array, to_col: jax.Array,
+                 frontier_v: jax.Array, visited: jax.Array
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One dense push step.  Returns (edge_hit_mask, next_frontier, visited).
+
+    edge_hit_mask marks edges whose source is in the frontier (these are the
+    rows the CTE emits this level)."""
+    nv = frontier_v.shape[0]
+    hit = frontier_v[jnp.clip(from_col, 0, nv - 1)]
+    tgt = jnp.clip(to_col, 0, nv - 1)
+    nxt = jnp.zeros((nv,), bool).at[tgt].max(hit, mode="drop")
+    nxt = nxt & ~visited
+    visited = visited | nxt
+    return hit, nxt, visited
+
+
+def append_values(bufs, count, vals, block_count, cap_r):
+    """Append a value block into larger result buffers (the tuple/row-store
+    UNION ALL).  Returns (new_bufs, new_count, overflowed)."""
+    cap_f = next(iter(vals.values())).shape[0]
+    slots = count + jnp.arange(cap_f, dtype=jnp.int32)
+    live = (jnp.arange(cap_f, dtype=jnp.int32) < block_count) & (slots < cap_r)
+    safe = jnp.where(live, slots, cap_r)
+    out = {}
+    for k, buf in bufs.items():
+        v = vals[k]
+        mask = live.reshape(live.shape + (1,) * (v.ndim - 1))
+        out[k] = buf.at[safe].set(jnp.where(mask, v, 0), mode="drop")
+    new_count = jnp.minimum(count + block_count, cap_r)
+    return out, new_count, (count + block_count) > cap_r
+
+
+def _num_real_rows(ctx: Context) -> int:
+    if ctx.table is not None:
+        return ctx.table.num_rows
+    if ctx.rows is not None:
+        return ctx.rows.num_rows
+    return ctx.join_src.shape[0]
+
+
+def _to_real(ctx: Context, pos: jax.Array) -> jax.Array:
+    """Fold join-space positions back to real edge positions.  Identity for
+    outbound/inbound views; the 'both' view stacks the reverse copy of every
+    edge at ``e + p`` (the join-space sentinel ``2e`` folds to ``e``, the
+    real-space sentinel)."""
+    e = _num_real_rows(ctx)
+    if ctx.join_src.shape[0] == e:
+        return pos
+    return jnp.where(pos < e, pos, pos - e)
+
+
+def _tag_depths(result_depth: jax.Array, count: jax.Array, block_cap: int,
+                block_count: jax.Array, tag: jax.Array) -> jax.Array:
+    """Record the BFS level of every row the current append makes live."""
+    cap_r = result_depth.shape[0]
+    slots = count + jnp.arange(block_cap, dtype=jnp.int32)
+    live = (jnp.arange(block_cap, dtype=jnp.int32) < block_count) & \
+           (slots < cap_r)
+    return result_depth.at[jnp.where(live, slots, cap_r)].set(
+        jnp.broadcast_to(tag, (block_cap,)), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# operators
+# ---------------------------------------------------------------------------
+
+class Operator:
+    """Base operator: ``init`` runs once before the fixed point (seed-block
+    handling), ``step`` once per level inside the ``while_loop``."""
+
+    def init(self, ctx: Context, state: TraversalState, root: jax.Array
+             ) -> TraversalState:
+        return state
+
+    def step(self, ctx: Context, state: TraversalState) -> TraversalState:
+        return state
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class Seed(Operator):
+    """The non-recursive child of the CTE.
+
+    kind='edges'    — Filter[join_src = root] compacted to a position block;
+    kind='vertices' — the frontier starts as the root vertex itself
+                      (distributed engine: targets are exchanged, not edges);
+    kind='dense'    — the root bit in a dense vertex bitmap.
+    scan='rows' emulates the PostgreSQL SeqScan (strided read over the
+    interleaved row table).  mark_emitted seeds the emitted-edge mask used by
+    bitmap-style pipelines."""
+
+    kind: str = "edges"
+    scan: str = "columnar"
+    label: str = "from"
+    mark_emitted: bool = False
+
+    def init(self, ctx, state, root):
+        nv = state.visited.shape[0]
+        visited = state.visited.at[jnp.clip(root, 0, nv - 1)].set(True)
+        if self.kind == "dense":
+            bits = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)
+                                             ].set(True)
+            return state._replace(frontier_bits=bits, visited=visited,
+                                  frontier_count=jnp.ones((), jnp.int32))
+        if self.kind == "vertices":
+            cap = state.targets.shape[0]
+            targets = jnp.full((cap,), -1, jnp.int32).at[0].set(root)
+            keep = jnp.zeros((cap,), bool).at[0].set(True)
+            return state._replace(targets=targets, keep=keep, visited=visited,
+                                  frontier_count=jnp.ones((), jnp.int32))
+        ej = ctx.join_src.shape[0]
+        col = (ctx.rows.column(self.label).astype(jnp.int32)
+               if self.scan == "rows" else ctx.join_src)
+        cap = state.frontier_pos.shape[0]
+        blk = compact_mask(col == root, cap, ej)
+        state = state._replace(frontier_pos=blk.positions,
+                               frontier_count=blk.count, visited=visited)
+        if self.mark_emitted:
+            valid = blk.valid_mask()
+            idx = jnp.where(valid, blk.positions, ej)
+            emitted = state.emitted.at[idx].set(valid, mode="drop")
+            emit_depth = state.emit_depth.at[idx].set(
+                jnp.zeros((cap,), jnp.int32), mode="drop")
+            state = state._replace(emitted=emitted, emit_depth=emit_depth)
+        return state
+
+    def describe(self):
+        if self.scan == "rows":
+            return f"SeqScan[{self.label} = $root] -> full rows"
+        if self.kind == "vertices":
+            return "SeedVertices[$root]"
+        if self.kind == "dense":
+            return "SeedBitmap[$root]"
+        return f"Filter[{self.label} = $root] -> PosBlock"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadTargets(Operator):
+    """Per-level read of the join column out of the frontier.  For the
+    positional rep this is the ONLY per-level value gather (one column);
+    tuple/row reps already paid for it at materialization time."""
+
+    source: str = "pos"     # 'pos' | 'vals' | 'rows'
+    col: str = "to"
+
+    def step(self, ctx, state):
+        cap = state.targets.shape[0]
+        valid = jnp.arange(cap, dtype=jnp.int32) < state.frontier_count
+        if self.source == "pos":
+            ej = ctx.join_src.shape[0]
+            t = ctx.join_dst[jnp.minimum(state.frontier_pos, ej - 1)]
+        elif self.source == "vals":
+            t = state.frontier_vals[self.col].astype(jnp.int32)
+        else:
+            t = state.frontier_rows[:, ctx.rows.slot(self.col)
+                                    ].astype(jnp.int32)
+        return state._replace(targets=jnp.where(valid, t, -1), keep=valid)
+
+    def describe(self):
+        what = {"pos": "positions", "vals": "tuple block",
+                "rows": "row block"}[self.source]
+        return f"ReadCol[{self.col}]({what})"
+
+
+@dataclasses.dataclass(frozen=True)
+class VisitedDedup(Operator):
+    """BFS semantics: a vertex expands at most once (visited bitmap +
+    within-level scatter-argmin).  Omitted for raw UNION ALL walks."""
+
+    def step(self, ctx, state):
+        keep, visited = dedup_targets(state.targets, state.keep,
+                                      state.visited)
+        return state._replace(targets=jnp.where(keep, state.targets, -1),
+                              keep=keep, visited=visited)
+
+    def describe(self):
+        return "VisitedDedup[bitmap]"
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRIndexJoin(Operator):
+    """Fig. 4's IndexJoin: expand frontier vertices into the positions of
+    their out-edges through the CSR join index — positions in, positions
+    out, no values touched.  ``expand_fn`` plugs in the Pallas kernel."""
+
+    expand_fn: Optional[Callable] = None
+
+    def step(self, ctx, state):
+        cap = state.frontier_pos.shape[0]
+        expand = self.expand_fn or expand_frontier
+        epos, total, ovf = expand(ctx.csr, state.targets, state.keep, cap)
+        return state._replace(frontier_pos=epos, frontier_count=total,
+                              overflow=state.overflow | ovf)
+
+    def describe(self):
+        return "IndexJoin[CSR(join_src)](CTE, edges)"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanHashJoin(Operator):
+    """Fig. 3's HashJoin as PostgreSQL executes it without an index: build a
+    hash of the frontier's vertex set, then SeqScan the WHOLE table probing
+    it.  On the row table the scan touches every byte of every row."""
+
+    def step(self, ctx, state):
+        nv = state.visited.shape[0]
+        e = ctx.rows.num_rows
+        cap = state.frontier_pos.shape[0]
+        probe = jnp.zeros((nv,), bool).at[
+            jnp.clip(state.targets, 0, nv - 1)].set(state.keep, mode="drop")
+        scan_from = ctx.rows.column("from").astype(jnp.int32)  # full scan
+        hit = probe[jnp.clip(scan_from, 0, nv - 1)] & (scan_from >= 0)
+        blk = compact_mask(hit, cap, e)
+        ovf = jnp.sum(hit, dtype=jnp.int32) > cap
+        return state._replace(frontier_pos=blk.positions,
+                              frontier_count=blk.count,
+                              overflow=state.overflow | ovf)
+
+    def describe(self):
+        return "HashJoin[from = cte.to](Hash(cte), SeqScan(edges))"
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseBitmapStep(Operator):
+    """Beyond-paper dense level: the frontier is a vertex bitmap and one
+    level is a masked scatter over the full edge list (boolean-semiring
+    SpMV) — O(E) work but zero data-dependent shapes."""
+
+    def step(self, ctx, state):
+        hit, nxt, visited = bitmap_level(ctx.join_src, ctx.join_dst,
+                                         state.frontier_bits, state.visited)
+        new = hit & ~state.emitted
+        emit_depth = jnp.where(new, state.depth, state.emit_depth)
+        return state._replace(frontier_bits=nxt, visited=visited,
+                              emitted=state.emitted | hit,
+                              emit_depth=emit_depth,
+                              frontier_count=jnp.sum(nxt, dtype=jnp.int32))
+
+    def describe(self):
+        return "BitmapStep[push: frontier bits -> edge mask]"
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridStep(Operator):
+    """Direction-optimizing level: positional IndexJoin while the frontier
+    is small, dense push once it covers > switch_frac of the vertices."""
+
+    switch_frac: float = 0.05
+
+    def step(self, ctx, state):
+        e = ctx.join_src.shape[0]
+        nv = state.visited.shape[0]
+        cap = state.frontier_pos.shape[0]
+        threshold = max(1, int(nv * self.switch_frac))
+        from_col, to_col = ctx.join_src, ctx.join_dst
+
+        def sparse_step(frontier, visited):
+            fvalid = frontier.valid_mask()
+            targets = jnp.where(
+                fvalid, to_col[jnp.minimum(frontier.positions, e - 1)], -1)
+            keep, visited = dedup_targets(targets, fvalid, visited)
+            targets = jnp.where(keep, targets, -1)
+            epos, total, ovf = expand_frontier(ctx.csr, targets, keep, cap)
+            return PosBlock(epos, total), visited, ovf
+
+        def dense_step(frontier, visited):
+            fvalid = frontier.valid_mask()
+            targets = to_col[jnp.minimum(frontier.positions, e - 1)]
+            tgt_v = jnp.zeros((nv,), bool).at[
+                jnp.clip(targets, 0, nv - 1)].set(fvalid, mode="drop")
+            tgt_v = tgt_v & ~visited
+            visited = visited | tgt_v
+            hit = tgt_v[jnp.clip(from_col, 0, nv - 1)]
+            nxt = compact_mask(hit, cap, e)
+            ovf = jnp.sum(hit, dtype=jnp.int32) > cap
+            return nxt, visited, ovf
+
+        frontier = PosBlock(state.frontier_pos, state.frontier_count)
+        nxt, visited, ovf = jax.lax.cond(
+            state.frontier_count < threshold, sparse_step, dense_step,
+            frontier, state.visited)
+        valid = nxt.valid_mask()
+        idx = jnp.where(valid, nxt.positions, e)
+        new = valid & ~state.emitted[jnp.minimum(nxt.positions, e - 1)]
+        emitted = state.emitted.at[idx].set(valid, mode="drop")
+        emit_depth = state.emit_depth.at[jnp.where(new, nxt.positions, e)
+                                         ].set(
+            jnp.broadcast_to(state.depth + 1, (cap,)), mode="drop")
+        return state._replace(frontier_pos=nxt.positions,
+                              frontier_count=nxt.count, visited=visited,
+                              emitted=emitted, emit_depth=emit_depth,
+                              overflow=state.overflow | ovf)
+
+    def describe(self):
+        return (f"DirectionOpt[<{self.switch_frac:g}V: IndexJoin[CSR] | "
+                f"else BitmapStep]")
+
+
+@dataclasses.dataclass(frozen=True)
+class EarlyMaterialize(Operator):
+    """Fig. 3's per-level Materialize: turn the positional join output into
+    value tuples (or full interleaved rows) IMMEDIATELY — the (3+N) gathers
+    per level that the positional plan avoids.  ``with_next`` additionally
+    carries the join-space next-vertex column (needed when direction='both'
+    makes the next vertex ambiguous after folding to real positions)."""
+
+    cols: Tuple[str, ...] = ()
+    rows: bool = False
+    with_next: bool = False
+
+    def init(self, ctx, state, root):
+        return self._materialize(ctx, state)
+
+    def step(self, ctx, state):
+        return self._materialize(ctx, state)
+
+    def _materialize(self, ctx, state):
+        pos_real = _to_real(ctx, state.frontier_pos)
+        if self.rows:
+            return state._replace(frontier_rows=ctx.rows.take_rows(pos_real))
+        vals = ctx.table.take(pos_real, self.cols)
+        if self.with_next:
+            ej = ctx.join_src.shape[0]
+            valid = state.frontier_pos < ej
+            vals["__next__"] = jnp.where(
+                valid, ctx.join_dst[jnp.minimum(state.frontier_pos, ej - 1)],
+                -1)
+        return state._replace(frontier_vals=vals)
+
+    def describe(self):
+        if self.rows:
+            return "Materialize[* full rows](heap read)"
+        return f"Materialize[{', '.join(self.cols)}](EVERY level)"
+
+
+@dataclasses.dataclass(frozen=True)
+class AppendUnionAll(Operator):
+    """The recursive UNION ALL: append the level's block to the working
+    result, tagging every appended row with its BFS level.  ``init`` appends
+    the seed block (level 0) when the pipeline is edge-seeded; ``step``
+    appends level ``depth + step_tag_offset`` (offset 0 — and no seed append
+    — for vertex-seeded pipelines that emit the current level inside the
+    loop body)."""
+
+    rep: str = "pos"            # 'pos' | 'vals' | 'rows'
+    cols: Tuple[str, ...] = ()  # result columns for rep='vals'
+    step_tag_offset: int = 1
+    append_seed: bool = True
+
+    def init(self, ctx, state, root):
+        if not self.append_seed:
+            return state
+        return self._append(ctx, state, state.depth)
+
+    def step(self, ctx, state):
+        return self._append(ctx, state, state.depth + self.step_tag_offset)
+
+    def _append(self, ctx, state, tag):
+        if self.rep == "pos":
+            block = PosBlock(_to_real(ctx, state.frontier_pos),
+                             state.frontier_count)
+            rpos, rcount, ovf = append_block(state.result_pos,
+                                             state.result_count, block)
+            rdepth = _tag_depths(state.result_depth, state.result_count,
+                                 block.capacity, block.count, tag)
+            return state._replace(result_pos=rpos, result_count=rcount,
+                                  result_depth=rdepth,
+                                  overflow=state.overflow | ovf)
+        if self.rep == "vals":
+            vals = {k: state.frontier_vals[k] for k in self.cols}
+        else:
+            vals = {"rows": state.frontier_rows}
+        cap_r = state.result_depth.shape[0]
+        bufs = state.result_vals
+        if not bufs:     # first append allocates the result buffers
+            bufs = {k: jnp.zeros((cap_r,) + v.shape[1:], v.dtype)
+                    for k, v in vals.items()}
+        bufs, rcount, ovf = append_values(bufs, state.result_count, vals,
+                                          state.frontier_count, cap_r)
+        block_cap = next(iter(vals.values())).shape[0]
+        rdepth = _tag_depths(state.result_depth, state.result_count,
+                             block_cap, state.frontier_count, tag)
+        return state._replace(result_vals=bufs, result_count=rcount,
+                              result_depth=rdepth,
+                              overflow=state.overflow | ovf)
+
+    def describe(self):
+        return "UnionAll[append working table]"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardTargetExchange(Operator):
+    """The distributed engine's shard-aware operator: union next-level
+    target vertices across shards with ONE tiled ``all_gather`` per level
+    (O(frontier) vertex ids — never values), then dedup replicated so every
+    shard derives the identical next frontier."""
+
+    axis: Any
+
+    def step(self, ctx, state):
+        cap = state.frontier_pos.shape[0]
+        ej = ctx.join_src.shape[0]
+        live = jnp.arange(cap, dtype=jnp.int32) < state.frontier_count
+        tloc = jnp.where(
+            live, ctx.join_dst[jnp.minimum(state.frontier_pos, ej - 1)], -1)
+        gathered = jax.lax.all_gather(tloc, self.axis, tiled=True)
+        gvalid = gathered >= 0
+        keep, visited = dedup_targets(gathered, gvalid, state.visited)
+        nxt, ovf = block_from_mask(gathered, keep, cap, -1)
+        kmask = jnp.arange(cap, dtype=jnp.int32) < nxt.count
+        return state._replace(targets=nxt.positions, keep=kmask,
+                              frontier_count=nxt.count, visited=visited,
+                              overflow=state.overflow | ovf)
+
+    def describe(self):
+        return f"AllGatherTargets[axis={self.axis!r}] -> VisitedDedup"
+
+
+# ---------------------------------------------------------------------------
+# finishers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LateMaterialize:
+    """Fig. 4's single Materialize after the fixed point — the paper's core
+    win: ALL output columns gathered exactly once, from positions."""
+
+    cols: Tuple[str, ...]
+
+    def finish(self, ctx, pipeline, state):
+        values = ctx.table.take(state.result_pos, self.cols)
+        return BFSResult(values, state.result_pos, state.result_count,
+                         state.depth, state.overflow, state.result_depth)
+
+    def describe(self):
+        return (f"Materialize[{', '.join(self.cols)}]"
+                "  <- ONE late gather, after the fixed point")
+
+
+@dataclasses.dataclass(frozen=True)
+class EmitTuples:
+    """Tuple-pipeline finisher: the result was materialized level by level;
+    positions are unavailable (all -1) — the Fig. 3 contract."""
+
+    cols: Tuple[str, ...]
+
+    def finish(self, ctx, pipeline, state):
+        cap_r = state.result_depth.shape[0]
+        values = {k: state.result_vals[k] for k in self.cols}
+        return BFSResult(values, jnp.full((cap_r,), -1, jnp.int32),
+                         state.result_count, state.depth, state.overflow,
+                         state.result_depth)
+
+    def describe(self):
+        return f"Emit[{', '.join(self.cols)}](pre-materialized; positions=-1)"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectRows:
+    """Row-store finisher: project output columns back out of the gathered
+    full rows; positions are unavailable (all -1)."""
+
+    cols: Tuple[str, ...]
+
+    def finish(self, ctx, pipeline, state):
+        cap_r = state.result_depth.shape[0]
+        values = ctx.rows.project(state.result_vals["rows"], self.cols)
+        return BFSResult(values, jnp.full((cap_r,), -1, jnp.int32),
+                         state.result_count, state.depth, state.overflow,
+                         state.result_depth)
+
+    def describe(self):
+        return f"Project[{', '.join(self.cols)}](full rows)"
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactEmitted:
+    """Bitmap-pipeline finisher: compact the emitted-edge mask into a
+    position block, then late-materialize — the dense plan keeps the
+    positional contract."""
+
+    cols: Tuple[str, ...]
+
+    def finish(self, ctx, pipeline, state):
+        ej = ctx.join_src.shape[0]
+        cap_r = pipeline.caps.result
+        blk = compact_mask(state.emitted, cap_r, ej)
+        pos_real = _to_real(ctx, blk.positions)
+        values = ctx.table.take(pos_real, self.cols)
+        overflow = state.overflow | (
+            jnp.sum(state.emitted, dtype=jnp.int32) > cap_r)
+        row_depths = jnp.where(
+            blk.valid_mask(),
+            state.emit_depth[jnp.minimum(blk.positions, ej - 1)], -1)
+        return BFSResult(values, pos_real, blk.count, state.depth, overflow,
+                         row_depths)
+
+    def describe(self):
+        return (f"Materialize[{', '.join(self.cols)}](Compact(emitted mask))"
+                "  <- ONE late gather")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopLevelJoin:
+    """The paper's Exp-3 rewriting: the recursion carried only (id, to); the
+    payload columns come back through ONE top-level hash join on ``id``
+    (realized as an inverse-permutation probe array).  On the row store the
+    join re-gathers full rows — the rewrite cannot rescue a heap table."""
+
+    cols: Tuple[str, ...]
+    inner: Any
+    use_rows: bool = False
+
+    def finish(self, ctx, pipeline, state):
+        slim = self.inner.finish(ctx, pipeline, state)
+        if self.use_rows:
+            e = ctx.rows.num_rows
+            id_col = ctx.rows.column("id").astype(jnp.int32)  # strided scan
+            probe = jnp.zeros((e,), jnp.int32).at[
+                jnp.clip(id_col, 0, e - 1)].set(
+                jnp.arange(e, dtype=jnp.int32), mode="drop")
+        else:
+            e = ctx.table.num_rows
+            id_col = ctx.table.column("id")
+            probe = jnp.zeros((e,), jnp.int32).at[id_col].set(
+                jnp.arange(e, dtype=jnp.int32), mode="drop")
+        cap_r = slim.positions.shape[0]
+        live = jnp.arange(cap_r, dtype=jnp.int32) < slim.count
+        ids = jnp.where(live, slim.values["id"].astype(jnp.int32), -1)
+        pos = jnp.where(live, probe[jnp.clip(ids, 0, e - 1)], e)
+        if self.use_rows:
+            values = ctx.rows.project(ctx.rows.take_rows(pos), self.cols)
+        else:
+            values = ctx.table.take(pos, self.cols)
+        return BFSResult(values, pos, slim.count, slim.depth, slim.overflow,
+                         slim.row_depths)
+
+    def describe(self):
+        return (f"HashJoin[id = cte.id](Hash(id -> pos), "
+                f"{self.inner.describe()})")
+
+
+@dataclasses.dataclass(frozen=True)
+class RawPositions:
+    """Return bare result positions (the distributed engine materializes
+    shard-locally outside the driver)."""
+
+    def finish(self, ctx, pipeline, state):
+        return BFSResult({}, state.result_pos, state.result_count,
+                         state.depth, state.overflow, state.result_depth)
+
+    def describe(self):
+        return "RawPositions[] (caller materializes shard-locally)"
+
+
+# ---------------------------------------------------------------------------
+# the pipeline + the ONE fixed-point driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """A declarative recursive plan: seed, per-level operators, finisher.
+    Hashable (all-static) so it can be a jit static argument."""
+
+    name: str
+    rep: str                 # 'pos' | 'vals' | 'rows' | 'dense'
+    seed: Seed
+    ops: Tuple[Operator, ...]
+    finisher: Any
+    caps: EngineCaps
+    max_depth: int
+    inclusive: bool = False        # cond: depth <= max_depth (dense engines)
+    tracks_emitted: bool = False   # carries the (EJ,) emitted-edge mask
+
+    @property
+    def carries_positions(self) -> bool:
+        """The positions contract: see the module docstring."""
+        return (self.rep in ("pos", "dense")
+                or isinstance(self.finisher, TopLevelJoin))
+
+    def render(self, root=0) -> str:
+        """The Volcano tree of the ACTUAL composition (Fig. 3/4 audit)."""
+        loop = "\n".join(f"    {op.describe()}" for op in self.ops)
+        seed = self.seed.describe().replace("$root", str(root))
+        return (f"{self.finisher.describe()}\n"
+                f"  {self.name}(maxrec={self.max_depth})\n"
+                f"    {seed}            (non-recursive child)\n"
+                f"{loop}")
+
+
+def _initial_state(pipeline: Pipeline, ctx: Context, num_vertices: int
+                   ) -> TraversalState:
+    cap_f, cap_r = pipeline.caps.frontier, pipeline.caps.result
+    ej = ctx.join_src.shape[0]
+    e = _num_real_rows(ctx)
+    dense = pipeline.rep == "dense"
+    track = pipeline.tracks_emitted
+    use_result_pos = pipeline.rep == "pos" and not track
+    i32z = jnp.zeros((), jnp.int32)
+    return TraversalState(
+        frontier_pos=(jnp.zeros((0,), jnp.int32) if dense
+                      else jnp.full((cap_f,), ej, jnp.int32)),
+        frontier_vals={},
+        frontier_rows=jnp.zeros((0, 0), jnp.float32),
+        frontier_count=i32z,
+        targets=jnp.full((cap_f,), -1, jnp.int32),
+        keep=jnp.zeros((cap_f,), bool),
+        frontier_bits=(jnp.zeros((num_vertices,), bool) if dense
+                       else jnp.zeros((0,), bool)),
+        emitted=(jnp.zeros((ej,), bool) if track
+                 else jnp.zeros((0,), bool)),
+        emit_depth=(jnp.full((ej,), -1, jnp.int32) if track
+                    else jnp.zeros((0,), jnp.int32)),
+        visited=jnp.zeros((num_vertices,), bool),
+        result_pos=(jnp.full((cap_r,), e, jnp.int32) if use_result_pos
+                    else jnp.zeros((0,), jnp.int32)),
+        result_vals={},
+        result_depth=(jnp.zeros((0,), jnp.int32) if track
+                      else jnp.full((cap_r,), -1, jnp.int32)),
+        result_count=i32z,
+        depth=i32z,
+        overflow=jnp.zeros((), bool),
+    )
+
+
+def fixed_point(pipeline: Pipeline, ctx: Context, root: jax.Array,
+                num_vertices: int) -> BFSResult:
+    """Run ANY pipeline to its fixed point: one ``jax.lax.while_loop``, the
+    operator steps composed in order inside the body.  This is the single
+    recursion driver behind every engine variant."""
+    root = jnp.asarray(root, jnp.int32)
+    state = _initial_state(pipeline, ctx, num_vertices)
+    state = pipeline.seed.init(ctx, state, root)
+    for op in pipeline.ops:
+        state = op.init(ctx, state, root)
+
+    limit = pipeline.max_depth + (1 if pipeline.inclusive else 0)
+
+    def cond(s):
+        return (s.frontier_count > 0) & (s.depth < limit)
+
+    def body(s):
+        for op in pipeline.ops:
+            s = op.step(ctx, s)
+        return s._replace(depth=s.depth + 1)
+
+    state = jax.lax.while_loop(cond, body, state)
+    return pipeline.finisher.finish(ctx, pipeline, state)
+
+
+_execute_impl = jax.jit(fixed_point,
+                        static_argnames=("pipeline", "num_vertices"))
+
+
+def execute(pipeline: Pipeline, ctx: Context, root, num_vertices: int
+            ) -> BFSResult:
+    """Jitted single-root pipeline execution."""
+    return _execute_impl(pipeline, ctx, jnp.asarray(root, jnp.int32),
+                         num_vertices)
+
+
+def _batch_impl(pipeline, ctx, roots, num_vertices):
+    return jax.vmap(lambda r: fixed_point(pipeline, ctx, r, num_vertices)
+                    )(roots)
+
+
+_batch_impl = jax.jit(_batch_impl,
+                      static_argnames=("pipeline", "num_vertices"))
+
+
+def execute_batch(pipeline: Pipeline, ctx: Context, roots,
+                  num_vertices: int) -> BFSResult:
+    """vmap-batched multi-root execution: ONE jitted XLA dispatch runs the
+    whole batch (the serving path — many users' roots per call).  Returns a
+    BFSResult whose arrays carry a leading batch dimension."""
+    roots = jnp.asarray(roots, jnp.int32)
+    return _batch_impl(pipeline, ctx, roots, num_vertices)

@@ -1,340 +1,224 @@
-"""The paper's contribution: recursive (BFS) query engines.
+"""The paper's recursive (BFS) engines as *operator-pipeline compositions*.
 
-Four engines share one fixed-point skeleton (``jax.lax.while_loop``) and
-differ only in what flows through the recursion — exactly the axis the paper
-studies:
+Every engine is now a declarative :class:`~repro.core.operators.Pipeline`
+over the positional operator algebra in :mod:`repro.core.operators`, run by
+the single shared :func:`~repro.core.operators.fixed_point` driver (one
+``jax.lax.while_loop``).  The engines differ ONLY in what flows through the
+recursion — exactly the axis the paper studies:
 
 =================  ==========================================================
-``precursive``     position blocks only; join columns read per level; ALL
-                   output columns gathered once at the end (late
-                   materialization).  The paper's main contribution
-                   (PRecursive/PRecursiveCTE, Fig. 4).
-``trecursive``     materialized tuple blocks over columnar storage (early
-                   materialization; TRecursive/TRecursiveCTE, Fig. 3).
-``rowstore``       PostgreSQL emulation: interleaved rows, per-level hash
-                   join realized as a full scan + membership probe; every
-                   row access reads the full row width.
-``rowstore_index`` PostgreSQL-with-index emulation: CSR join index avoids
-                   the scan but row gathers still read full rows.
+``precursive``     ReadCol → VisitedDedup → CSRIndexJoin → AppendUnionAll,
+                   finished by ONE LateMaterialize (PRecursive/PRecursiveCTE,
+                   the paper's Fig. 4 plan).
+``trecursive``     the same loop with an EarlyMaterialize before every
+                   append: the recursion carries value tuples and pays (3+N)
+                   column gathers per level (TRecursive, Fig. 3).
+``rowstore``       PostgreSQL emulation: ScanHashJoin (full interleaved-row
+                   SeqScan probing the frontier hash) + full-row gathers.
+``rowstore_index`` the CSRIndexJoin avoids the scan but row gathers still
+                   read full heap rows.
+``*_rewrite``      Exp-3: the slim (id, to) pipeline finished by ONE
+                   TopLevelJoin on ``id``.
 =================  ==========================================================
 
-Beyond the paper, :mod:`repro.core.bitmap` adds a dense-frontier engine and
-:mod:`repro.core.distributed_bfs` the multi-device one.
+Direction: the columnar pipelines traverse ``outbound`` (from→to),
+``inbound`` (to→from via the reverse CSR) or ``both`` (a doubled edge view;
+each edge can be emitted once per direction).  The row-store emulation is
+outbound-only, like the PostgreSQL baseline it models.
+
+Positions contract (asserted in tests/test_operators.py): positional
+pipelines return real edge positions in ``BFSResult.positions``; tuple/row
+pipelines return all ``-1`` — after early materialization positions are
+gone, which is precisely the information the Fig. 3 plan discards.
 
 Semantics note: the SQL in the paper is ``UNION ALL`` over a *tree*, where
 every edge is reached at most once and BFS/UNION-ALL coincide.  On general
-graphs the engines implement BFS semantics (per-vertex dedup via a visited
-bitmap, within-level dedup via scatter-argmin) when ``dedup=True``; with
-``dedup=False`` they reproduce raw UNION ALL walks up to ``max_depth``.
+graphs the pipelines implement BFS semantics (per-vertex dedup via a visited
+bitmap) when ``dedup=True``; with ``dedup=False`` the VisitedDedup operator
+is simply dropped from the composition and they reproduce raw UNION ALL
+walks up to ``max_depth``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, NamedTuple
+import dataclasses
+from typing import Callable, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-
-from .csr import CSRIndex, expand_frontier
-from .positions import PosBlock, append_block, compact_mask, empty_block
+from .csr import CSRIndex
+from .operators import (DIRECTIONS, AppendUnionAll, BFSResult, Context,
+                        CSRIndexJoin, EarlyMaterialize, EmitTuples,
+                        EngineCaps, LateMaterialize, Pipeline, ProjectRows,
+                        ReadTargets, ScanHashJoin, Seed, TopLevelJoin,
+                        VisitedDedup, check_direction as _check_direction,
+                        dedup_targets, execute)
 from .table import ColumnTable, RowTable
 
 __all__ = [
     "EngineCaps", "BFSResult", "precursive_bfs", "trecursive_bfs",
     "rowstore_bfs", "trecursive_rewrite_bfs", "rowstore_rewrite_bfs",
-    "dedup_targets",
+    "dedup_targets", "precursive_plan", "trecursive_plan", "rowstore_plan",
+    "trecursive_rewrite_plan", "rowstore_rewrite_plan", "DIRECTIONS",
 ]
 
-
-class EngineCaps(NamedTuple):
-    """Static buffer capacities (the Volcano block sizes of the TPU port)."""
-
-    frontier: int   # max edges emitted by a single BFS level
-    result: int     # max edges in the full result
-
-
-class BFSResult(NamedTuple):
-    values: Dict[str, jax.Array]   # (result_cap, ...) materialized outputs
-    positions: jax.Array           # (result_cap,) edge positions (or -1s)
-    count: jax.Array               # () live rows
-    depth: jax.Array               # () levels actually executed
-    overflow: jax.Array            # () any capacity overflow observed
-
-
-def dedup_targets(targets: jax.Array, valid: jax.Array, visited: jax.Array
-                  ) -> tuple[jax.Array, jax.Array]:
-    """BFS vertex dedup: drop already-visited targets and, within the level,
-    keep only the first occurrence of each vertex (scatter-argmin ticket).
-
-    Returns (keep_mask, new_visited)."""
-    cap = targets.shape[0]
-    nv = visited.shape[0]
-    safe = jnp.clip(targets, 0, nv - 1)
-    fresh = valid & ~visited[safe]
-    slots = jnp.arange(cap, dtype=jnp.int32)
-    ticket = jnp.full((nv,), cap, jnp.int32).at[safe].min(
-        jnp.where(fresh, slots, cap), mode="drop")
-    keep = fresh & (ticket[safe] == slots)
-    new_visited = visited.at[safe].set(jnp.where(keep, True, visited[safe]),
-                                       mode="drop")
-    return keep, new_visited
-
-
-def _seed_block(from_col: jax.Array, root, cap: int, sentinel: int) -> PosBlock:
-    return compact_mask(from_col == root, cap, sentinel)
+# per-direction (seed filter column label, tuple-rep next-vertex column)
+_DIRECTION_COLS = {
+    "outbound": ("from", "to"),
+    "inbound": ("to", "from"),
+    "both": ("from|to", "__next__"),
+}
 
 
 # ---------------------------------------------------------------------------
-# PRecursive — the paper's positional engine
+# plan builders — the declarative engine definitions
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
-                                             "dedup", "expand_fn"))
-def precursive_bfs(table: ColumnTable, csr: CSRIndex, root: jax.Array,
+def precursive_plan(caps: EngineCaps, max_depth: int,
+                    out_cols: Tuple[str, ...], dedup: bool = True,
+                    direction: str = "outbound",
+                    expand_fn: Optional[Callable] = None) -> Pipeline:
+    """The paper's positional engine: positions flow through the recursion;
+    one column read per level; ONE materialize after the fixed point."""
+    _check_direction(direction)
+    seed_label, _ = _DIRECTION_COLS[direction]
+    return Pipeline(
+        name="PRecursive", rep="pos",
+        seed=Seed(label=seed_label),
+        ops=(ReadTargets("pos"),
+             *((VisitedDedup(),) if dedup else ()),
+             CSRIndexJoin(expand_fn=expand_fn),
+             AppendUnionAll("pos")),
+        finisher=LateMaterialize(tuple(out_cols)),
+        caps=caps, max_depth=max_depth)
+
+
+def trecursive_plan(caps: EngineCaps, max_depth: int,
+                    out_cols: Tuple[str, ...], dedup: bool = True,
+                    direction: str = "outbound") -> Pipeline:
+    """The tuple engine: an EarlyMaterialize inside the loop turns every
+    level's join output into full value tuples (Fig. 3's plan shape)."""
+    _check_direction(direction)
+    seed_label, next_col = _DIRECTION_COLS[direction]
+    out_cols = tuple(out_cols)
+    with_next = next_col == "__next__"
+    carry = (out_cols if with_next
+             else tuple(dict.fromkeys(out_cols + (next_col,))))
+    return Pipeline(
+        name="TRecursive", rep="vals",
+        seed=Seed(label=seed_label),
+        ops=(ReadTargets("vals", col=next_col),
+             *((VisitedDedup(),) if dedup else ()),
+             CSRIndexJoin(),
+             EarlyMaterialize(cols=carry, with_next=with_next),
+             AppendUnionAll("vals", cols=out_cols)),
+        finisher=EmitTuples(out_cols),
+        caps=caps, max_depth=max_depth)
+
+
+def rowstore_plan(caps: EngineCaps, max_depth: int,
+                  out_cols: Tuple[str, ...], dedup: bool = True,
+                  use_index: bool = False,
+                  direction: str = "outbound") -> Pipeline:
+    """PostgreSQL emulation: the recursion carries full interleaved rows.
+    Without an index the per-level join is a full SeqScan probing the
+    frontier hash; with one, a CSRIndexJoin — but row gathers still read
+    the full heap width either way."""
+    if direction != "outbound":
+        raise ValueError("the row-store emulation is outbound-only "
+                         "(like the PostgreSQL baseline it models)")
+    return Pipeline(
+        name="Recursive", rep="rows",
+        seed=Seed(scan="rows", label="from"),
+        ops=(ReadTargets("rows", col="to"),
+             *((VisitedDedup(),) if dedup else ()),
+             CSRIndexJoin() if use_index else ScanHashJoin(),
+             EarlyMaterialize(rows=True),
+             AppendUnionAll("rows")),
+        finisher=ProjectRows(tuple(out_cols)),
+        caps=caps, max_depth=max_depth)
+
+
+def trecursive_rewrite_plan(caps: EngineCaps, max_depth: int,
+                            out_cols: Tuple[str, ...], dedup: bool = True,
+                            direction: str = "outbound") -> Pipeline:
+    """Exp-3 rewriting of the tuple engine: the CTE carries only (id, to);
+    payloads come back through ONE top-level hash join on ``id``."""
+    slim = trecursive_plan(caps, max_depth, ("id",), dedup, direction)
+    return dataclasses.replace(
+        slim, name="TRecursiveRewrite",
+        finisher=TopLevelJoin(tuple(out_cols), inner=slim.finisher))
+
+
+def rowstore_rewrite_plan(caps: EngineCaps, max_depth: int,
+                          out_cols: Tuple[str, ...], dedup: bool = True,
+                          use_index: bool = False,
+                          direction: str = "outbound") -> Pipeline:
+    """Exp-3 rewriting on the row store: the slim CTE still gathers full
+    rows per level AND the top-level join gathers them again — the rewrite
+    cannot rescue a heap table."""
+    slim = rowstore_plan(caps, max_depth, ("id",), dedup, use_index,
+                         direction)
+    return dataclasses.replace(
+        slim, name="RecursiveRewrite",
+        finisher=TopLevelJoin(tuple(out_cols), inner=slim.finisher,
+                              use_rows=True))
+
+
+# ---------------------------------------------------------------------------
+# legacy function API — thin wrappers over the pipelines
+# ---------------------------------------------------------------------------
+
+def _columnar_ctx(table: ColumnTable, csr: CSRIndex) -> Context:
+    return Context(table=table, rows=None, csr=csr,
+                   join_src=table.column("from"),
+                   join_dst=table.column("to"))
+
+
+def _row_ctx(rt: RowTable, csr: CSRIndex) -> Context:
+    return Context(table=None, rows=rt, csr=csr,
+                   join_src=rt.column("from").astype("int32"),
+                   join_dst=rt.column("to").astype("int32"))
+
+
+def precursive_bfs(table: ColumnTable, csr: CSRIndex, root,
                    *, caps: EngineCaps, max_depth: int,
                    out_cols: tuple[str, ...], dedup: bool = True,
                    expand_fn: Callable | None = None) -> BFSResult:
-    """Positional BFS with late materialization.
-
-    Per level the engine touches exactly one value column (``to``) to turn
-    edge positions into target vertices; everything else is positions.  The
-    single materialize happens after the fixed point.
-    """
-    expand = expand_fn or expand_frontier
-    e = table.num_rows
-    to_col = table.column("to")
-    nv = csr.num_vertices
-
-    frontier = _seed_block(table.column("from"), root, caps.frontier, e)
-    result = jnp.full((caps.result,), e, jnp.int32)
-    result, rcount, roverflow = append_block(result, jnp.zeros((), jnp.int32),
-                                             frontier)
-    visited = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)].set(True)
-
-    def cond(state):
-        frontier, _, _, visited, depth, _ = state
-        return (frontier.count > 0) & (depth < max_depth)
-
-    def body(state):
-        frontier, result, rcount, visited, depth, overflow = state
-        fvalid = frontier.valid_mask()
-        # the ONLY per-level value read: positions -> target vertices
-        targets = jnp.where(fvalid,
-                            to_col[jnp.minimum(frontier.positions, e - 1)], -1)
-        if dedup:
-            keep, visited = dedup_targets(targets, fvalid, visited)
-        else:
-            keep = fvalid
-        targets = jnp.where(keep, targets, -1)
-        epos, total, ovf = expand(csr, targets, keep, caps.frontier)
-        nxt = PosBlock(epos, total)
-        result, rcount, ovf2 = append_block(result, rcount, nxt)
-        return (nxt, result, rcount, visited, depth + 1,
-                overflow | ovf | ovf2)
-
-    state = (frontier, result, rcount, visited, jnp.zeros((), jnp.int32),
-             roverflow)
-    frontier, result, rcount, visited, depth, overflow = jax.lax.while_loop(
-        cond, body, state)
-
-    block = PosBlock(result, rcount)
-    values = table.take(block.positions, out_cols)     # the late materialize
-    return BFSResult(values, block.positions, rcount, depth, overflow)
+    """Positional BFS with late materialization (Fig. 4)."""
+    plan = precursive_plan(caps, max_depth, out_cols, dedup,
+                           expand_fn=expand_fn)
+    return execute(plan, _columnar_ctx(table, csr), root, csr.num_vertices)
 
 
-# ---------------------------------------------------------------------------
-# TRecursive — tuple blocks over columnar storage (early materialization)
-# ---------------------------------------------------------------------------
-
-def _append_values(bufs, count, vals, block_count, cap_r):
-    cap_f = next(iter(vals.values())).shape[0]
-    slots = count + jnp.arange(cap_f, dtype=jnp.int32)
-    live = (jnp.arange(cap_f, dtype=jnp.int32) < block_count) & (slots < cap_r)
-    safe = jnp.where(live, slots, cap_r)
-    out = {}
-    for k, buf in bufs.items():
-        v = vals[k]
-        mask = live.reshape(live.shape + (1,) * (v.ndim - 1))
-        out[k] = buf.at[safe].set(jnp.where(mask, v, 0), mode="drop")
-    new_count = jnp.minimum(count + block_count, cap_r)
-    return out, new_count, (count + block_count) > cap_r
-
-
-@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
-                                             "dedup"))
-def trecursive_bfs(table: ColumnTable, csr: CSRIndex, root: jax.Array,
+def trecursive_bfs(table: ColumnTable, csr: CSRIndex, root,
                    *, caps: EngineCaps, max_depth: int,
-                   out_cols: tuple[str, ...], dedup: bool = True) -> BFSResult:
-    """Tuple-based BFS: the recursion carries fully materialized tuples.
-
-    Per level, the join output is immediately materialized into ALL
-    ``out_cols`` (the paper's Fig. 3 plan: Join over Materialize) — (3+N)
-    column gathers per level instead of PRecursive's one.
-    """
-    e = table.num_rows
-    nv = csr.num_vertices
-
-    seed = _seed_block(table.column("from"), root, caps.frontier, e)
-    carry_cols = tuple(dict.fromkeys(out_cols + ("to",)))  # 'to' drives join
-    seed_vals = table.take(seed.positions, carry_cols)      # early materialize
-
-    rbufs = {k: jnp.zeros((caps.result,) + v.shape[1:], v.dtype)
-             for k, v in seed_vals.items() if k in out_cols}
-    rbufs, rcount, rovf = _append_values(
-        rbufs, jnp.zeros((), jnp.int32),
-        {k: seed_vals[k] for k in rbufs}, seed.count, caps.result)
-    visited = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)].set(True)
-
-    def cond(state):
-        _, fcount, _, _, visited, depth, _ = state
-        return (fcount > 0) & (depth < max_depth)
-
-    def body(state):
-        fvals, fcount, rbufs, rcount, visited, depth, overflow = state
-        fvalid = jnp.arange(caps.frontier, dtype=jnp.int32) < fcount
-        targets = jnp.where(fvalid, fvals["to"], -1)   # from the tuple block
-        if dedup:
-            keep, visited = dedup_targets(targets, fvalid, visited)
-        else:
-            keep = fvalid
-        targets = jnp.where(keep, targets, -1)
-        epos, total, ovf = expand_frontier(csr, targets, keep, caps.frontier)
-        nxt_vals = table.take(epos, carry_cols)         # early materialize
-        rbufs2, rcount2, ovf2 = _append_values(
-            rbufs, rcount, {k: nxt_vals[k] for k in rbufs}, total, caps.result)
-        return (nxt_vals, total, rbufs2, rcount2, visited, depth + 1,
-                overflow | ovf | ovf2)
-
-    state = (seed_vals, seed.count, rbufs, rcount, visited,
-             jnp.zeros((), jnp.int32), rovf)
-    fvals, fcount, rbufs, rcount, visited, depth, overflow = \
-        jax.lax.while_loop(cond, body, state)
-
-    return BFSResult({k: rbufs[k] for k in out_cols},
-                     jnp.full((caps.result,), -1, jnp.int32),
-                     rcount, depth, overflow)
+                   out_cols: tuple[str, ...], dedup: bool = True
+                   ) -> BFSResult:
+    """Tuple-based BFS: the recursion carries materialized tuples (Fig. 3)."""
+    plan = trecursive_plan(caps, max_depth, out_cols, dedup)
+    return execute(plan, _columnar_ctx(table, csr), root, csr.num_vertices)
 
 
-# ---------------------------------------------------------------------------
-# Row-store emulation (PostgreSQL / PostgreSQL+index baselines)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
-                                             "dedup", "use_index"))
-def rowstore_bfs(rt: RowTable, csr: CSRIndex, root: jax.Array,
+def rowstore_bfs(rt: RowTable, csr: CSRIndex, root,
                  *, caps: EngineCaps, max_depth: int,
                  out_cols: tuple[str, ...], dedup: bool = True,
                  use_index: bool = False) -> BFSResult:
-    """Row-store BFS.  ``use_index=False`` = hash-join-by-scan (PostgreSQL
-    default): every level scans the full interleaved table to probe the
-    frontier's vertex set.  ``use_index=True`` = index join via CSR, but row
-    gathers still read full rows (heap pages)."""
-    e = rt.num_rows
-    nv = csr.num_vertices
-    from_col = rt.column("from")           # strided: drags full rows along
-    to_slot, width = rt.slot("to"), rt.width
-
-    seed = compact_mask(from_col == root, caps.frontier, e)
-    seed_rows = rt.take_rows(seed.positions)            # full-width gather
-
-    rbuf = jnp.zeros((caps.result, width), jnp.float32)
-    rbufs, rcount, rovf = _append_values({"rows": rbuf},
-                                         jnp.zeros((), jnp.int32),
-                                         {"rows": seed_rows}, seed.count,
-                                         caps.result)
-    visited = jnp.zeros((nv,), bool).at[jnp.clip(root, 0, nv - 1)].set(True)
-
-    def cond(state):
-        _, fcount, _, _, visited, depth, _ = state
-        return (fcount > 0) & (depth < max_depth)
-
-    def body(state):
-        frows, fcount, rbufs, rcount, visited, depth, overflow = state
-        fvalid = jnp.arange(caps.frontier, dtype=jnp.int32) < fcount
-        targets = jnp.where(fvalid, frows[:, to_slot].astype(jnp.int32), -1)
-        if dedup:
-            keep, visited = dedup_targets(targets, fvalid, visited)
-        else:
-            keep = fvalid
-        targets = jnp.where(keep, targets, -1)
-        if use_index:
-            epos, total, ovf = expand_frontier(csr, targets, keep,
-                                               caps.frontier)
-            nxt = PosBlock(epos, total)
-        else:
-            # hash-join emulation: build the frontier's vertex set, then SCAN
-            # the whole table probing it (row-store: the scan touches every
-            # byte of every row, not just `from`).
-            probe = jnp.zeros((nv,), bool).at[
-                jnp.clip(targets, 0, nv - 1)].set(keep, mode="drop")
-            scan_from = from_col.astype(jnp.int32)       # full-table read
-            hit = probe[jnp.clip(scan_from, 0, nv - 1)] & (scan_from >= 0)
-            nxt = compact_mask(hit, caps.frontier, e)
-            ovf = jnp.sum(hit, dtype=jnp.int32) > caps.frontier
-            total = nxt.count
-        nxt_rows = rt.take_rows(nxt.positions)           # full-width gather
-        rbufs2, rcount2, ovf2 = _append_values(rbufs, rcount,
-                                               {"rows": nxt_rows}, total,
-                                               caps.result)
-        return (nxt_rows, total, rbufs2, rcount2, visited, depth + 1,
-                overflow | ovf | ovf2)
-
-    state = (seed_rows, seed.count, rbufs, rcount, visited,
-             jnp.zeros((), jnp.int32), rovf)
-    frows, fcount, rbufs, rcount, visited, depth, overflow = \
-        jax.lax.while_loop(cond, body, state)
-
-    values = rt.project(rbufs["rows"], out_cols)
-    return BFSResult(values, jnp.full((caps.result,), -1, jnp.int32),
-                     rcount, depth, overflow)
+    """Row-store BFS (PostgreSQL / PostgreSQL+index emulation)."""
+    plan = rowstore_plan(caps, max_depth, out_cols, dedup, use_index)
+    return execute(plan, _row_ctx(rt, csr), root, csr.num_vertices)
 
 
-# ---------------------------------------------------------------------------
-# Experiment-3 rewrites: slim recursive core + one top-level join on id
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
-                                             "dedup"))
-def trecursive_rewrite_bfs(table: ColumnTable, csr: CSRIndex, root: jax.Array,
+def trecursive_rewrite_bfs(table: ColumnTable, csr: CSRIndex, root,
                            *, caps: EngineCaps, max_depth: int,
                            out_cols: tuple[str, ...], dedup: bool = True
                            ) -> BFSResult:
-    """The paper's Exp-3 rewriting for the tuple engine: the CTE carries only
-    (id, to); payload columns are joined back once at the top level via a
-    hash table on ``id`` (realized as an inverse-permutation probe array)."""
-    slim = trecursive_bfs(table, csr, root, caps=caps, max_depth=max_depth,
-                          out_cols=("id",), dedup=dedup)
-    e = table.num_rows
-    id_col = table.column("id")
-    # hash build: id -> position (ids are a permutation of positions)
-    probe = jnp.zeros((e,), jnp.int32).at[id_col].set(
-        jnp.arange(e, dtype=jnp.int32), mode="drop")
-    live = jnp.arange(caps.result, dtype=jnp.int32) < slim.count
-    ids = jnp.where(live, slim.values["id"].astype(jnp.int32), -1)
-    pos = jnp.where(live, probe[jnp.clip(ids, 0, e - 1)], e)
-    values = table.take(pos, out_cols)                   # single wide gather
-    return BFSResult(values, pos, slim.count, slim.depth, slim.overflow)
+    """Exp-3 rewrite of the tuple engine (slim CTE + one top-level join)."""
+    plan = trecursive_rewrite_plan(caps, max_depth, out_cols, dedup)
+    return execute(plan, _columnar_ctx(table, csr), root, csr.num_vertices)
 
 
-@functools.partial(jax.jit, static_argnames=("caps", "max_depth", "out_cols",
-                                             "dedup", "use_index"))
-def rowstore_rewrite_bfs(rt: RowTable, csr: CSRIndex, root: jax.Array,
+def rowstore_rewrite_bfs(rt: RowTable, csr: CSRIndex, root,
                          *, caps: EngineCaps, max_depth: int,
                          out_cols: tuple[str, ...], dedup: bool = True,
                          use_index: bool = False) -> BFSResult:
-    """Exp-3 rewriting on the row-store: the slim CTE still gathers full rows
-    (heap pages) per level, and the top-level join gathers them again —
-    demonstrating the paper's point that the rewrite cannot rescue a
-    row-store."""
-    slim = rowstore_bfs(rt, csr, root, caps=caps, max_depth=max_depth,
-                        out_cols=("id",), dedup=dedup, use_index=use_index)
-    e = rt.num_rows
-    id_col = rt.column("id").astype(jnp.int32)           # strided scan
-    probe = jnp.zeros((e,), jnp.int32).at[jnp.clip(id_col, 0, e - 1)].set(
-        jnp.arange(e, dtype=jnp.int32), mode="drop")
-    live = jnp.arange(caps.result, dtype=jnp.int32) < slim.count
-    ids = jnp.where(live, slim.values["id"].astype(jnp.int32), -1)
-    pos = jnp.where(live, probe[jnp.clip(ids, 0, e - 1)], e)
-    rows = rt.take_rows(pos)                             # full rows again
-    values = rt.project(rows, out_cols)
-    return BFSResult(values, pos, slim.count, slim.depth, slim.overflow)
+    """Exp-3 rewrite on the row store (still reads full heap rows twice)."""
+    plan = rowstore_rewrite_plan(caps, max_depth, out_cols, dedup, use_index)
+    return execute(plan, _row_ctx(rt, csr), root, csr.num_vertices)

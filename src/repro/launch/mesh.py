@@ -11,16 +11,23 @@ from __future__ import annotations
 import jax
 
 
+def _build_mesh(shape: tuple, axes: tuple):
+    if hasattr(jax.sharding, "AxisType"):        # jax >= 0.5
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    if hasattr(jax, "make_mesh"):                # 0.4.35 .. 0.4.x
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils      # older fallback
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _build_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, elastic re-scale)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _build_mesh(tuple(shape), tuple(axes))
