@@ -1,0 +1,71 @@
+"""Planner experiment: cost-based engine selection vs hand-forced engines.
+
+For each paper-listing query shape (Listings 1.1/1.2/1.3 — traversal
+columns, carried payloads, the Exp-3 rewrite) the planner parses the SQL,
+prices every legal engine against the dataset statistics and picks one —
+then we time its pick against EVERY forced engine.  The reported
+``vs_best_forced`` ratio is the planner's regret: 1.00 means it picked the
+fastest engine outright; the acceptance bar is <= 1.2x.
+
+With ``--kernel`` (``include_kernel=True``) the Pallas ``frontier_expand``
+kernel — plugged into ``CSRIndexJoin(expand_fn=)`` — is additionally timed
+against the stock XLA expansion and offered to the planner as a physical
+alternative (costed with a backend-dependent factor: cheap on TPU, interpret
+mode elsewhere).
+"""
+from __future__ import annotations
+
+from repro.core.engine import run_query
+from repro.planner import paper_listing, plan
+
+from .bench_util import emit, level_caps, time_call, tree_dataset
+
+LISTINGS = (1, 2, 3)
+
+
+def run(num_vertices: int = 200_000, height: int = 60, depths=(5, 10),
+        payloads: int = 16, repeat: int = 5,
+        include_kernel: bool = False) -> dict:
+    ds = tree_dataset(num_vertices, height, payload_cols=payloads)
+    caps = level_caps(num_vertices, height)
+    out = {}
+    for depth in depths:
+        for listing in LISTINGS:
+            n_pay = 0 if listing == 1 else payloads
+            sql = paper_listing(listing, root=0, depth=depth,
+                                payload_cols=n_pay)
+            report = plan(sql, ds, caps=caps)
+            best = report.best
+            # one measurement per candidate through the same run_query
+            # path; the planner's time IS its pick's measurement, so the
+            # ratio is pure selection regret, not duplicate-timing noise
+            forced = {c.label: time_call(run_query, c.query, ds, 0,
+                                         repeat=repeat)
+                      for c in report.ranked if not c.use_kernel}
+            best_forced = min(forced, key=forced.get)
+            us_planner = forced[best.label]
+            ratio = us_planner / max(forced[best_forced], 1e-9)
+            out[(listing, depth)] = (best.label, ratio)
+            emit(f"planner/listing{listing}/d{depth}", us_planner,
+                 f"chose={best.label},best_forced={best_forced},"
+                 f"vs_best_forced={ratio:.2f}")
+
+    if include_kernel:
+        depth = depths[0]
+        sql = paper_listing(1, root=0, depth=depth)
+        report = plan(sql, ds, caps=caps, include_kernel=True)
+        kern = next(c for c in report.ranked if c.use_kernel)
+        stock = next(c for c in report.ranked
+                     if c.engine == "precursive" and not c.use_kernel)
+        us_kern = time_call(kern.run, ds, 0, repeat=repeat)
+        us_stock = time_call(stock.run, ds, 0, repeat=repeat)
+        rank = [c.label for c in report.ranked].index(kern.label) + 1
+        emit(f"planner/kernel_expand/d{depth}", us_kern,
+             f"vs_xla_expand={us_kern / max(us_stock, 1e-9):.2f},"
+             f"planner_rank={rank}/{len(report.ranked)}")
+        out[("kernel", depth)] = us_kern
+    return out
+
+
+if __name__ == "__main__":
+    run()

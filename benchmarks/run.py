@@ -23,11 +23,15 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write emitted rows as JSON (e.g. BENCH_bfs.json)")
     ap.add_argument("--only", default=None,
-                    help="comma list: exp1,exp2,exp3,claims,kern")
+                    help="comma list: exp1,exp2,exp3,claims,kern,planner")
+    ap.add_argument("--kernel", action="store_true",
+                    help="benchmark the Pallas frontier_expand kernel via "
+                         "CSRIndexJoin(expand_fn=) and let the planner "
+                         "cost it as a physical alternative")
     args = ap.parse_args(argv)
 
     from . import (bench_util, exp1_bfs, exp2_payload, exp3_rewrite,
-                   exp_claims, kernels_bench)
+                   exp_claims, exp_planner, kernels_bench)
 
     bench_util.RESULTS.clear()     # fresh per invocation (notebook reuse)
     only = set(args.only.split(",")) if args.only else None
@@ -57,6 +61,13 @@ def main(argv=None) -> None:
                            repeat=3)
         else:
             exp_claims.run()
+    if not only or "planner" in only:
+        if args.quick:
+            exp_planner.run(num_vertices=20_000, height=10, depths=(4, 8),
+                            payloads=16, repeat=3,
+                            include_kernel=args.kernel)
+        else:
+            exp_planner.run(include_kernel=args.kernel)
     if not only or "kern" in only:
         kernels_bench.run(repeat=3 if args.quick else 5)
 

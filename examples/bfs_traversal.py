@@ -1,8 +1,10 @@
-"""End-to-end driver for the paper's engine: the single-device depth sweep,
-vmap-BATCHED multi-root serving (one XLA dispatch answering many users'
-roots), direction-aware traversal (outbound / inbound / both), and the
-DISTRIBUTED positional BFS on 8 (placeholder) devices — the pattern that
-runs unchanged on the 512-chip production mesh.
+"""End-to-end driver for the paper's engine: the PLANNER answering a SQL
+``WITH RECURSIVE`` query without an engine name (cost-based selection over
+all nine pipelines + EXPLAIN), the single-device depth sweep, vmap-BATCHED
+multi-root serving (one XLA dispatch answering many users' roots),
+direction-aware traversal (outbound / inbound / both), and the DISTRIBUTED
+positional BFS on 8 (placeholder) devices — the pattern that runs unchanged
+on the 512-chip production mesh.
 
     PYTHONPATH=src python examples/bfs_traversal.py
 """
@@ -19,9 +21,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
 from repro.core import EngineCaps                            # noqa: E402
 from repro.core.distributed_bfs import make_distributed_pbfs  # noqa: E402
 from repro.core.engine import (Dataset, RecursiveQuery,      # noqa: E402
-                               plan_repr, run_query, run_query_batch)
+                               plan_and_run, plan_repr, run_query,
+                               run_query_batch)
 from repro.data.treegen import TreeSpec, make_edge_table     # noqa: E402
 from repro.launch.mesh import make_mesh                      # noqa: E402
+from repro.planner import paper_listing, plan                # noqa: E402
 
 
 def main():
@@ -30,7 +34,23 @@ def main():
     ds = Dataset.prepare(table, spec.num_vertices)
     caps = EngineCaps(frontier=1 << 16, result=1 << 18)
 
-    print("=== single-device PRecursive, depth sweep ===")
+    print("=== the planner: SQL in, engine choice out ===")
+    sql = paper_listing(2, root=0, depth=10, payload_cols=8)
+    print(sql)
+    report = plan(sql, ds, caps=caps)
+    print("ranked:", ", ".join(f"{c.label}~{c.cost.est_us:.0f}us"
+                               for c in report.ranked[:4]), "...")
+    r = jax.block_until_ready(plan_and_run(sql, ds, caps=caps))
+    t0 = time.perf_counter()
+    r = jax.block_until_ready(plan_and_run(sql, ds, caps=caps))
+    print(f"chose {report.best.label}: {1e3*(time.perf_counter()-t0):7.2f} "
+          f"ms  rows={int(r.count)}  depth column 0..",
+          int(np.asarray(r.values['depth']).max()), sep="")
+    filt = plan_and_run(sql + " WHERE depth <= 3", ds, caps=caps)
+    print(f"with WHERE depth <= 3 (pushed into the recursion bound): "
+          f"rows={int(filt.count)}")
+
+    print("\n=== single-device PRecursive, depth sweep ===")
     for depth in (5, 10, 20, 40):
         q = RecursiveQuery("precursive", depth, 8, caps)
         r = jax.block_until_ready(run_query(q, ds, 0))

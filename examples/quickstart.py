@@ -35,6 +35,15 @@ def main():
         print(f"{engine:16s} {dt*1e3:8.2f} ms   rows={int(r.count):6d} "
               f"levels={int(r.depth)}")
 
+    # or skip the engine name entirely: the planner prices every pipeline
+    # against the graph's statistics and picks one (see docs/planner.md)
+    from repro.planner import paper_listing, plan
+    report = plan(paper_listing(2, root=0, depth=10, payload_cols=4),
+                  ds, caps=caps)
+    print("\nplanner ranking: "
+          + ", ".join(f"{c.label}~{c.cost.est_us:.0f}us"
+                      for c in report.ranked[:3]) + ", ...")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + the quick benchmark profile.
+#
+#   scripts/check.sh
+#
+# Fails if any tier-1 test fails (pytest -x aborts on the first regression)
+# or if the quick benchmark run cannot complete; writes BENCH_bfs.json so
+# the perf trajectory (incl. the planner's vs_best_forced regret per cell)
+# can be compared across PRs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== quick benchmarks -> BENCH_bfs.json =="
+python -m benchmarks.run --quick --json BENCH_bfs.json "$@"

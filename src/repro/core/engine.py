@@ -25,7 +25,7 @@ queries (the multi-tenant fan-out the ROADMAP targets).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Literal
+from typing import Callable, Dict, Literal
 
 import jax.numpy as jnp
 
@@ -71,7 +71,7 @@ class RecursiveQuery:
 # plan-builder registry: engine name -> RecursiveQuery -> Pipeline
 # ---------------------------------------------------------------------------
 
-PLAN_BUILDERS: Dict[str, object] = {
+PLAN_BUILDERS: Dict[str, Callable[[RecursiveQuery], Pipeline]] = {
     "precursive": lambda q: precursive_plan(
         q.caps, q.max_depth, q.out_cols, q.dedup, q.direction),
     "trecursive": lambda q: trecursive_plan(
@@ -129,6 +129,7 @@ class Dataset:
     both_src: object = None                # (2E,) concat(from, to)
     both_dst: object = None                # (2E,) concat(to, from)
     both_csr: CSRIndex | None = None
+    stats_cache: dict | None = None        # direction -> GraphStats
 
     @classmethod
     def prepare(cls, table: ColumnTable, num_vertices: int) -> "Dataset":
@@ -167,6 +168,20 @@ class Dataset:
                        join_src=self.table.column("from"),
                        join_dst=self.table.column("to"))
 
+    def stats(self, direction: str = "outbound"):
+        """Planner statistics hook: per-direction
+        :class:`~repro.planner.stats.GraphStats` (degree histogram, sampled
+        frontier-growth profile, density/shape flags), computed once and
+        cached on the instance like the direction views."""
+        cache = self.stats_cache
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "stats_cache", cache)
+        if direction not in cache:
+            from repro.planner.stats import compute_stats
+            cache[direction] = compute_stats(self, direction)
+        return cache[direction]
+
 
 def run_query(q: RecursiveQuery, ds: Dataset, root: int) -> BFSResult:
     """Execute one query through the shared fixed-point driver."""
@@ -184,6 +199,26 @@ def run_query_batch(q: RecursiveQuery, ds: Dataset, roots) -> BFSResult:
     roots = jnp.asarray(roots, jnp.int32)
     return execute_batch(plan, ds.context(q.direction), roots,
                          ds.num_vertices)
+
+
+def plan_and_run(sql_or_ast, ds: Dataset, roots=None, **kwargs) -> BFSResult:
+    """Answer a recursive query WITHOUT an engine name: parse the minimal
+    ``WITH RECURSIVE`` dialect (or take a planner AST / LogicalQuery),
+    price every legal engine against ``ds.stats()``, and execute the
+    cheapest through the same ``PLAN_BUILDERS`` path ``run_query`` uses.
+
+    ``roots`` is one root (scalar) or a sequence (one vmap-batched
+    dispatch).  See :func:`repro.planner.plan_and_run` for keyword options
+    (``caps``, ``include_kernel``, ``default_max_depth``)."""
+    from repro.planner import plan_and_run as _impl
+    return _impl(sql_or_ast, ds, roots, **kwargs)
+
+
+def explain(sql_or_ast, ds: Dataset, **kwargs) -> str:
+    """EXPLAIN the query: the ranked candidate engines with per-operator
+    estimated rows/bytes (see :mod:`repro.planner.explain`)."""
+    from repro.planner import explain as _impl
+    return _impl(sql_or_ast, ds, **kwargs)
 
 
 def plan_repr(engine: str, max_depth: int, payload_cols: int,

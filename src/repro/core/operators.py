@@ -66,7 +66,8 @@ from .table import ColumnTable, RowTable
 
 __all__ = [
     "DIRECTIONS", "check_direction",
-    "EngineCaps", "BFSResult", "Context", "TraversalState", "Operator",
+    "EngineCaps", "CostEnv", "OpCost",
+    "BFSResult", "Context", "TraversalState", "Operator",
     "Seed", "ReadTargets", "VisitedDedup", "CSRIndexJoin", "ScanHashJoin",
     "DenseBitmapStep", "HybridStep", "EarlyMaterialize", "AppendUnionAll",
     "ShardTargetExchange", "LateMaterialize", "EmitTuples", "ProjectRows",
@@ -90,6 +91,47 @@ class EngineCaps(NamedTuple):
 
     frontier: int   # max edges emitted by a single BFS level
     result: int     # max edges in the full result
+
+
+class CostEnv(NamedTuple):
+    """One level's cardinalities + storage widths, fed to each operator's
+    :meth:`Operator.estimate` by the planner's cost model.  Cardinalities
+    come from sampled graph statistics (:mod:`repro.planner.stats`); widths
+    from the dataset's actual column layout.  For finishers the planner sets
+    ``frontier_rows``/``emitted_rows`` to the *total* result cardinality.
+
+    The live cardinalities drive output-row estimates; the BYTE estimates of
+    block operators are driven by ``frontier_cap``/``result_cap`` instead —
+    under the static-shape padding convention every per-level op touches its
+    whole fixed-capacity buffer, so capacity (not the live count) is what
+    the memory system pays.  That asymmetry is exactly why a dense O(E)
+    level can beat a "cheaper" positional level on small graphs with
+    generous block sizes."""
+
+    frontier_rows: float       # F: live frontier entries entering the level
+    unique_rows: float         # U: frontier rows surviving vertex dedup
+    emitted_rows: float        # M: edge rows the level's join emits
+    num_vertices: int          # V
+    num_edges: int             # EJ: join-space edge count (2E for 'both')
+    frontier_cap: int          # static per-level block capacity
+    result_cap: int            # static result buffer capacity
+    row_bytes: int             # full interleaved row width (bytes/row)
+    col_bytes: Any             # Mapping[str, int]: bytes/row per column
+    kernel_factor: float = 1.0  # relative cost of a plugged expand kernel
+
+
+class OpCost(NamedTuple):
+    """One operator's per-level estimate: output cardinality + bytes moved
+    through the memory system (the ranking currency of the cost model)."""
+
+    rows: float
+    bytes: float
+
+
+def _cols_bytes(env: CostEnv, cols) -> float:
+    """Bytes/row of a materialized tuple over ``cols`` (unknown synthetic
+    columns such as ``__next__`` count as one int32)."""
+    return float(sum(env.col_bytes.get(c, 4) for c in cols))
 
 
 class BFSResult(NamedTuple):
@@ -154,8 +196,8 @@ def dedup_targets(targets: jax.Array, valid: jax.Array, visited: jax.Array
     ticket = jnp.full((nv,), cap, jnp.int32).at[safe].min(
         jnp.where(fresh, slots, cap), mode="drop")
     keep = fresh & (ticket[safe] == slots)
-    new_visited = visited.at[safe].set(jnp.where(keep, True, visited[safe]),
-                                       mode="drop")
+    # scatter-max: dropped duplicates must not race the winner's True write
+    new_visited = visited.at[safe].max(keep, mode="drop")
     return keep, new_visited
 
 
@@ -239,6 +281,11 @@ class Operator:
     def describe(self) -> str:
         return type(self).__name__
 
+    def estimate(self, env: CostEnv) -> OpCost:
+        """Per-level cost annotation: rows flowing out of this operator and
+        bytes it drags through the memory system (overridden per class)."""
+        return OpCost(env.frontier_rows, 0.0)
+
 
 @dataclasses.dataclass(frozen=True)
 class Seed(Operator):
@@ -296,6 +343,18 @@ class Seed(Operator):
             return "SeedBitmap[$root]"
         return f"Filter[{self.label} = $root] -> PosBlock"
 
+    def estimate(self, env):
+        if self.kind == "dense":             # set one bit in a (V,) bitmap
+            return OpCost(env.frontier_rows, float(env.num_vertices))
+        if self.kind == "vertices":
+            return OpCost(env.frontier_rows, 4.0)
+        if self.scan == "rows":              # strided scan drags full rows
+            return OpCost(env.frontier_rows,
+                          float(env.num_edges) * env.row_bytes)
+        # columnar filter scan + compaction into the position block
+        return OpCost(env.frontier_rows,
+                      float(env.num_edges) * 4 + env.frontier_cap * 4.0)
+
 
 @dataclasses.dataclass(frozen=True)
 class ReadTargets(Operator):
@@ -324,6 +383,15 @@ class ReadTargets(Operator):
                 "rows": "row block"}[self.source]
         return f"ReadCol[{self.col}]({what})"
 
+    def estimate(self, env):
+        cap = float(env.frontier_cap)
+        if self.source == "pos":     # positions + ONE column gather
+            return OpCost(env.frontier_rows, cap * 8.0)
+        if self.source == "vals":    # the column is already materialized
+            return OpCost(env.frontier_rows, cap * 4.0)
+        # strided read over the padded row block
+        return OpCost(env.frontier_rows, cap * env.row_bytes)
+
 
 @dataclasses.dataclass(frozen=True)
 class VisitedDedup(Operator):
@@ -338,6 +406,12 @@ class VisitedDedup(Operator):
 
     def describe(self):
         return "VisitedDedup[bitmap]"
+
+    def estimate(self, env):
+        # scatter-argmin ticket over the padded block + the (V,) ticket /
+        # visited arrays rebuilt-or-updated every level
+        return OpCost(env.unique_rows,
+                      env.frontier_cap * 12.0 + env.num_vertices * 5.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -358,6 +432,14 @@ class CSRIndexJoin(Operator):
     def describe(self):
         return "IndexJoin[CSR(join_src)](CTE, edges)"
 
+    def estimate(self, env):
+        # two-phase expansion over the padded block: degrees + cumsum +
+        # searchsorted inversion + perm gather, all at capacity
+        b = env.frontier_cap * 16.0 + env.unique_rows * 8.0
+        if self.expand_fn is not None:
+            b *= env.kernel_factor
+        return OpCost(env.emitted_rows, b)
+
 
 @dataclasses.dataclass(frozen=True)
 class ScanHashJoin(Operator):
@@ -370,7 +452,7 @@ class ScanHashJoin(Operator):
         e = ctx.rows.num_rows
         cap = state.frontier_pos.shape[0]
         probe = jnp.zeros((nv,), bool).at[
-            jnp.clip(state.targets, 0, nv - 1)].set(state.keep, mode="drop")
+            jnp.clip(state.targets, 0, nv - 1)].max(state.keep, mode="drop")
         scan_from = ctx.rows.column("from").astype(jnp.int32)  # full scan
         hit = probe[jnp.clip(scan_from, 0, nv - 1)] & (scan_from >= 0)
         blk = compact_mask(hit, cap, e)
@@ -381,6 +463,12 @@ class ScanHashJoin(Operator):
 
     def describe(self):
         return "HashJoin[from = cte.to](Hash(cte), SeqScan(edges))"
+
+    def estimate(self, env):
+        # frontier hash build + a FULL heap scan probing it every level
+        return OpCost(env.emitted_rows,
+                      env.num_vertices * 1.0 + env.frontier_cap * 4.0
+                      + float(env.num_edges) * (env.row_bytes + 1.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -401,6 +489,12 @@ class DenseBitmapStep(Operator):
 
     def describe(self):
         return "BitmapStep[push: frontier bits -> edge mask]"
+
+    def estimate(self, env):
+        # O(E) masked scatter + bitmap updates, independent of frontier size
+        return OpCost(env.emitted_rows,
+                      float(env.num_edges) * 10.0 + float(env.num_vertices)
+                      * 3.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -429,8 +523,10 @@ class HybridStep(Operator):
         def dense_step(frontier, visited):
             fvalid = frontier.valid_mask()
             targets = to_col[jnp.minimum(frontier.positions, e - 1)]
+            # scatter-max: padded slots (clipped onto a real vertex) must
+            # never UNSET a vertex another slot legitimately reached
             tgt_v = jnp.zeros((nv,), bool).at[
-                jnp.clip(targets, 0, nv - 1)].set(fvalid, mode="drop")
+                jnp.clip(targets, 0, nv - 1)].max(fvalid, mode="drop")
             tgt_v = tgt_v & ~visited
             visited = visited | tgt_v
             hit = tgt_v[jnp.clip(from_col, 0, nv - 1)]
@@ -457,6 +553,15 @@ class HybridStep(Operator):
     def describe(self):
         return (f"DirectionOpt[<{self.switch_frac:g}V: IndexJoin[CSR] | "
                 f"else BitmapStep]")
+
+    def estimate(self, env):
+        # the sparse branch is the positional loop body at capacity; the
+        # dense branch is one bitmap push; emitted-mask upkeep either way
+        sparse = env.frontier_cap * 36.0 + env.num_vertices * 5.0
+        dense = float(env.num_edges) * 10.0 + float(env.num_vertices) * 3.0
+        threshold = max(1.0, env.num_vertices * self.switch_frac)
+        chosen = sparse if env.frontier_rows < threshold else dense
+        return OpCost(env.emitted_rows, chosen + env.frontier_cap * 5.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -494,6 +599,12 @@ class EarlyMaterialize(Operator):
         if self.rows:
             return "Materialize[* full rows](heap read)"
         return f"Materialize[{', '.join(self.cols)}](EVERY level)"
+
+    def estimate(self, env):
+        width = (env.row_bytes if self.rows
+                 else _cols_bytes(env, self.cols) + (4.0 if self.with_next
+                                                    else 0.0))
+        return OpCost(env.emitted_rows, env.frontier_cap * width)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -550,6 +661,12 @@ class AppendUnionAll(Operator):
     def describe(self):
         return "UnionAll[append working table]"
 
+    def estimate(self, env):
+        width = {"pos": 4.0, "rows": float(env.row_bytes)}.get(
+            self.rep, _cols_bytes(env, self.cols))
+        # appended block + the per-row depth tag, at block capacity
+        return OpCost(env.emitted_rows, env.frontier_cap * (width + 4.0))
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardTargetExchange(Operator):
@@ -578,6 +695,11 @@ class ShardTargetExchange(Operator):
     def describe(self):
         return f"AllGatherTargets[axis={self.axis!r}] -> VisitedDedup"
 
+    def estimate(self, env):
+        # one tiled all_gather of vertex ids + replicated dedup
+        return OpCost(env.unique_rows,
+                      env.frontier_cap * 18.0 + env.num_vertices * 5.0)
+
 
 # ---------------------------------------------------------------------------
 # finishers
@@ -599,6 +721,10 @@ class LateMaterialize:
         return (f"Materialize[{', '.join(self.cols)}]"
                 "  <- ONE late gather, after the fixed point")
 
+    def estimate(self, env):
+        return OpCost(env.frontier_rows,
+                      env.result_cap * (_cols_bytes(env, self.cols) + 4.0))
+
 
 @dataclasses.dataclass(frozen=True)
 class EmitTuples:
@@ -617,6 +743,9 @@ class EmitTuples:
     def describe(self):
         return f"Emit[{', '.join(self.cols)}](pre-materialized; positions=-1)"
 
+    def estimate(self, env):
+        return OpCost(env.frontier_rows, 0.0)   # already paid per level
+
 
 @dataclasses.dataclass(frozen=True)
 class ProjectRows:
@@ -634,6 +763,9 @@ class ProjectRows:
 
     def describe(self):
         return f"Project[{', '.join(self.cols)}](full rows)"
+
+    def estimate(self, env):
+        return OpCost(env.frontier_rows, env.result_cap * env.row_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -661,6 +793,12 @@ class CompactEmitted:
     def describe(self):
         return (f"Materialize[{', '.join(self.cols)}](Compact(emitted mask))"
                 "  <- ONE late gather")
+
+    def estimate(self, env):
+        return OpCost(env.frontier_rows,
+                      float(env.num_edges) * 2.0
+                      + env.result_cap * (_cols_bytes(env, self.cols)
+                                          + 4.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -702,6 +840,16 @@ class TopLevelJoin:
         return (f"HashJoin[id = cte.id](Hash(id -> pos), "
                 f"{self.inner.describe()})")
 
+    def estimate(self, env):
+        inner = self.inner.estimate(env)
+        cap_r = env.result_cap
+        if self.use_rows:     # strided id scan + full-row re-gather
+            b = float(env.num_edges) * env.row_bytes + cap_r * env.row_bytes
+        else:                 # probe-array build + ONE late gather
+            b = (float(env.num_edges) * 8.0
+                 + cap_r * (_cols_bytes(env, self.cols) + 4.0))
+        return OpCost(env.frontier_rows, inner.bytes + b)
+
 
 @dataclasses.dataclass(frozen=True)
 class RawPositions:
@@ -714,6 +862,9 @@ class RawPositions:
 
     def describe(self):
         return "RawPositions[] (caller materializes shard-locally)"
+
+    def estimate(self, env):
+        return OpCost(env.frontier_rows, 0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,27 @@
+"""Recursive-query planner: logical ``WITH RECURSIVE`` frontend, graph
+statistics, and cost-based engine selection over the operator algebra.
+
+The layers (one module each):
+
+* :mod:`repro.planner.ast`      — the logical query: a tiny AST + a parser
+  for a minimal SQL dialect (§5.1 Listings 1.1–1.3 all parse);
+* :mod:`repro.planner.stats`    — per-``Dataset`` degree histograms and
+  sampled frontier-growth profiles (cached on the Dataset);
+* :mod:`repro.planner.cost`     — prices a candidate pipeline by walking its
+  ACTUAL operator composition and summing per-operator estimates;
+* :mod:`repro.planner.optimize` — enumerates every legal engine (plus the
+  Pallas-kernel expansion), ranks, and executes the winner;
+* :mod:`repro.planner.explain`  — EXPLAIN with per-operator estimated rows
+  and bytes for every candidate.
+
+Entry points: :func:`plan_and_run` (also re-exported as
+``repro.core.engine.plan_and_run``), :func:`choose`, :func:`explain`.
+"""
+from .ast import (LogicalQuery, ParseError, RecursiveCTE,      # noqa: F401
+                  normalize, paper_listing, parse)
+from .cost import OpEstimate, PlanCost, pipeline_cost          # noqa: F401
+from .explain import explain, render_report                    # noqa: F401
+from .optimize import (KERNEL_LABEL, PhysicalChoice,           # noqa: F401
+                       PlannerReport, choose, default_caps,
+                       kernel_expand_fn, plan, plan_and_run)
+from .stats import GraphStats, compute_stats                   # noqa: F401

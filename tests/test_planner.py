@@ -1,0 +1,493 @@
+"""Planner subsystem: parser, statistics, cost-based selection, EXPLAIN.
+
+The load-bearing guarantees:
+
+* the planner-chosen pipeline returns results identical to EVERY forced
+  engine (hypothesis property over random graphs — not just trees);
+* the planner's execution path is bit-identical to ``run_query`` with the
+  engine it chose (same RecursiveQuery through the same PLAN_BUILDERS);
+* all three paper-listing query shapes are answered without an engine name;
+* ``EXPLAIN`` output is golden-snapshotted for the three listings and shows
+  per-operator cost estimates for every ENGINE_NAMES candidate;
+* ``depth`` is a real queryable output column and ``WHERE depth <= k`` is
+  pushed down into the recursion bound.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import EngineCaps
+from repro.core.engine import (ENGINE_NAMES, PLAN_BUILDERS, Dataset,
+                               RecursiveQuery, build_plan, explain,
+                               plan_and_run, positions_available, run_query)
+from repro.core.operators import Pipeline
+from repro.core.table import ColumnTable
+from repro.data.treegen import TreeSpec, make_edge_table
+from repro.planner import (ParseError, paper_listing, parse, plan,
+                           PlannerReport)
+
+CAPS = EngineCaps(frontier=2048, result=4096)
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture(scope="module")
+def golden_dataset():
+    spec = TreeSpec(num_vertices=3000, height=10, payload_cols=4, seed=11)
+    return Dataset.prepare(make_edge_table(spec), spec.num_vertices)
+
+
+def _ids(r):
+    return sorted(np.asarray(r.values["id"])[:int(r.count)].tolist())
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+
+def test_parse_paper_listings():
+    a1 = parse(paper_listing(1, root=7, depth=10))
+    assert a1.carried_cols == ("id", "from", "to", "name")
+    assert a1.carries_depth and a1.union_all and not a1.top_level_join
+    assert (a1.root, a1.max_depth, a1.direction) == (7, 10, "outbound")
+
+    a2 = parse(paper_listing(2, root=0, depth=5, payload_cols=3))
+    assert a2.carried_cols[-3:] == ("column1", "column2", "column3")
+
+    a3 = parse(paper_listing(3, root=0, depth=5))
+    assert a3.carried_cols == ("id", "to") and a3.top_level_join
+
+
+def test_parse_direction_and_union():
+    inbound = parse("""
+        WITH RECURSIVE t (id, "from", "to", depth) AS (
+          SELECT id, "from", "to", 0 FROM edges WHERE "to" = 5
+          UNION
+          SELECT e.id, e."from", e."to", t.depth + 1
+          FROM edges e JOIN t ON e."to" = t."from" WHERE t.depth < 4
+        ) SELECT * FROM t""")
+    assert inbound.direction == "inbound" and not inbound.union_all
+
+    both = parse("""
+        WITH RECURSIVE t (id, "from", "to") AS (
+          SELECT id, "from", "to" FROM edges WHERE "from" = 5
+          UNION
+          SELECT e.id, e."from", e."to" FROM edges e
+          JOIN t ON e."from" = t."to" OR e."to" = t."from"
+        ) SELECT * FROM t""")
+    assert both.direction == "both" and both.max_depth is None
+
+
+def test_parse_depth_bound_inclusive_vs_exclusive():
+    lt = parse(paper_listing(1, depth=6))
+    le = parse(paper_listing(1, depth=6).replace("t.depth < 6",
+                                                 "t.depth <= 6"))
+    assert lt.max_depth == 6 and le.max_depth == 7
+
+
+@pytest.mark.parametrize("bad, match", [
+    ("SELECT 1", "expected 'with'"),
+    ("WITH RECURSIVE t AS (SELECT id FROM edges WHERE \"from\" = 0 "
+     "UNION ALL SELECT e.id FROM edges e JOIN t ON e.name = t.id) "
+     "SELECT * FROM t", "join condition"),
+    ("WITH RECURSIVE t (id) AS (SELECT id FROM edges WHERE \"from\" = 0 "
+     "UNION ALL SELECT e.id FROM edges e JOIN t ON e.\"from\" = t.\"to\") "
+     "SELECT * FROM wrong", "outer SELECT"),
+])
+def test_parse_errors(bad, match):
+    with pytest.raises(ParseError, match=match):
+        parse(bad)
+
+
+def test_seed_predicate_must_match_join_direction():
+    with pytest.raises(ParseError, match="contradicts"):
+        parse("""
+            WITH RECURSIVE t (id) AS (
+              SELECT id FROM edges WHERE "to" = 0
+              UNION ALL
+              SELECT e.id FROM edges e JOIN t ON e."from" = t."to"
+            ) SELECT * FROM t""")
+
+
+# ---------------------------------------------------------------------------
+# statistics
+# ---------------------------------------------------------------------------
+
+def _edge_dataset(src, dst, num_vertices):
+    e = len(src)
+    t = ColumnTable.from_numpy({
+        "id": np.arange(e, dtype=np.int32),
+        "from": np.asarray(src, np.int32),
+        "to": np.asarray(dst, np.int32),
+        "name": np.zeros((e, 4), np.float32)})
+    return Dataset.prepare(t, num_vertices)
+
+
+def test_stats_tree_is_forest(golden_dataset):
+    st = golden_dataset.stats("outbound")
+    assert st.is_forest
+    assert st.num_edges == 2999 and st.num_vertices == 3000
+    assert sum(st.degree_histogram) > 0
+    assert st.level_edges and st.max_level_edges >= 1
+    # stats are cached per direction on the Dataset
+    assert golden_dataset.stats("outbound") is st
+
+
+def test_stats_ring_is_not_forest():
+    ds = _edge_dataset([0, 1, 2, 3], [1, 2, 3, 0], 4)
+    assert not ds.stats("outbound").is_forest
+
+
+def test_stats_diamond_is_not_forest():
+    # two paths into vertex 3: in-degree 2, acyclic
+    ds = _edge_dataset([0, 0, 1, 2], [1, 2, 3, 3], 4)
+    assert not ds.stats("outbound").is_forest
+
+
+# ---------------------------------------------------------------------------
+# plan_and_run on the three paper listings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("listing", [1, 2, 3])
+def test_listings_answered_without_engine_name(golden_dataset, listing):
+    ds = golden_dataset
+    n_pay = 0 if listing == 1 else 4
+    sql = paper_listing(listing, root=0, depth=7, payload_cols=n_pay)
+    report = plan(sql, ds, caps=CAPS)
+    assert isinstance(report, PlannerReport)
+    assert len(report.ranked) == len(ENGINE_NAMES)     # all legal here
+    r = report.best.run(ds, 0)
+
+    # bit-identical to run_query with the chosen engine name
+    forced = run_query(report.best.query, ds, 0)
+    assert int(r.count) == int(forced.count)
+    assert np.array_equal(np.asarray(r.positions),
+                          np.asarray(forced.positions))
+    for k in r.values:
+        if k == "depth":
+            assert np.array_equal(np.asarray(r.values[k]),
+                                  np.asarray(forced.row_depths))
+        else:
+            assert np.array_equal(np.asarray(r.values[k]),
+                                  np.asarray(forced.values[k]))
+
+    # same answer as every forced engine
+    q_pay = report.logical.payload_cols
+    for eng in ENGINE_NAMES:
+        rf = run_query(RecursiveQuery(eng, 7, q_pay, CAPS), ds, 0)
+        assert _ids(rf) == _ids(r), eng
+
+
+def test_plan_and_run_entry_point_and_depth_column(golden_dataset):
+    ds = golden_dataset
+    r = plan_and_run(paper_listing(1, root=0, depth=5), ds, caps=CAPS)
+    assert "depth" in r.values            # the CTE carries a depth counter
+    n = int(r.count)
+    d = np.asarray(r.values["depth"])[:n]
+    assert d.min() == 0 and d.max() == 5
+    # depth column == the engine's row-depth tags
+    assert np.array_equal(d, np.asarray(r.row_depths)[:n])
+
+
+def test_depth_filter_pushdown(golden_dataset):
+    ds = golden_dataset
+    sql = paper_listing(1, root=0, depth=9) + " WHERE depth <= 2"
+    report = plan(sql, ds, caps=CAPS)
+    assert report.logical.max_depth == 2    # pushed into the recursion bound
+    r = report.best.run(ds, 0)
+    ref = run_query(RecursiveQuery("precursive", 2, 0, CAPS), ds, 0)
+    assert _ids(r) == _ids(ref)
+    assert int(np.asarray(r.values["depth"])[:int(r.count)].max()) == 2
+    # strict < is off by one
+    lt = plan(paper_listing(1, root=0, depth=9) + " WHERE depth < 2",
+              ds, caps=CAPS)
+    assert lt.logical.max_depth == 1
+
+
+def test_batched_roots_single_dispatch(golden_dataset):
+    ds = golden_dataset
+    roots = [0, 1, 17]
+    rb = plan_and_run(paper_listing(1, depth=4), ds, roots, caps=CAPS)
+    assert rb.count.shape == (3,)
+    for i, root in enumerate(roots):
+        r1 = plan_and_run(paper_listing(1, depth=4), ds, root, caps=CAPS)
+        assert int(r1.count) == int(rb.count[i])
+        assert np.array_equal(np.asarray(r1.values["id"]),
+                              np.asarray(rb.values["id"][i]))
+
+
+def test_auto_caps_no_overflow(golden_dataset):
+    r = plan_and_run(paper_listing(1, root=0, depth=10), golden_dataset)
+    assert not bool(r.overflow)
+    assert int(r.count) > 0
+
+
+def test_union_all_on_non_forest_excludes_dense_engines():
+    ds = _edge_dataset([0, 1, 2, 3], [1, 2, 3, 0], 4)   # a ring
+    sql = """
+        WITH RECURSIVE t (id, "from", "to", depth) AS (
+          SELECT id, "from", "to", 0 FROM edges WHERE "from" = 0
+          UNION ALL
+          SELECT e.id, e."from", e."to", t.depth + 1
+          FROM edges e JOIN t ON e."from" = t."to" WHERE t.depth < 3
+        ) SELECT * FROM t"""
+    report = plan(sql, ds, caps=EngineCaps(64, 256))
+    skipped = dict(report.skipped)
+    assert "bitmap" in skipped and "hybrid" in skipped
+    assert not report.logical.dedup
+    # and it still runs (raw UNION ALL walk, depth-bounded)
+    r = report.best.run(ds, 0)
+    assert int(r.count) == 4                            # depths 0..3
+
+
+def test_non_contiguous_payload_reference(golden_dataset):
+    """Referencing only column3 must materialize the prefix up to N=3 and
+    return CORRECT column3 values (max index, not a count of names)."""
+    ds = golden_dataset
+    sql = """
+        WITH RECURSIVE t (id, "to", column3, depth) AS (
+          SELECT id, "to", column3, 0 FROM edges WHERE "from" = 0
+          UNION ALL
+          SELECT e.id, e."to", e.column3, t.depth + 1
+          FROM edges e JOIN t ON e."from" = t."to" WHERE t.depth < 4
+        ) SELECT * FROM t"""
+    report = plan(sql, ds, caps=CAPS)
+    assert report.logical.payload_cols == 3
+    r = report.best.run(ds, 0)
+    assert "column3" in r.values
+    n = int(r.count)
+    ref = run_query(RecursiveQuery(report.best.engine, 4, 3, CAPS), ds, 0)
+    assert np.array_equal(np.asarray(r.values["column3"])[:n],
+                          np.asarray(ref.values["column3"])[:n])
+
+
+def test_star_plus_explicit_payload_column(golden_dataset):
+    """'SELECT *, columnK' must materialize columnK even when the CTE
+    carries no payloads (N from ALL referenced columns, not just carried)."""
+    ds = golden_dataset
+    sql = """
+        WITH RECURSIVE t (id, "from", "to", depth) AS (
+          SELECT id, "from", "to", 0 FROM edges WHERE "from" = 0
+          UNION ALL
+          SELECT e.id, e."from", e."to", t.depth + 1
+          FROM edges e JOIN t ON e."from" = t."to" WHERE t.depth < 4
+        ) SELECT *, column2 FROM t"""
+    report = plan(sql, ds, caps=CAPS)
+    assert report.logical.payload_cols == 2
+    r = report.best.run(ds, 0)
+    assert "column2" in r.values
+
+
+def test_top_level_join_with_explicit_select_list(golden_dataset):
+    """An explicit outer select list is honored even with the Listing-1.3
+    join — no silent star-expansion to every payload column."""
+    ds = golden_dataset
+    sql = paper_listing(3, root=0, depth=4).replace(
+        "SELECT e.*", "SELECT name")
+    report = plan(sql, ds, caps=CAPS)
+    assert report.logical.want_cols == ("name",)
+    assert report.logical.payload_cols == 0
+    r = report.best.run(ds, 0)
+    assert sorted(r.values) == ["name"]
+
+
+def test_outer_join_tables_validated(golden_dataset):
+    bad = paper_listing(3, root=0, depth=4).replace(
+        "FROM t JOIN edges AS e ON t.id = e.id",
+        "FROM foo AS x JOIN bar AS y ON x.id = y.id")
+    with pytest.raises(ParseError, match="outer SELECT must read the CTE"):
+        plan(bad, golden_dataset)
+    bad_on = paper_listing(3, root=0, depth=4).replace(
+        "ON t.id = e.id", "ON z.id = e.id")
+    with pytest.raises(ParseError, match="top-level join"):
+        plan(bad_on, golden_dataset)
+
+
+def test_unknown_column_rejected_at_plan_time(golden_dataset):
+    sql = """
+        WITH RECURSIVE t (id, bogus) AS (
+          SELECT id, bogus FROM edges WHERE "from" = 0
+          UNION ALL
+          SELECT e.id, e.bogus FROM edges e JOIN t ON e."from" = t."to"
+          WHERE t.depth < 3
+        ) SELECT * FROM t"""
+    with pytest.raises(ParseError, match="unknown column 'bogus'"):
+        plan(sql, golden_dataset)
+
+
+def test_overflow_raises_instead_of_truncating(golden_dataset):
+    tiny = EngineCaps(frontier=8, result=16)
+    with pytest.raises(RuntimeError, match="capacity overflow"):
+        plan_and_run(paper_listing(1, root=0, depth=8), golden_dataset,
+                     caps=tiny)
+    # opt-out returns the flagged partial result
+    report = plan(paper_listing(1, root=0, depth=8), golden_dataset,
+                  caps=tiny)
+    r = report.best.run(golden_dataset, 0, check_overflow=False)
+    assert bool(np.asarray(r.overflow))
+
+
+def test_union_all_without_bound_on_cycle_is_rejected():
+    ds = _edge_dataset([0, 1, 2, 3], [1, 2, 3, 0], 4)
+    sql = """
+        WITH RECURSIVE t (id, "from", "to") AS (
+          SELECT id, "from", "to" FROM edges WHERE "from" = 0
+          UNION ALL
+          SELECT e.id, e."from", e."to" FROM edges e
+          JOIN t ON e."from" = t."to"
+        ) SELECT * FROM t"""
+    with pytest.raises(ParseError, match="depth bound"):
+        plan(sql, ds)
+
+
+def test_inbound_query_skips_rowstore(golden_dataset):
+    ds = golden_dataset
+    dst = np.asarray(ds.table.column("to"))
+    leaf = int(dst[-1])
+    sql = f"""
+        WITH RECURSIVE t (id, "from", "to", depth) AS (
+          SELECT id, "from", "to", 0 FROM edges WHERE "to" = {leaf}
+          UNION ALL
+          SELECT e.id, e."from", e."to", t.depth + 1
+          FROM edges e JOIN t ON e."to" = t."from" WHERE t.depth < 10
+        ) SELECT * FROM t"""
+    report = plan(sql, ds, caps=CAPS)
+    skipped = {e for e, _ in report.skipped}
+    assert skipped == {e for e in ENGINE_NAMES if e.startswith("rowstore")}
+    ref = run_query(RecursiveQuery("precursive", 10, 0, CAPS,
+                                   direction="inbound"), ds, leaf)
+    assert _ids(report.best.run(ds, leaf)) == _ids(ref)
+
+
+def test_both_direction_through_planner(golden_dataset):
+    ds = golden_dataset
+    root = int(np.asarray(ds.table.column("to"))[0])
+    sql = f"""
+        WITH RECURSIVE t (id, "from", "to", depth) AS (
+          SELECT id, "from", "to", 0 FROM edges WHERE "from" = {root}
+          UNION
+          SELECT e.id, e."from", e."to", t.depth + 1
+          FROM edges e JOIN t ON e."from" = t."to" OR e."to" = t."from"
+          WHERE t.depth < 2
+        ) SELECT * FROM t"""
+    report = plan(sql, ds, caps=CAPS)
+    assert report.logical.direction == "both"
+    ref = run_query(RecursiveQuery("precursive", 2, 0, CAPS,
+                                   direction="both"), ds, root)
+    assert _ids(report.best.run(ds, root)) == _ids(ref)
+
+
+# ---------------------------------------------------------------------------
+# property: planner == every forced engine on random graphs
+# ---------------------------------------------------------------------------
+
+def _check_random_graph(seed):
+    """For a random (non-tree) graph and a UNION query, the planner's pick
+    returns the same BFS answer as every one of the nine forced engines,
+    and is bit-identical to run_query with the engine it chose."""
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(4, 50))
+    e = int(rng.integers(1, 4 * v))
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    ds = _edge_dataset(src, dst, v)
+    root = int(rng.integers(0, v))
+    depth = int(rng.integers(0, 8))
+    caps = EngineCaps(frontier=e + 16, result=e + 16)
+    sql = f"""
+        WITH RECURSIVE t (id, "from", "to", depth) AS (
+          SELECT id, "from", "to", 0 FROM edges WHERE "from" = {root}
+          UNION
+          SELECT e.id, e."from", e."to", t.depth + 1
+          FROM edges e JOIN t ON e."from" = t."to"
+          WHERE t.depth < {depth}
+        ) SELECT * FROM t"""
+    report = plan(sql, ds, caps=caps)
+    r = report.best.run(ds, root)
+    assert not bool(r.overflow)
+
+    forced_same = run_query(report.best.query, ds, root)
+    assert int(r.count) == int(forced_same.count)
+    assert np.array_equal(np.asarray(r.values["id"]),
+                          np.asarray(forced_same.values["id"]))
+
+    n = int(r.count)
+    want_ids = _ids(r)
+    want_depths = sorted(np.asarray(r.row_depths)[:n].tolist())
+    pos_ref = (sorted(np.asarray(r.positions)[:n].tolist())
+               if positions_available(report.best.engine) else None)
+    for eng in ENGINE_NAMES:
+        rf = run_query(RecursiveQuery(eng, depth, 0, caps), ds, root)
+        assert not bool(rf.overflow)
+        assert _ids(rf) == want_ids, eng
+        nf = int(rf.count)
+        assert sorted(np.asarray(rf.row_depths)[:nf].tolist()) \
+            == want_depths, eng
+        if pos_ref is not None and positions_available(eng):
+            assert sorted(np.asarray(rf.positions)[:nf].tolist()) \
+                == pos_ref, eng
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42, 1234, 99991])
+def test_planner_matches_all_forced_engines_seeded(seed):
+    """Deterministic slice of the property (always runs, even without
+    hypothesis)."""
+    _check_random_graph(seed)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                       # pragma: no cover
+    pass
+else:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_planner_matches_all_forced_engines_random_graphs(seed):
+        _check_random_graph(seed)
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN: golden snapshots + coverage of all candidates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("listing", [1, 2, 3])
+def test_explain_golden_snapshot(golden_dataset, listing):
+    n_pay = 0 if listing == 1 else 4
+    sql = paper_listing(listing, root=0, depth=7, payload_cols=n_pay)
+    got = explain(sql, golden_dataset, caps=CAPS)
+    path = os.path.join(GOLDEN_DIR, f"explain_listing{listing}.txt")
+    with open(path) as f:
+        assert got == f.read()
+
+
+def test_explain_covers_every_engine(golden_dataset):
+    out = explain(paper_listing(1, root=0, depth=7), golden_dataset,
+                  caps=CAPS)
+    for i in range(len(ENGINE_NAMES)):
+        assert f"#{i + 1} " in out
+    for needle in ("bytes~", "rows~", "<- CHOSEN", "est "):
+        assert needle in out
+    # every engine's plan appears, with its per-operator estimates
+    for eng in ENGINE_NAMES:
+        assert f" {eng} " in out or f" {eng}  " in out
+
+
+# ---------------------------------------------------------------------------
+# PLAN_BUILDERS typing + validation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_plan_builders_are_typed_callables():
+    assert set(PLAN_BUILDERS) == set(ENGINE_NAMES)
+    for name, builder in PLAN_BUILDERS.items():
+        assert callable(builder), name
+        p = builder(RecursiveQuery(name, 3, 2, CAPS))
+        assert isinstance(p, Pipeline), name
+
+
+def test_unknown_engine_error_lists_known_names():
+    with pytest.raises(ValueError) as exc:
+        build_plan(RecursiveQuery("no_such_engine", 3, 0, CAPS))
+    msg = str(exc.value)
+    assert "no_such_engine" in msg
+    for eng in ENGINE_NAMES:
+        assert eng in msg
