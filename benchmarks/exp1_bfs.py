@@ -5,14 +5,25 @@ least to win — the paper found PRecursive still ahead (2 of 4 attribute
 streams touched per level) and TRecursive ~= PostgreSQL.
 Engines: the paper's four + the beyond-paper bitmap/hybrid engines.
 
-Beyond the paper, a batched-roots cell times the serving path: ONE
-vmap-batched dispatch answering ``BATCH_ROOTS`` users' traversals at once,
-reported as us-per-root against the sequential loop.
+Beyond the paper, batched-roots cells time the serving path answering
+``BATCH_ROOTS`` users' traversals at once:
+
+* ``precursive_batch*`` — the REACH-BUCKETED path (one jitted dispatch per
+  predicted-reach bucket, per-bucket caps), the production serving path;
+* ``precursive_batch*_lockstep`` — the old single worst-case vmap dispatch,
+  kept as the regression reference.
+
+Both are warmed up exactly like the sequential baseline (``time_call``
+discards ``warmup`` compile-laden calls for every variant), and both the
+per-root and the whole-batch wall time are reported, so
+``per_root_speedup_vs_sequential`` measures steady-state serving, not
+first-call tracing.
 """
 from __future__ import annotations
 
 from repro.core import EngineCaps
-from repro.core.engine import RecursiveQuery, run_query, run_query_batch
+from repro.core.engine import (RecursiveQuery, run_query, run_query_batch,
+                               run_query_buckets)
 
 from .bench_util import emit, level_caps, time_call, tree_dataset
 
@@ -39,22 +50,32 @@ def run(num_vertices: int = 200_000, height: int = 60,
             emit(f"exp1/{eng}/d{depth}", us,
                  f"speedup_vs_rowstore={speedup:.2f}")
 
-    # batched multi-root serving cell: one dispatch, BATCH_ROOTS roots
+    # batched multi-root serving cells: BATCH_ROOTS roots per request
+    from repro.planner.optimize import bucket_roots
+
     roots = list(range(BATCH_ROOTS))
     depth = depths[0]
     q = RecursiveQuery(engine="precursive", max_depth=depth, payload_cols=0,
                        caps=caps)
+    buckets = bucket_roots(ds, roots, direction=q.direction,
+                           max_depth=depth, dedup=q.dedup, caps=caps)
 
     def _sequential():
         return [run_query(q, ds, r) for r in roots]
 
     us_seq = time_call(_sequential, repeat=repeat)
-    us_batch = time_call(run_query_batch, q, ds, roots, repeat=repeat)
-    out[("batch", depth)] = us_batch
+    us_buck = time_call(run_query_buckets, q, ds, buckets, repeat=repeat)
+    us_lock = time_call(run_query_batch, q, ds, roots, repeat=repeat)
+    out[("batch", depth)] = us_buck
     emit(f"exp1/precursive_batch{BATCH_ROOTS}/d{depth}",
-         us_batch / BATCH_ROOTS,
+         us_buck / BATCH_ROOTS,
          f"per_root_speedup_vs_sequential="
-         f"{us_seq / max(us_batch, 1e-9):.2f}")
+         f"{us_seq / max(us_buck, 1e-9):.2f},"
+         f"total_us={us_buck:.1f},buckets={len(buckets)}")
+    emit(f"exp1/precursive_batch{BATCH_ROOTS}_lockstep/d{depth}",
+         us_lock / BATCH_ROOTS,
+         f"lockstep_vs_sequential={us_seq / max(us_lock, 1e-9):.2f},"
+         f"total_us={us_lock:.1f}")
     return out
 
 

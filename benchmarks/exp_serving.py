@@ -1,0 +1,74 @@
+"""Serving experiment: cached-plan dispatch latency for the traversal
+serving layer (beyond-paper; the ROADMAP's many-users north star).
+
+Three cells:
+
+* ``exp_serving/cold_plan`` — the FIRST request for a query shape: parse +
+  statistics + costing + bucket layout + jit compiles.  Paid once per
+  (shape, bucket signature).
+* ``exp_serving/cached_dispatch`` — steady state: every request after the
+  first hits the plan cache and the warm jitted dispatches; this is the
+  number a serving SLO is written against.
+* ``exp_serving/bucketed_vs_sequential`` — the reach-bucketed batch against
+  a Python loop of single-root queries through the same chosen plan (the
+  exp1 regression cell, measured at the serving layer).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.engine import run_query
+from repro.planner import ServingSession, paper_listing
+
+from .bench_util import emit, time_call, tree_dataset
+
+BATCH_ROOTS = 8
+
+
+def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
+        repeat: int = 5) -> dict:
+    ds = tree_dataset(num_vertices, height, payload_cols=0)
+    sql = paper_listing(1, root=0, depth=depth)
+    # a served batch mixes the hub root with leaf-ish roots — the regime
+    # where lockstep batching regressed and bucketing pays
+    roots = list(range(BATCH_ROOTS))
+    out = {}
+
+    session = ServingSession(ds)
+    t0 = time.perf_counter()
+    jax.block_until_ready([r.count for r in session.submit(sql, roots)])
+    us_cold = (time.perf_counter() - t0) * 1e6
+    out["cold"] = us_cold
+    emit(f"exp_serving/cold_plan/d{depth}", us_cold,
+         f"plans+compile,batch={BATCH_ROOTS}")
+
+    def _submit():
+        return session.submit(sql, roots)
+
+    us_warm = time_call(_submit, repeat=repeat)
+    out["warm"] = us_warm
+    st = session.stats
+    emit(f"exp_serving/cached_dispatch/d{depth}", us_warm / BATCH_ROOTS,
+         f"total_us={us_warm:.1f},plan_hits={st['plan_hits']},"
+         f"plan_misses={st['plan_misses']},"
+         f"cold_over_warm={us_cold / max(us_warm, 1e-9):.1f}x")
+
+    # same chosen plan, one root at a time (the serving alternative)
+    choice = session.plan_for(sql, roots).choice
+
+    def _sequential():
+        return [run_query(choice.query, ds, r) for r in roots]
+
+    us_seq = time_call(_sequential, repeat=repeat)
+    out["seq"] = us_seq
+    emit(f"exp_serving/bucketed_vs_sequential/d{depth}",
+         us_warm / BATCH_ROOTS,
+         f"per_root_speedup_vs_sequential="
+         f"{us_seq / max(us_warm, 1e-9):.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -23,7 +23,8 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write emitted rows as JSON (e.g. BENCH_bfs.json)")
     ap.add_argument("--only", default=None,
-                    help="comma list: exp1,exp2,exp3,claims,kern,planner")
+                    help="comma list: exp1,exp2,exp3,claims,kern,planner,"
+                         "serving")
     ap.add_argument("--kernel", action="store_true",
                     help="benchmark the Pallas frontier_expand kernel via "
                          "CSRIndexJoin(expand_fn=) and let the planner "
@@ -31,7 +32,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (bench_util, exp1_bfs, exp2_payload, exp3_rewrite,
-                   exp_claims, exp_planner, kernels_bench)
+                   exp_claims, exp_planner, exp_serving, kernels_bench)
 
     bench_util.RESULTS.clear()     # fresh per invocation (notebook reuse)
     only = set(args.only.split(",")) if args.only else None
@@ -68,6 +69,12 @@ def main(argv=None) -> None:
                             include_kernel=args.kernel)
         else:
             exp_planner.run(include_kernel=args.kernel)
+    if not only or "serving" in only:
+        if args.quick:
+            exp_serving.run(num_vertices=20_000, height=10, depth=4,
+                            repeat=3)
+        else:
+            exp_serving.run()
     if not only or "kern" in only:
         kernels_bench.run(repeat=3 if args.quick else 5)
 

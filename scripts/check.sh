@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + the quick benchmark profile.
+# CI gate: tier-1 tests + the quick benchmark profile + the perf gate.
 #
 #   scripts/check.sh
 #
-# Fails if any tier-1 test fails (pytest -x aborts on the first regression)
-# or if the quick benchmark run cannot complete; writes BENCH_bfs.json so
-# the perf trajectory (incl. the planner's vs_best_forced regret per cell)
-# can be compared across PRs.
+# Fails if any tier-1 test fails (pytest -x aborts on the first regression),
+# if the quick benchmark run cannot complete, or if the perf gate trips:
+# the batched serving cell must report per_root_speedup_vs_sequential >= 1.0
+# and every planner cell must keep its selection regret vs_best_forced
+# <= 1.2 (see scripts/perf_gate.py).  Writes BENCH_bfs.json so the perf
+# trajectory can be compared across PRs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,3 +19,6 @@ python -m pytest -x -q
 
 echo "== quick benchmarks -> BENCH_bfs.json =="
 python -m benchmarks.run --quick --json BENCH_bfs.json "$@"
+
+echo "== perf gate =="
+python scripts/perf_gate.py BENCH_bfs.json

@@ -1,0 +1,66 @@
+"""CI perf gate over the quick-bench artifact (BENCH_bfs.json).
+
+Fails (exit 1) when the perf trajectory regresses past the ROADMAP bars:
+
+* any cell reporting ``per_root_speedup_vs_sequential`` below 1.0 — the
+  batched serving path must beat a sequential loop per root (this cell was
+  0.41 before reach bucketing; the gate keeps it from regressing);
+* any planner cell reporting ``vs_best_forced`` above 1.2 — the planner's
+  selection regret bar.
+
+The lockstep reference cell deliberately reports its ratio under a
+different key (``lockstep_vs_sequential``) so the gate does not fire on the
+kept-for-comparison regression baseline.
+
+Usage: python scripts/perf_gate.py [BENCH_bfs.json]
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+SPEEDUP_RE = re.compile(r"(?:^|,)per_root_speedup_vs_sequential=([\d.]+)")
+REGRET_RE = re.compile(r"(?:^|,)vs_best_forced=([\d.]+)")
+
+MIN_PER_ROOT_SPEEDUP = 1.0
+MAX_PLANNER_REGRET = 1.2
+
+
+def check(rows: dict) -> list[str]:
+    failures = []
+    for name, row in sorted(rows.items()):
+        derived = row.get("derived", "")
+        m = SPEEDUP_RE.search(derived)
+        if m and float(m.group(1)) < MIN_PER_ROOT_SPEEDUP:
+            failures.append(
+                f"{name}: per_root_speedup_vs_sequential={m.group(1)} "
+                f"< {MIN_PER_ROOT_SPEEDUP} (batched serving must beat "
+                "the sequential loop)")
+        m = REGRET_RE.search(derived)
+        if m and float(m.group(1)) > MAX_PLANNER_REGRET:
+            failures.append(
+                f"{name}: vs_best_forced={m.group(1)} > "
+                f"{MAX_PLANNER_REGRET} (planner selection regret bar)")
+    return failures
+
+
+def main(argv=None) -> int:
+    path = (argv or sys.argv[1:] or ["BENCH_bfs.json"])[0]
+    with open(path) as f:
+        rows = json.load(f)
+    failures = check(rows)
+    if failures:
+        print(f"PERF GATE FAILED ({path}):")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        return 1
+    gated = sum(1 for r in rows.values()
+                if SPEEDUP_RE.search(r.get("derived", ""))
+                or REGRET_RE.search(r.get("derived", "")))
+    print(f"perf gate OK: {gated} gated cell(s) of {len(rows)} in {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,7 +4,8 @@ from .positions import (PosBlock, empty_block, compact_mask,       # noqa: F401
                         append_block, take_late, sort_positions_by_key)
 from .csr import CSRIndex, build_csr, expand_frontier              # noqa: F401
 from .operators import (Context, Pipeline, TraversalState,         # noqa: F401
-                        fixed_point, execute, execute_batch)
+                        fixed_point, fixed_point_batch, execute,
+                        execute_batch)
 from .recursive import (EngineCaps, BFSResult, precursive_bfs,     # noqa: F401
                         trecursive_bfs, rowstore_bfs,
                         trecursive_rewrite_bfs, rowstore_rewrite_bfs)

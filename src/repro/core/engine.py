@@ -27,7 +27,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Literal
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .bitmap import bitmap_plan, hybrid_plan
 from .csr import CSRIndex, build_csr
@@ -199,6 +201,47 @@ def run_query_batch(q: RecursiveQuery, ds: Dataset, roots) -> BFSResult:
     roots = jnp.asarray(roots, jnp.int32)
     return execute_batch(plan, ds.context(q.direction), roots,
                          ds.num_vertices)
+
+
+def result_lane(r: BFSResult, lane: int) -> BFSResult:
+    """Slice one lane out of a batched BFSResult."""
+    return jax.tree_util.tree_map(lambda a: a[lane], r)
+
+
+def run_query_buckets(q: RecursiveQuery, ds: Dataset, buckets
+                      ) -> list[BFSResult]:
+    """Reach-bucketed serving execution: one jitted batched dispatch PER
+    BUCKET, each with that bucket's (smaller) ``EngineCaps``, instead of one
+    worst-case lockstep dispatch over the whole root vector.
+
+    ``buckets`` is a sequence of bucket objects (see
+    :func:`repro.planner.optimize.bucket_roots`) carrying ``roots``,
+    ``indices`` (lanes in the original root vector) and ``caps``.  Results
+    come back PER ROOT, in the original order; each entry is bit-identical
+    to ``run_query(q, ds, root)`` on its root.
+
+    Capacity safety: bucket caps are predictions.  A bucket that overflows
+    its predicted caps is transparently retried once with the query's own
+    (global) caps, so bucketing can never turn a valid query into a
+    truncated result — at worst it costs one extra dispatch."""
+    total = sum(len(b.indices) for b in buckets)
+    out: list = [None] * total
+    # launch EVERY bucket before touching any result: the dispatches are
+    # async, and the host-side overflow check must not serialize them
+    launched = []
+    for b in buckets:
+        qb = (dataclasses.replace(q, caps=b.caps)
+              if b.caps != q.caps else q)
+        launched.append((b, qb, run_query_batch(qb, ds, b.roots)))
+    for b, qb, r in launched:
+        if qb is not q and bool(np.any(np.asarray(r.overflow))):
+            r = run_query_batch(q, ds, b.roots)     # global-caps fallback
+        for lane, idx in enumerate(b.indices):
+            out[idx] = result_lane(r, lane)
+    if any(x is None for x in out):
+        raise ValueError("buckets do not cover lanes 0..%d exactly"
+                         % (total - 1))
+    return out
 
 
 def plan_and_run(sql_or_ast, ds: Dataset, roots=None, **kwargs) -> BFSResult:

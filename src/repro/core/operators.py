@@ -72,8 +72,8 @@ __all__ = [
     "DenseBitmapStep", "HybridStep", "EarlyMaterialize", "AppendUnionAll",
     "ShardTargetExchange", "LateMaterialize", "EmitTuples", "ProjectRows",
     "CompactEmitted", "TopLevelJoin", "RawPositions", "Pipeline",
-    "fixed_point", "execute", "execute_batch", "dedup_targets",
-    "bitmap_level",
+    "fixed_point", "fixed_point_batch", "execute", "execute_batch",
+    "dedup_targets", "bitmap_level",
 ]
 
 
@@ -962,6 +962,54 @@ def fixed_point(pipeline: Pipeline, ctx: Context, root: jax.Array,
     return pipeline.finisher.finish(ctx, pipeline, state)
 
 
+def fixed_point_batch(pipeline: Pipeline, ctx: Context, roots: jax.Array,
+                      num_vertices: int) -> BFSResult:
+    """Batched fixed point: the per-level operator steps are vmapped over a
+    vector of roots inside ONE ``jax.lax.while_loop`` whose predicate is the
+    explicit all-lanes-converged test — the loop exits as soon as EVERY
+    lane's frontier has died (or hit its depth bound), so a reach-bucketed
+    batch stops when its deepest root finishes instead of running to the
+    global depth bound.  Lanes that converge early are frozen (their carry
+    is masked), so lane ``i`` of the result is bit-identical to
+    :func:`fixed_point` on ``roots[i]``."""
+    roots = jnp.asarray(roots, jnp.int32)
+
+    def init_one(root):
+        state = _initial_state(pipeline, ctx, num_vertices)
+        state = pipeline.seed.init(ctx, state, root)
+        for op in pipeline.ops:
+            state = op.init(ctx, state, root)
+        return state
+
+    state = jax.vmap(init_one)(roots)
+    limit = pipeline.max_depth + (1 if pipeline.inclusive else 0)
+
+    def lane_active(s):
+        return (s.frontier_count > 0) & (s.depth < limit)
+
+    def cond(s):
+        return jnp.any(lane_active(s))      # all-lanes-converged early exit
+
+    def step_one(s):
+        for op in pipeline.ops:
+            s = op.step(ctx, s)
+        return s._replace(depth=s.depth + 1)
+
+    def body(s):
+        active = lane_active(s)             # (B,)
+        nxt = jax.vmap(step_one)(s)
+
+        def freeze(new, old):
+            mask = active.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(mask, new, old)
+
+        return jax.tree_util.tree_map(freeze, nxt, s)
+
+    state = jax.lax.while_loop(cond, body, state)
+    return jax.vmap(lambda s: pipeline.finisher.finish(ctx, pipeline, s)
+                    )(state)
+
+
 _execute_impl = jax.jit(fixed_point,
                         static_argnames=("pipeline", "num_vertices"))
 
@@ -973,19 +1021,16 @@ def execute(pipeline: Pipeline, ctx: Context, root, num_vertices: int
                          num_vertices)
 
 
-def _batch_impl(pipeline, ctx, roots, num_vertices):
-    return jax.vmap(lambda r: fixed_point(pipeline, ctx, r, num_vertices)
-                    )(roots)
-
-
-_batch_impl = jax.jit(_batch_impl,
+_batch_impl = jax.jit(fixed_point_batch,
                       static_argnames=("pipeline", "num_vertices"))
 
 
 def execute_batch(pipeline: Pipeline, ctx: Context, roots,
                   num_vertices: int) -> BFSResult:
     """vmap-batched multi-root execution: ONE jitted XLA dispatch runs the
-    whole batch (the serving path — many users' roots per call).  Returns a
-    BFSResult whose arrays carry a leading batch dimension."""
+    whole batch (the serving path — many users' roots per call), through
+    :func:`fixed_point_batch` so the dispatch stops when all lanes have
+    converged.  Returns a BFSResult whose arrays carry a leading batch
+    dimension."""
     roots = jnp.asarray(roots, jnp.int32)
     return _batch_impl(pipeline, ctx, roots, num_vertices)

@@ -1,7 +1,17 @@
-"""Serving driver: batched prefill + decode with a position-addressed cache.
+"""Serving drivers.
+
+LM mode — batched prefill + decode with a position-addressed cache:
 
     python -m repro.launch.serve --arch qwen2-0.5b --smoke --batch 4 \
         --prompt-len 32 --gen 16
+
+Traversal mode — the plan-cached, reach-bucketed graph-query serving path
+(:class:`repro.planner.serving.ServingSession`): build a graph, then answer
+batches of per-user traversal roots, one bucketed dispatch per reach class,
+with the plan cache amortizing parse/stats/costing across requests:
+
+    python -m repro.launch.serve --traversal --vertices 20000 --height 10 \
+        --batch 8 --requests 32 --depth 4
 """
 from __future__ import annotations
 
@@ -42,15 +52,69 @@ def serve_batch(cfg, params, prompts: jax.Array, gen: int,
     return jnp.stack(out, axis=1), stats
 
 
+def serve_traversals(args) -> dict:
+    """The graph-traversal serving loop: one ServingSession, ``--requests``
+    batches of mixed hub/leaf roots, steady-state latency from the plan
+    cache + bucketed dispatch.  Returns the session's counters."""
+    from repro.core.engine import Dataset
+    from repro.data.treegen import TreeSpec, make_edge_table
+    from repro.planner import ServingSession, paper_listing
+
+    spec = TreeSpec(num_vertices=args.vertices, height=args.height,
+                    payload_cols=0, seed=0)
+    ds = Dataset.prepare(make_edge_table(spec), spec.num_vertices)
+    sql = paper_listing(1, root=0, depth=args.depth)
+    session = ServingSession(ds)
+
+    rng = np.random.RandomState(0)
+    t_first = t_steady = 0.0
+    for i in range(args.requests):
+        # every batch mixes the hub root 0 with random (mostly leaf) roots
+        roots = [0] + rng.randint(0, args.vertices,
+                                  size=args.batch - 1).tolist()
+        t0 = time.perf_counter()
+        results = session.submit(sql, roots)
+        jax.block_until_ready([r.count for r in results])
+        dt = time.perf_counter() - t0
+        if i == 0:
+            t_first = dt
+        else:
+            t_steady += dt
+    stats = session.stats
+    steady_us = t_steady / max(args.requests - 1, 1) * 1e6
+    print(f"traversal serving: {args.requests} requests x "
+          f"batch {args.batch}  first={t_first * 1e3:.1f}ms (plans+compile) "
+          f"steady={steady_us / 1e3:.2f}ms/req "
+          f"({steady_us / args.batch:.0f}us/root)")
+    print(f"plan cache: {stats['plan_hits']} hits / "
+          f"{stats['plan_misses']} misses over "
+          f"{stats['cached_plans']} plan(s), "
+          f"{stats['cached_shapes']} query shape(s)")
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--traversal", action="store_true",
+                    help="serve graph-traversal queries (plan-cached, "
+                         "reach-bucketed) instead of an LM")
     ap.add_argument("--arch", choices=[a for a, (f, _) in ARCHS.items()
-                                       if f == "lm"], required=True)
+                                       if f == "lm"])
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--vertices", type=int, default=20_000)
+    ap.add_argument("--height", type=int, default=10)
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
     args = ap.parse_args(argv)
+
+    if args.traversal:
+        serve_traversals(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --traversal is given")
 
     cfg, _ = get_config(args.arch, smoke=args.smoke)
     params = tfm.init_lm(jax.random.PRNGKey(0), cfg)

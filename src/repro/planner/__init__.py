@@ -12,16 +12,24 @@ The layers (one module each):
 * :mod:`repro.planner.optimize` — enumerates every legal engine (plus the
   Pallas-kernel expansion), ranks, and executes the winner;
 * :mod:`repro.planner.explain`  — EXPLAIN with per-operator estimated rows
-  and bytes for every candidate.
+  and bytes for every candidate, plus the machine-readable plan
+  (:func:`to_json`);
+* :mod:`repro.planner.serving`  — the plan-cached, reach-bucketed serving
+  session (one graph, many root batches).
 
 Entry points: :func:`plan_and_run` (also re-exported as
-``repro.core.engine.plan_and_run``), :func:`choose`, :func:`explain`.
+``repro.core.engine.plan_and_run``), :func:`choose`, :func:`explain`,
+:class:`ServingSession`.
 """
 from .ast import (LogicalQuery, ParseError, RecursiveCTE,      # noqa: F401
                   normalize, paper_listing, parse)
 from .cost import OpEstimate, PlanCost, pipeline_cost          # noqa: F401
-from .explain import explain, render_report                    # noqa: F401
+from .explain import (explain, explain_json, render_report,    # noqa: F401
+                      to_json)
 from .optimize import (KERNEL_LABEL, PhysicalChoice,           # noqa: F401
-                       PlannerReport, choose, default_caps,
-                       kernel_expand_fn, plan, plan_and_run)
-from .stats import GraphStats, compute_stats                   # noqa: F401
+                       PlannerReport, RootBucket, bucket_roots,
+                       choose, default_caps, kernel_expand_fn, plan,
+                       plan_and_run)
+from .serving import PlanEntry, ServingSession, shape_key      # noqa: F401
+from .stats import (GraphStats, RootEstimate, compute_stats,   # noqa: F401
+                    root_estimates)

@@ -6,17 +6,25 @@ renders composition only).
 The per-operator numbers come from the same :meth:`Operator.estimate` calls
 the optimizer ranked with, so EXPLAIN is an audit of the decision, not a
 separate pretty-printer.
+
+:func:`to_json` renders the same planning pass MACHINE-READABLY (one plain
+dict, ``json.dumps``-able): the serving layer caches these per query shape
+so repeated traffic skips parsing/stats/costing, and external tooling can
+diff plans across PRs.  ``schema_version`` gates consumers; the schema is
+documented in docs/serving.md.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.core.engine import Dataset
 from repro.core.operators import EngineCaps
 
-from .optimize import PhysicalChoice, PlannerReport, plan
+from .optimize import PhysicalChoice, PlannerReport, RootBucket, plan
 
-__all__ = ["explain", "render_report"]
+__all__ = ["explain", "explain_json", "render_report", "to_json"]
+
+PLAN_SCHEMA_VERSION = 1
 
 
 def _fmt_bytes(b: float) -> str:
@@ -86,6 +94,83 @@ def render_report(report: PlannerReport) -> str:
         for engine, reason in report.skipped:
             lines.append(f"skipped {engine}: {reason}")
     return "\n".join(lines)
+
+
+def _choice_json(c: PhysicalChoice, chosen: bool) -> dict:
+    return {
+        "label": c.label,
+        "engine": c.engine,
+        "use_kernel": c.use_kernel,
+        "chosen": chosen,
+        "caps": {"frontier": c.query.caps.frontier,
+                 "result": c.query.caps.result},
+        "cost": {"est_us": c.cost.est_us,
+                 "total_bytes": c.cost.total_bytes,
+                 "levels": c.cost.levels,
+                 "result_rows": c.cost.result_rows},
+        "ops": [{"label": op.label, "rows": op.rows, "bytes": op.bytes}
+                for op in c.cost.per_op],
+    }
+
+
+def to_json(report: PlannerReport,
+            buckets: Optional[Sequence[RootBucket]] = None) -> dict:
+    """The machine-readable plan: everything ``render_report`` prints, as
+    one plain ``json.dumps``-able dict (the serving layer's plan-cache
+    payload).  ``buckets`` optionally embeds a reach-bucketed batch layout
+    alongside the ranked candidates."""
+    lg = report.logical
+    st = report.stats
+    doc = {
+        "schema_version": PLAN_SCHEMA_VERSION,
+        "logical": {
+            "root": lg.root,
+            "max_depth": lg.max_depth,
+            "payload_cols": lg.payload_cols,
+            "dedup": lg.dedup,
+            "direction": lg.direction,
+            "want_cols": list(lg.want_cols),
+            "want_depth": lg.want_depth,
+            "union_all": lg.union_all,
+        },
+        "stats": {
+            "direction": st.direction,
+            "num_vertices": st.num_vertices,
+            "num_edges": st.num_edges,
+            "density": st.density,
+            "avg_degree": st.avg_degree,
+            "max_degree": st.max_degree,
+            "is_forest": st.is_forest,
+            "sample_roots": list(st.sample_roots),
+            "level_edges": list(st.level_edges),
+            "max_levels": st.max_levels,
+            "reach_edges": st.reach_edges,
+        },
+        "chosen": report.best.label,
+        "candidates": [_choice_json(c, chosen=(i == 0))
+                       for i, c in enumerate(report.ranked)],
+        "skipped": [{"engine": e, "reason": r} for e, r in report.skipped],
+    }
+    if buckets is not None:
+        doc["buckets"] = [{
+            "lanes": list(b.indices),
+            "roots": list(b.roots),
+            "caps": {"frontier": b.caps.frontier, "result": b.caps.result},
+            "predicted_reach": b.predicted_reach,
+            "predicted_depth": b.predicted_depth,
+        } for b in buckets]
+    return doc
+
+
+def explain_json(query, ds: Dataset, *, root: Optional[int] = None,
+                 caps: Optional[EngineCaps] = None,
+                 include_kernel: bool = False,
+                 default_max_depth: Optional[int] = None) -> dict:
+    """Plan ``query`` against ``ds`` and return the machine-readable plan."""
+    report = plan(query, ds, root=root, caps=caps,
+                  include_kernel=include_kernel,
+                  default_max_depth=default_max_depth)
+    return to_json(report)
 
 
 def explain(query, ds: Dataset, *, root: Optional[int] = None,

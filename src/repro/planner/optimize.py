@@ -21,23 +21,25 @@ is bit-identical to ``run_query`` with the chosen engine name.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.engine import (ENGINE_NAMES, Dataset, PLAN_BUILDERS,
-                               RecursiveQuery, run_query, run_query_batch)
+                               RecursiveQuery, run_query, run_query_batch,
+                               run_query_buckets)
 from repro.core.operators import (BFSResult, EngineCaps, Pipeline, execute,
                                   execute_batch)
 from repro.core.recursive import precursive_plan
 
 from .ast import LogicalQuery, RecursiveCTE, normalize, parse
 from .cost import PlanCost, column_bytes, pipeline_cost
-from .stats import GraphStats
+from .stats import GraphStats, root_estimates
 
-__all__ = ["PhysicalChoice", "PlannerReport", "plan", "choose",
-           "plan_and_run", "default_caps", "kernel_expand_fn",
-           "KERNEL_LABEL"]
+__all__ = ["PhysicalChoice", "PlannerReport", "RootBucket", "plan",
+           "choose", "plan_and_run", "bucket_roots", "default_caps",
+           "kernel_expand_fn", "KERNEL_LABEL"]
 
 KERNEL_LABEL = "precursive+kernel"
 
@@ -84,33 +86,14 @@ class PhysicalChoice:
     def label(self) -> str:
         return KERNEL_LABEL if self.use_kernel else self.engine
 
-    def run(self, ds: Dataset, roots: Union[int, Sequence[int], None] = None,
-            *, check_overflow: bool = True) -> BFSResult:
-        """Execute the chosen plan (single root or a vmap batch) and dress
-        the result per the logical query: attach the ``depth`` output column
-        and project the requested value columns.
-
-        A capacity overflow (stats-derived block sizes can undershoot for
-        unsampled roots or raw UNION ALL walks) raises rather than silently
-        truncating; pass bigger ``caps`` to plan(), or
-        ``check_overflow=False`` to accept the flagged partial result."""
-        roots = self.logical.root if roots is None else roots
-        if roots is None:
-            raise ValueError("no root: the query has no literal seed and "
-                             "none was passed to run()")
-        batched = np.ndim(roots) > 0
-        if self.use_kernel:
-            ctx = ds.context(self.query.direction)
-            r = (execute_batch(self.pipeline, ctx, roots, ds.num_vertices)
-                 if batched
-                 else execute(self.pipeline, ctx, roots, ds.num_vertices))
-        else:
-            r = (run_query_batch(self.query, ds, roots) if batched
-                 else run_query(self.query, ds, roots))
+    def dress(self, r: BFSResult, *, check_overflow: bool,
+              caps: EngineCaps) -> BFSResult:
+        """Post-execution dressing shared by every execution path: overflow
+        check, projection to the requested columns, the ``depth`` column."""
         if check_overflow and bool(np.any(np.asarray(r.overflow))):
             raise RuntimeError(
                 f"capacity overflow executing {self.label} with "
-                f"caps={self.query.caps}: the result is truncated — pass "
+                f"caps={caps}: the result is truncated — pass "
                 "larger caps to plan()/plan_and_run(), or "
                 "check_overflow=False to accept the partial result")
         values = {k: v for k, v in r.values.items()
@@ -123,6 +106,97 @@ class PhysicalChoice:
         if self.logical.want_depth:
             values["depth"] = r.row_depths
         return r._replace(values=values)
+
+    def _resolve_roots(self, roots):
+        """Default to the query's literal root and coerce to int32 — the
+        SAME coercion on every path (kernel or not, scalar or batch), so a
+        Python list / int64 vector cannot diverge between paths."""
+        import jax.numpy as jnp
+
+        roots = self.logical.root if roots is None else roots
+        if roots is None:
+            raise ValueError("no root: the query has no literal seed and "
+                             "none was passed to run()")
+        return jnp.asarray(roots, jnp.int32)
+
+    def run(self, ds: Dataset, roots: Union[int, Sequence[int], None] = None,
+            *, check_overflow: bool = True) -> BFSResult:
+        """Execute the chosen plan (single root or a vmap batch) and dress
+        the result per the logical query: attach the ``depth`` output column
+        and project the requested value columns.
+
+        A capacity overflow (stats-derived block sizes can undershoot for
+        unsampled roots or raw UNION ALL walks) raises rather than silently
+        truncating; pass bigger ``caps`` to plan(), or
+        ``check_overflow=False`` to accept the flagged partial result."""
+        roots = self._resolve_roots(roots)
+        batched = np.ndim(roots) > 0
+        if self.use_kernel:
+            ctx = ds.context(self.query.direction)
+            r = (execute_batch(self.pipeline, ctx, roots, ds.num_vertices)
+                 if batched
+                 else execute(self.pipeline, ctx, roots, ds.num_vertices))
+        else:
+            r = (run_query_batch(self.query, ds, roots) if batched
+                 else run_query(self.query, ds, roots))
+        return self.dress(r, check_overflow=check_overflow,
+                          caps=self.query.caps)
+
+    def _kernel_pipeline(self, caps: EngineCaps) -> Pipeline:
+        """The kernel-expansion pipeline at the given caps (the planned
+        pipeline when the caps match, a rebuild otherwise)."""
+        if caps == self.query.caps:
+            return self.pipeline
+        return precursive_plan(caps, self.query.max_depth,
+                               self.query.out_cols, self.query.dedup,
+                               self.query.direction,
+                               expand_fn=kernel_expand_fn())
+
+    def run_bucketed(self, ds: Dataset, roots: Sequence[int], *,
+                     max_buckets: int = 4, check_overflow: bool = True,
+                     buckets: Optional[Tuple["RootBucket", ...]] = None,
+                     fallback_caps: Optional[EngineCaps] = None
+                     ) -> list[BFSResult]:
+        """The reach-bucketed serving path: partition ``roots`` by predicted
+        reach (:func:`bucket_roots`), run one jitted batched dispatch per
+        bucket with that bucket's caps, and return PER-ROOT dressed results
+        in the original order (each bit-identical to ``run()`` on that
+        root).  A precomputed bucket layout can be passed in (the serving
+        layer caches it with the plan).
+
+        A bucket that overflows its caps is retried once with
+        ``fallback_caps`` (default: this plan's own caps)."""
+        roots = self._resolve_roots(roots)
+        if np.ndim(roots) == 0:
+            raise ValueError("run_bucketed needs a VECTOR of roots; "
+                             "use run() for a single root")
+        if buckets is None:
+            buckets = bucket_roots(
+                ds, np.asarray(roots), direction=self.query.direction,
+                max_depth=self.query.max_depth, dedup=self.query.dedup,
+                caps=self.query.caps, max_buckets=max_buckets)
+        if fallback_caps is None:
+            fallback_caps = self.query.caps
+        if self.use_kernel:
+            from repro.core.engine import result_lane
+
+            ctx = ds.context(self.query.direction)
+            results = [None] * len(roots)
+            for b in buckets:
+                r = execute_batch(self._kernel_pipeline(b.caps), ctx,
+                                  np.asarray(b.roots), ds.num_vertices)
+                if (b.caps != fallback_caps
+                        and bool(np.any(np.asarray(r.overflow)))):
+                    r = execute_batch(self._kernel_pipeline(fallback_caps),
+                                      ctx, np.asarray(b.roots),
+                                      ds.num_vertices)
+                for lane, idx in enumerate(b.indices):
+                    results[idx] = result_lane(r, lane)
+        else:
+            q = dataclasses.replace(self.query, caps=fallback_caps)
+            results = run_query_buckets(q, ds, buckets)
+        return [self.dress(r, check_overflow=check_overflow,
+                           caps=self.query.caps) for r in results]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,19 +213,132 @@ class PlannerReport:
         return self.ranked[0]
 
 
+# a raw UNION ALL walk's path count can explode combinatorially; cap the
+# result buffer a planner will allocate (overflow still raises, with the
+# real required size in the message, if the walk truly exceeds this)
+_MAX_WALK_RESULT = 1 << 22
+
+
 def default_caps(stats: GraphStats, logical: LogicalQuery) -> EngineCaps:
-    """Volcano block sizing from statistics: the frontier block covers the
-    widest sampled level with headroom; the result block covers the exact
-    worst case under dedup (every join-space edge once) or a margin over
-    the sampled expectation for raw UNION ALL walks."""
+    """Volcano block sizing from statistics.
+
+    Dedup (BFS) semantics bound the result exactly: every join-space edge is
+    emitted at most once, so ``EJ + 8`` covers any root.  Raw UNION ALL
+    walks count PATHS, not edges — on a cyclic or reconverging graph a
+    depth-bounded walk can legally emit far more than E rows — so both
+    blocks are sized from the sampled WALK profile
+    (:meth:`GraphStats.total_walk_rows`), with margin, and are deliberately
+    NOT clamped to a multiple of E."""
     ej = stats.num_edges
-    frontier = int(min(ej + 8, max(1024, 4 * stats.max_level_edges)))
     if logical.dedup:
+        frontier = int(min(ej + 8, max(1024, 4 * stats.max_level_edges)))
         result = ej + 8
     else:
-        est = stats.total_edges(logical.max_depth)
-        result = int(min(max(4 * est, 4096), max(4 * ej, 4096)))
+        md = logical.max_depth
+        frontier = int(max(1024, 4 * stats.max_level_edges,
+                           2 * stats.max_walk_level_rows(md)))
+        frontier = min(frontier, _MAX_WALK_RESULT)
+        result = int(min(max(4 * stats.total_walk_rows(md), 4096),
+                         _MAX_WALK_RESULT))
     return EngineCaps(frontier=frontier, result=result)
+
+
+@dataclasses.dataclass(frozen=True)
+class RootBucket:
+    """One reach bucket of a batched root vector: the lanes it owns in the
+    original vector, the roots themselves, and the (quantized, clamped)
+    per-bucket caps one batched dispatch will run with.
+
+    ``roots`` is PADDED to a power-of-two lane count by repeating the last
+    root (jit specializes on the lane count, so padding keeps the dispatch
+    signature stable as batch compositions vary); only the first
+    ``len(indices)`` lanes are real, and executors drop the padding."""
+
+    indices: Tuple[int, ...]        # lanes in the original roots vector
+    roots: Tuple[int, ...]          # len(roots) >= len(indices) (padding)
+    caps: EngineCaps
+    predicted_reach: float          # max predicted reach over the bucket
+    predicted_depth: int            # max predicted depth over the bucket
+
+    @property
+    def signature(self) -> Tuple[int, int, int]:
+        """(padded lane count, frontier cap, result cap) — what the serving
+        layer keys dispatch reuse on (jit specializes on exactly these)."""
+        return (len(self.roots), self.caps.frontier, self.caps.result)
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(int(math.ceil(math.log2(max(n, 1)))), 0)
+
+
+# margin over the predicted reach when sizing bucket buffers: estimates for
+# unsampled roots are degree-conditioned, not measured, and undershooting
+# costs a whole retry dispatch
+_BUCKET_MARGIN = 4
+# a root joins the current bucket while its reach is within this factor of
+# the bucket's smallest; beyond it a new bucket opens (geometric split)
+_BUCKET_SPREAD = 8.0
+
+
+def bucket_roots(ds: Dataset, roots, *, direction: str, max_depth: int,
+                 dedup: bool = True, caps: EngineCaps,
+                 max_buckets: int = 4) -> Tuple[RootBucket, ...]:
+    """Partition a root vector into <= ``max_buckets`` reach buckets.
+
+    Roots are sorted by root-conditional predicted reach
+    (:func:`repro.planner.stats.root_estimates` — exact for sampled roots,
+    degree-conditioned otherwise) and split geometrically: a new bucket
+    opens when a root's reach exceeds ``_BUCKET_SPREAD`` times the smallest
+    reach in the current bucket.  Each bucket gets its own ``EngineCaps``
+    sized to its worst member with margin, quantized to powers of two (so
+    repeated serving traffic reuses a handful of jit cache entries) and
+    NEVER exceeding the global ``caps`` — a leaf-rooted lane stops paying a
+    hub root's padding.
+
+    Raw UNION ALL (``dedup=False``) reach is path-count-shaped and not
+    root-conditioned by the sampled profiles, so those queries keep one
+    bucket with the global caps (safe, same as the lockstep path)."""
+    roots = np.asarray(roots, dtype=np.int64).reshape(-1)
+    lanes = list(range(roots.shape[0]))
+    if roots.shape[0] == 0:
+        return ()
+    if not dedup or roots.shape[0] == 1 or max_buckets <= 1:
+        return (RootBucket(indices=tuple(lanes),
+                           roots=tuple(int(r) for r in roots), caps=caps,
+                           predicted_reach=-1.0,      # unpredicted fallback
+                           predicted_depth=max_depth),)
+
+    ests = root_estimates(ds, direction, roots, max_depth)
+    order = sorted(lanes, key=lambda i: (ests[i].reach_rows, i))
+
+    groups: list[list[int]] = []
+    for i in order:
+        if groups:
+            lo = ests[groups[-1][0]].reach_rows
+            if (ests[i].reach_rows <= max(lo, 1.0) * _BUCKET_SPREAD
+                    or len(groups) >= max_buckets):
+                groups[-1].append(i)
+                continue
+        groups.append([i])
+
+    out = []
+    for g in groups:
+        reach = max(ests[i].reach_rows for i in g)
+        level = max(ests[i].max_level_rows for i in g)
+        depth = max(ests[i].depth for i in g)
+        exact = all(ests[i].exact for i in g)
+        margin = 2 if exact else _BUCKET_MARGIN
+        frontier = min(_pow2_ceil(int(margin * level) + 8), caps.frontier)
+        result = min(_pow2_ceil(int(margin * reach) + 8), caps.result)
+        # pad the lane count to a power of two (repeat the last root) so
+        # varying batch compositions reuse one compiled dispatch shape
+        g_roots = [int(roots[i]) for i in g]
+        g_roots += [g_roots[-1]] * (_pow2_ceil(len(g_roots)) - len(g_roots))
+        out.append(RootBucket(
+            indices=tuple(g), roots=tuple(g_roots),
+            caps=EngineCaps(frontier=frontier, result=result),
+            predicted_reach=float(reach), predicted_depth=int(depth)))
+    return tuple(out)
 
 
 def _illegal_reason(engine: str, logical: LogicalQuery) -> Optional[str]:

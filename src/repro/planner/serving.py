@@ -1,0 +1,276 @@
+"""The traversal serving layer: a plan cache over the reach-bucketed batch
+execution path.
+
+A serving process answers the same handful of query SHAPES over and over
+with different root batches (many users, one graph).  Re-running the full
+planning pass — parse, statistics, per-candidate costing — on every request
+wastes the latency budget on work whose inputs did not change, so this
+module memoizes it at three grains:
+
+* **logical cache** — normalized SQL text → :class:`LogicalQuery` (parsing
+  and normalization amortized);
+* **choice cache** — query shape (root stripped) → the planner's ranked
+  pick (statistics + costing amortized);
+* **plan cache** — (query shape, direction, bucket signature) →
+  :class:`PlanEntry` holding the machine-readable JSON plan
+  (:func:`repro.planner.explain.to_json`) for that exact serving
+  configuration.  The bucket signature is the tuple of per-bucket
+  ``(lanes, frontier cap, result cap)`` — precisely what jit specializes
+  on, so a plan-cache hit implies the compiled dispatches are warm too.
+
+Execution is reach-bucketed with a PER-BUCKET physical choice: the root
+vector is partitioned by root-conditional predicted reach
+(:func:`repro.planner.optimize.bucket_roots`), then every bucket is
+re-costed WITH ITS OWN CAPS and gets its own engine — the capacity-aware
+cost model means a leaf bucket's tiny blocks favor the positional engine
+even when the hub bucket (or the whole-batch plan) favors the dense
+bitmap.  Each bucket runs as one jitted batched dispatch; a bucket that
+overflows its predicted caps is retried once with the global caps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import Dataset, run_query_batch
+from repro.core.operators import BFSResult, EngineCaps
+
+from .ast import LogicalQuery, normalize, parse
+from .explain import to_json
+from .optimize import (PhysicalChoice, PlannerReport, RootBucket,
+                       bucket_roots, plan)
+
+__all__ = ["PlanEntry", "ServingSession", "shape_key"]
+
+
+ShapeKey = Tuple
+PlanKey = Tuple
+
+
+def shape_key(logical: LogicalQuery) -> ShapeKey:
+    """The normalized query shape: every logical axis EXCEPT the root —
+    requests that differ only in their root batch share one planning pass."""
+    return (logical.max_depth, logical.payload_cols, logical.dedup,
+            logical.direction, logical.want_cols, logical.want_depth,
+            logical.union_all)
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    """One plan-cache entry: the shape-level chosen plan, the bucket layout
+    it serves, the PER-BUCKET physical choices (each bucket re-costed with
+    its own caps), and the machine-readable JSON plan."""
+
+    choice: PhysicalChoice                       # shape-level pick
+    report: PlannerReport
+    roots: Tuple[int, ...]                       # request-order root vector
+    buckets: Tuple[RootBucket, ...]
+    bucket_choices: Tuple[PhysicalChoice, ...]   # one per bucket
+    bucket_signature: Tuple[Tuple[int, int, int], ...]
+    plan_json: dict
+    hits: int = 0
+    last_latency_us: float = 0.0
+
+
+class ServingSession:
+    """One graph, many requests: plan once per query shape, serve every
+    batch through the reach-bucketed path.
+
+    >>> session = ServingSession(ds)
+    >>> results = session.submit(sql, roots=[3, 17, 4096])
+
+    ``results`` is one dressed :class:`BFSResult` per root, in request
+    order.  Each is ROW-SET identical to ``plan_and_run(sql, ds, root)``
+    on that root (same rows, counts and depths); row ORDER may differ,
+    because every bucket is re-costed with its own caps and may pick a
+    different engine than the single-root plan, and engines order result
+    rows differently.  ``session.stats`` reports request/hit counters and
+    the last request's latency."""
+
+    def __init__(self, ds: Dataset, *, max_buckets: int = 4,
+                 caps: Optional[EngineCaps] = None,
+                 include_kernel: bool = False):
+        self.ds = ds
+        self.max_buckets = max_buckets
+        self.caps = caps
+        self.include_kernel = include_kernel
+        self._logical: Dict[str, LogicalQuery] = {}
+        self._choice: Dict[ShapeKey, PlannerReport] = {}
+        self._bucket_plans: Dict[Tuple, PhysicalChoice] = {}
+        self._plans: Dict[PlanKey, PlanEntry] = {}
+        self._requests: Dict[Tuple, PlanKey] = {}   # (shape, roots) -> key
+        self.requests = 0
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.last_latency_us = 0.0
+
+    # -- the three cache grains -------------------------------------------
+    def _normalize_sql(self, sql: str) -> str:
+        return " ".join(sql.split())
+
+    def _logical_for(self, sql: str) -> LogicalQuery:
+        key = self._normalize_sql(sql)
+        if key not in self._logical:
+            self._logical[key] = normalize(parse(sql), self.ds)
+        return self._logical[key]
+
+    def _report_for(self, logical: LogicalQuery) -> PlannerReport:
+        key = shape_key(logical)
+        if key not in self._choice:
+            self._choice[key] = plan(logical, self.ds, caps=self.caps,
+                                     include_kernel=self.include_kernel)
+        return self._choice[key]
+
+    def _bucket_choice(self, logical: LogicalQuery,
+                       bucket: RootBucket) -> PhysicalChoice:
+        """Re-cost the candidate engines WITH THE BUCKET'S CAPS and pick
+        per bucket: the capacity-aware cost model makes small blocks favor
+        positional pipelines even when the whole-batch plan favors a dense
+        O(E) engine — this is where a leaf bucket stops paying bitmap
+        scans.  Memoized per (shape, caps)."""
+        key = (shape_key(logical), bucket.caps)
+        if key not in self._bucket_plans:
+            self._bucket_plans[key] = plan(
+                logical, self.ds, caps=bucket.caps,
+                include_kernel=self.include_kernel).best
+        return self._bucket_plans[key]
+
+    def _plan_doc(self, report: PlannerReport, buckets, choices) -> dict:
+        doc = to_json(report, buckets=buckets)
+        for b, c in zip(doc["buckets"], choices):
+            b["engine"] = c.label
+        return doc
+
+    _REQUEST_MEMO_MAX = 4096      # bound the exact-request fast path
+
+    def _entry_for(self, logical: LogicalQuery, roots) -> PlanEntry:
+        report = self._report_for(logical)
+        choice = report.best
+        roots = tuple(int(r) for r in np.asarray(roots).reshape(-1))
+        # exact-repeat fast path: a byte-identical request skips the
+        # bucket derivation entirely (bucketing is deterministic per
+        # (shape, roots) on one dataset)
+        memo_key = (shape_key(logical), roots)
+        key = self._requests.get(memo_key)
+        if key is not None:
+            entry = self._plans.get(key)
+            if entry is not None and entry.roots == roots:
+                entry.hits += 1
+                self.plan_hits += 1
+                return entry
+        buckets = bucket_roots(
+            self.ds, roots, direction=choice.query.direction,
+            max_depth=choice.query.max_depth, dedup=choice.query.dedup,
+            caps=choice.query.caps, max_buckets=self.max_buckets)
+        signature = tuple(b.signature for b in buckets)
+        key = (shape_key(logical), signature)
+        entry = self._plans.get(key)
+        if entry is None:
+            choices = tuple(self._bucket_choice(logical, b)
+                            for b in buckets)
+            entry = PlanEntry(
+                choice=choice, report=report, roots=roots, buckets=buckets,
+                bucket_choices=choices, bucket_signature=signature,
+                plan_json=self._plan_doc(report, buckets, choices))
+            self._plans[key] = entry
+            self.plan_misses += 1
+        else:
+            # same shape + signature: reuse the cached layout only for the
+            # SAME request-order roots; otherwise rebind to the fresh
+            # bucket layout (signature equality guarantees the compiled
+            # dispatches still match, but the lane->root mapping does not)
+            if roots != entry.roots:
+                entry = dataclasses.replace(
+                    entry, roots=roots, buckets=buckets,
+                    plan_json=self._plan_doc(report, buckets,
+                                             entry.bucket_choices),
+                    hits=entry.hits)
+                self._plans[key] = entry
+            entry.hits += 1
+            self.plan_hits += 1
+        if len(self._requests) >= self._REQUEST_MEMO_MAX:
+            self._requests.clear()
+        self._requests[memo_key] = key
+        return entry
+
+    # -- the serving entry point ------------------------------------------
+    def _execute(self, entry: PlanEntry,
+                 check_overflow: bool) -> list[BFSResult]:
+        """One batched dispatch per bucket, each with ITS chosen engine and
+        caps; overflowed buckets retry once with the shape-level (global)
+        caps on the same engine.
+
+        ALL buckets are launched before the first result is touched (the
+        dispatches are async; a Python-side overflow check must not
+        serialize them), and lanes are sliced as free host views off one
+        per-bucket transfer rather than as per-lane device ops."""
+        import jax
+
+        global_caps = entry.choice.query.caps
+        nroots = sum(len(b.indices) for b in entry.buckets)
+        out: list = [None] * nroots
+        launched = []
+        for b, c in zip(entry.buckets, entry.bucket_choices):
+            if c.use_kernel:
+                sub = dataclasses.replace(b, indices=tuple(
+                    range(len(b.roots))))
+                lanes = c.run_bucketed(self.ds, list(b.roots),
+                                       buckets=(sub,),
+                                       check_overflow=check_overflow,
+                                       fallback_caps=global_caps)
+                for lane, idx in enumerate(b.indices):
+                    out[idx] = lanes[lane]
+                continue
+            launched.append((b, c,
+                             run_query_batch(c.query, self.ds,
+                                             list(b.roots))))
+        for b, c, r in launched:
+            if (c.query.caps != global_caps
+                    and bool(np.any(np.asarray(r.overflow)))):
+                retry = dataclasses.replace(c.query, caps=global_caps)
+                r = run_query_batch(retry, self.ds, list(b.roots))
+            dressed = c.dress(r, check_overflow=check_overflow,
+                              caps=c.query.caps)
+            host = jax.tree_util.tree_map(np.asarray, dressed)
+            for lane, idx in enumerate(b.indices):
+                out[idx] = jax.tree_util.tree_map(
+                    lambda a, lane=lane: a[lane], host)
+        return out
+
+    def submit(self, sql: str, roots: Sequence[int],
+               *, check_overflow: bool = True) -> list[BFSResult]:
+        """Answer one batched traversal request: per-root results in
+        request order (one bucketed dispatch per reach class, each bucket
+        running ITS OWN chosen engine with right-sized caps)."""
+        self.requests += 1
+        logical = self._logical_for(sql)
+        entry = self._entry_for(logical, roots)
+        t0 = time.perf_counter()
+        out = self._execute(entry, check_overflow)
+        self.last_latency_us = (time.perf_counter() - t0) * 1e6
+        entry.last_latency_us = self.last_latency_us
+        return out
+
+    def plan_for(self, sql: str, roots: Sequence[int]) -> PlanEntry:
+        """The cached plan entry this session would serve ``roots`` with
+        (plans/caches on first use; does not execute)."""
+        return self._entry_for(self._logical_for(sql), roots)
+
+    def plan_json(self, sql: str, roots: Sequence[int]) -> dict:
+        """The machine-readable plan this session would serve ``roots``
+        with (cached; does not execute)."""
+        return self.plan_for(sql, roots).plan_json
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "requests": self.requests,
+            "plan_hits": self.plan_hits,
+            "plan_misses": self.plan_misses,
+            "cached_shapes": len(self._choice),
+            "cached_plans": len(self._plans),
+            "last_latency_us": self.last_latency_us,
+        }
