@@ -1,7 +1,7 @@
 """Serving experiment: cached-plan dispatch latency for the traversal
 serving layer (beyond-paper; the ROADMAP's many-users north star).
 
-Three cells:
+Five cells:
 
 * ``exp_serving/cold_plan`` — the FIRST request for a query shape: parse +
   statistics + costing + bucket layout + jit compiles.  Paid once per
@@ -12,19 +12,38 @@ Three cells:
 * ``exp_serving/bucketed_vs_sequential`` — the reach-bucketed batch against
   a Python loop of single-root queries through the same chosen plan (the
   exp1 regression cell, measured at the serving layer).
+* ``exp_serving/calibrated_regret`` — the calibration gate: the warm
+  traffic above fed the session's calibrator; REFIT the cost constants and
+  re-rank — the calibrated pick's measured time vs the best forced engine
+  (``calibrated_vs_best_forced``) must stay within the planner-regret bar,
+  i.e. closing the feedback loop must not make selection WORSE.
+* ``exp_serving/rehydrated_serving`` — the plan-store gate: save the
+  session's plan store, rehydrate a fresh session from it, replay the same
+  batch — ``rehydrated_match=1`` iff every root's row set is identical to
+  the cold session's, with zero parse/stats/costing calls.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import jax
+import numpy as np
 
 from repro.core.engine import run_query
-from repro.planner import ServingSession, paper_listing
+from repro.planner import ServingSession, paper_listing, plan
 
 from .bench_util import emit, time_call, tree_dataset
 
 BATCH_ROOTS = 8
+
+
+def _row_set(r):
+    n = int(r.count)
+    ids = np.asarray(r.values["id"])[:n].tolist()
+    depths = np.asarray(r.row_depths)[:n].tolist()
+    return sorted(zip(ids, depths))
 
 
 def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
@@ -67,6 +86,41 @@ def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
          us_warm / BATCH_ROOTS,
          f"per_root_speedup_vs_sequential="
          f"{us_seq / max(us_warm, 1e-9):.2f}")
+
+    # -- calibration gate: refit constants must not worsen selection ------
+    cal = session.calibrator
+    consts = cal.refit()
+    caps = choice.query.caps
+    cal_report = plan(sql, ds, caps=caps, constants=consts)
+    forced = {c.label: time_call(run_query, c.query, ds, 0, repeat=repeat)
+              for c in cal_report.ranked if not c.use_kernel}
+    best_forced = min(forced, key=forced.get)
+    us_cal = forced[cal_report.best.label]
+    regret = us_cal / max(forced[best_forced], 1e-9)
+    out["calibrated_regret"] = regret
+    emit(f"exp_serving/calibrated_regret/d{depth}", us_cal,
+         f"chose={cal_report.best.label},best_forced={best_forced},"
+         f"calibrated_vs_best_forced={regret:.2f},"
+         f"observations={cal.count},refits={cal.refits}")
+
+    # -- plan-store gate: rehydrated serving must match cold results ------
+    cold_res = session.submit(sql, roots)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "plan_store.json")
+        session.save_plan_store(path)
+        warm = ServingSession(ds, plan_store=path)
+        t0 = time.perf_counter()
+        warm_res = warm.submit(sql, roots)
+        jax.block_until_ready([r.count for r in warm_res])
+        us_rehydrated = (time.perf_counter() - t0) * 1e6
+    match = all(_row_set(a) == _row_set(b)
+                for a, b in zip(cold_res, warm_res))
+    planning = sum(warm.counters.values())
+    out["rehydrated_match"] = match
+    emit(f"exp_serving/rehydrated_serving/d{depth}", us_rehydrated,
+         f"rehydrated_match={int(match)},planning_calls={planning},"
+         f"first_request_vs_cold_plan="
+         f"{us_rehydrated / max(us_cold, 1e-9):.2f}")
     return out
 
 

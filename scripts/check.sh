@@ -14,6 +14,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== dev deps (hypothesis: property suites) =="
+# hit the network only when hypothesis is actually missing; on failure the
+# property suites still RUN on the vendored fallback engine
+python -c "import hypothesis" 2>/dev/null \
+  || python -m pip install -q -r requirements-dev.txt \
+  || echo "WARNING: pip install failed (offline?); property suites run" \
+          "on the vendored fallback engine (tests/_hypothesis_fallback.py)"
+
 echo "== tier-1 pytest =="
 python -m pytest -x -q
 

@@ -6,7 +6,14 @@ Fails (exit 1) when the perf trajectory regresses past the ROADMAP bars:
   batched serving path must beat a sequential loop per root (this cell was
   0.41 before reach bucketing; the gate keeps it from regressing);
 * any planner cell reporting ``vs_best_forced`` above 1.2 — the planner's
-  selection regret bar.
+  selection regret bar;
+* the calibration gate: any cell reporting ``calibrated_vs_best_forced``
+  above the same 1.2 bar — REFIT cost constants (the serving feedback
+  loop, ``exp_serving/calibrated_regret``) must not make engine selection
+  worse than the bar the hand-calibrated prior meets;
+* the plan-store gate: any cell reporting ``rehydrated_match`` other than
+  1 — a session rehydrated from a plan store must produce row-identical
+  results to the cold-planned session (``exp_serving/rehydrated_serving``).
 
 The lockstep reference cell deliberately reports its ratio under a
 different key (``lockstep_vs_sequential``) so the gate does not fire on the
@@ -22,9 +29,13 @@ import sys
 
 SPEEDUP_RE = re.compile(r"(?:^|,)per_root_speedup_vs_sequential=([\d.]+)")
 REGRET_RE = re.compile(r"(?:^|,)vs_best_forced=([\d.]+)")
+CAL_REGRET_RE = re.compile(r"(?:^|,)calibrated_vs_best_forced=([\d.]+)")
+REHYDRATED_RE = re.compile(r"(?:^|,)rehydrated_match=(\d+)")
 
 MIN_PER_ROOT_SPEEDUP = 1.0
 MAX_PLANNER_REGRET = 1.2
+
+GATES = (SPEEDUP_RE, REGRET_RE, CAL_REGRET_RE, REHYDRATED_RE)
 
 
 def check(rows: dict) -> list[str]:
@@ -42,6 +53,18 @@ def check(rows: dict) -> list[str]:
             failures.append(
                 f"{name}: vs_best_forced={m.group(1)} > "
                 f"{MAX_PLANNER_REGRET} (planner selection regret bar)")
+        m = CAL_REGRET_RE.search(derived)
+        if m and float(m.group(1)) > MAX_PLANNER_REGRET:
+            failures.append(
+                f"{name}: calibrated_vs_best_forced={m.group(1)} > "
+                f"{MAX_PLANNER_REGRET} (refit constants must not worsen "
+                "planner regret)")
+        m = REHYDRATED_RE.search(derived)
+        if m and int(m.group(1)) != 1:
+            failures.append(
+                f"{name}: rehydrated_match={m.group(1)} != 1 "
+                "(plan-store-rehydrated serving must match cold-plan "
+                "results)")
     return failures
 
 
@@ -56,8 +79,7 @@ def main(argv=None) -> int:
             print(f"  FAIL {msg}")
         return 1
     gated = sum(1 for r in rows.values()
-                if SPEEDUP_RE.search(r.get("derived", ""))
-                or REGRET_RE.search(r.get("derived", "")))
+                if any(g.search(r.get("derived", "")) for g in GATES))
     print(f"perf gate OK: {gated} gated cell(s) of {len(rows)} in {path}")
     return 0
 

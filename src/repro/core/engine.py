@@ -25,7 +25,8 @@ queries (the multi-tenant fan-out the ROADMAP targets).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Literal
+import time
+from typing import Callable, Dict, Literal, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -208,6 +209,94 @@ def result_lane(r: BFSResult, lane: int) -> BFSResult:
     return jax.tree_util.tree_map(lambda a: a[lane], r)
 
 
+@dataclasses.dataclass(frozen=True)
+class BucketTiming:
+    """One bucket's measured dispatch, reported by
+    :func:`dispatch_buckets` to its observer — the planner's calibration
+    feedback loop consumes these.
+
+    ``elapsed_us`` attributes DEVICE time to this bucket: the interval from
+    max(this bucket's launch, the previous bucket's completion) to this
+    bucket's results being materialized.  Buckets are launched back-to-back
+    and executed in order on one stream, so without the max() every
+    bucket's wait on its predecessors would be double-counted."""
+
+    index: int                 # position in the buckets sequence
+    lanes: int                 # real lanes (len(bucket.indices))
+    padded_lanes: int          # dispatched lanes (len(bucket.roots))
+    caps: EngineCaps           # the caps the MEASURED dispatch ran with
+    retried: bool              # True when the fallback-caps retry ran
+    elapsed_us: float
+
+
+def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
+                     fallback_caps: EngineCaps,
+                     finish: Optional[Callable] = None,
+                     observer: Optional[Callable] = None,
+                     to_host: bool = False) -> list:
+    """THE bucket-dispatch executor: every reach-bucketed execution path
+    (:func:`run_query_buckets`, ``PhysicalChoice.run_bucketed``'s kernel
+    branch, ``ServingSession._execute``) delegates here, so the shared
+    launch -> overflow-retry -> scatter-by-indices shape exists exactly
+    once and cannot drift.
+
+    ``dispatch(index, bucket, caps)`` runs one batched dispatch for a
+    bucket at the given caps and returns a batched ``BFSResult`` (leading
+    lane dimension).  The executor:
+
+    * launches EVERY bucket before touching any result — dispatches are
+      async, and the host-side overflow check must not serialize them;
+    * retries a bucket once with ``fallback_caps`` when its predicted caps
+      overflowed (bucket caps are predictions; bucketing must never turn a
+      valid query into a truncated result — at worst it costs one extra
+      dispatch);
+    * applies the optional ``finish(index, bucket, result)`` hook to the
+      batched result (the serving layer dresses per-bucket results here);
+    * scatters lanes back to the ORIGINAL root order via each bucket's
+      ``indices`` (``to_host=True`` converts each bucket's result to host
+      numpy first — one transfer per bucket, lanes become free views);
+    * measures per-bucket wall-clock ONCE, consistently, and reports it to
+      ``observer(timing)`` as a :class:`BucketTiming` — this is the single
+      measurement point the cost-model calibrator trusts.
+    """
+    buckets = tuple(buckets)
+    total = sum(len(b.indices) for b in buckets)
+    out: list = [None] * total
+    launched = []
+    for i, b in enumerate(buckets):
+        t0 = time.perf_counter()
+        launched.append((i, b, t0, dispatch(i, b, b.caps)))
+    prev_done = None
+    for i, b, t0, r in launched:
+        retried = False
+        if (b.caps != fallback_caps
+                and bool(np.any(np.asarray(r.overflow)))):
+            r = dispatch(i, b, fallback_caps)
+            retried = True
+        if finish is not None:
+            r = finish(i, b, r)
+        if to_host:
+            # one device->host transfer per bucket (also synchronizes)
+            r = jax.tree_util.tree_map(np.asarray, r)
+        elif observer is not None:
+            jax.block_until_ready(r)     # timing needs a real completion
+        t_done = time.perf_counter()
+        for lane, idx in enumerate(b.indices):
+            out[idx] = jax.tree_util.tree_map(
+                lambda a, lane=lane: a[lane], r)
+        if observer is not None:
+            start = t0 if prev_done is None else max(t0, prev_done)
+            observer(BucketTiming(
+                index=i, lanes=len(b.indices), padded_lanes=len(b.roots),
+                caps=(fallback_caps if retried else b.caps),
+                retried=retried, elapsed_us=(t_done - start) * 1e6))
+        prev_done = t_done
+    if any(x is None for x in out):
+        raise ValueError("buckets do not cover lanes 0..%d exactly"
+                         % (total - 1))
+    return out
+
+
 def run_query_buckets(q: RecursiveQuery, ds: Dataset, buckets
                       ) -> list[BFSResult]:
     """Reach-bucketed serving execution: one jitted batched dispatch PER
@@ -218,30 +307,14 @@ def run_query_buckets(q: RecursiveQuery, ds: Dataset, buckets
     :func:`repro.planner.optimize.bucket_roots`) carrying ``roots``,
     ``indices`` (lanes in the original root vector) and ``caps``.  Results
     come back PER ROOT, in the original order; each entry is bit-identical
-    to ``run_query(q, ds, root)`` on its root.
+    to ``run_query(q, ds, root)`` on its root.  Launch ordering, the
+    global-caps overflow retry, and the scatter live in
+    :func:`dispatch_buckets` (the one shared executor)."""
+    def _dispatch(i, b, caps):
+        qb = dataclasses.replace(q, caps=caps) if caps != q.caps else q
+        return run_query_batch(qb, ds, b.roots)
 
-    Capacity safety: bucket caps are predictions.  A bucket that overflows
-    its predicted caps is transparently retried once with the query's own
-    (global) caps, so bucketing can never turn a valid query into a
-    truncated result — at worst it costs one extra dispatch."""
-    total = sum(len(b.indices) for b in buckets)
-    out: list = [None] * total
-    # launch EVERY bucket before touching any result: the dispatches are
-    # async, and the host-side overflow check must not serialize them
-    launched = []
-    for b in buckets:
-        qb = (dataclasses.replace(q, caps=b.caps)
-              if b.caps != q.caps else q)
-        launched.append((b, qb, run_query_batch(qb, ds, b.roots)))
-    for b, qb, r in launched:
-        if qb is not q and bool(np.any(np.asarray(r.overflow))):
-            r = run_query_batch(q, ds, b.roots)     # global-caps fallback
-        for lane, idx in enumerate(b.indices):
-            out[idx] = result_lane(r, lane)
-    if any(x is None for x in out):
-        raise ValueError("buckets do not cover lanes 0..%d exactly"
-                         % (total - 1))
-    return out
+    return dispatch_buckets(buckets, _dispatch, fallback_caps=q.caps)
 
 
 def plan_and_run(sql_or_ast, ds: Dataset, roots=None, **kwargs) -> BFSResult:

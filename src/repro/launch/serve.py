@@ -12,6 +12,11 @@ with the plan cache amortizing parse/stats/costing across requests:
 
     python -m repro.launch.serve --traversal --vertices 20000 --height 10 \
         --batch 8 --requests 32 --depth 4
+
+With ``--plan-store PATH`` the session persists its plan + calibration
+caches: the first run writes PATH, every later run rehydrates from it and
+answers its first request with zero parse/stats/costing work (the
+"(rehydrated)" line reports the session counters to prove it).
 """
 from __future__ import annotations
 
@@ -56,6 +61,8 @@ def serve_traversals(args) -> dict:
     """The graph-traversal serving loop: one ServingSession, ``--requests``
     batches of mixed hub/leaf roots, steady-state latency from the plan
     cache + bucketed dispatch.  Returns the session's counters."""
+    import os
+
     from repro.core.engine import Dataset
     from repro.data.treegen import TreeSpec, make_edge_table
     from repro.planner import ServingSession, paper_listing
@@ -64,7 +71,13 @@ def serve_traversals(args) -> dict:
                     payload_cols=0, seed=0)
     ds = Dataset.prepare(make_edge_table(spec), spec.num_vertices)
     sql = paper_listing(1, root=0, depth=args.depth)
-    session = ServingSession(ds)
+    rehydrated = (args.plan_store is not None
+                  and os.path.exists(args.plan_store))
+    session = ServingSession(ds, plan_store=args.plan_store)
+    if rehydrated:
+        print(f"(rehydrated) plan store {args.plan_store}: "
+              f"{len(session._plans)} plan(s), "
+              f"{session.calibrator.count} calibration observation(s)")
 
     rng = np.random.RandomState(0)
     t_first = t_steady = 0.0
@@ -90,6 +103,13 @@ def serve_traversals(args) -> dict:
           f"{stats['plan_misses']} misses over "
           f"{stats['cached_plans']} plan(s), "
           f"{stats['cached_shapes']} query shape(s)")
+    print(f"planning paid: {stats['parse_calls']} parse / "
+          f"{stats['stats_calls']} stats / {stats['cost_calls']} costing "
+          f"pass(es); calibration: {stats['calibration_observations']} "
+          f"observation(s), {stats['calibration_refits']} refit(s)")
+    if args.plan_store is not None:
+        session.save_plan_store()
+        print(f"plan store saved to {args.plan_store}")
     return stats
 
 
@@ -108,6 +128,9 @@ def main(argv=None):
     ap.add_argument("--height", type=int, default=10)
     ap.add_argument("--depth", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--plan-store", default=None, metavar="PATH",
+                    help="persist plans + calibration: rehydrate from PATH "
+                         "when it exists, save to it on exit")
     args = ap.parse_args(argv)
 
     if args.traversal:

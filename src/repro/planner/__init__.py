@@ -13,9 +13,14 @@ The layers (one module each):
   Pallas-kernel expansion), ranks, and executes the winner;
 * :mod:`repro.planner.explain`  — EXPLAIN with per-operator estimated rows
   and bytes for every candidate, plus the machine-readable plan
-  (:func:`to_json`);
+  (:func:`to_json`, ``schema_version`` 2);
 * :mod:`repro.planner.serving`  — the plan-cached, reach-bucketed serving
-  session (one graph, many root batches).
+  session (one graph, many root batches);
+* :mod:`repro.planner.calibrate` — the feedback loop: measured per-bucket
+  serving latencies refit the :class:`CostConstants` (and the kernel
+  factor is MEASURED, not guessed);
+* :mod:`repro.planner.plan_store` — persist the plan + calibration caches
+  across processes (schema-version-2 JSON, v1 still loads).
 
 Entry points: :func:`plan_and_run` (also re-exported as
 ``repro.core.engine.plan_and_run``), :func:`choose`, :func:`explain`,
@@ -23,7 +28,11 @@ Entry points: :func:`plan_and_run` (also re-exported as
 """
 from .ast import (LogicalQuery, ParseError, RecursiveCTE,      # noqa: F401
                   normalize, paper_listing, parse)
-from .cost import OpEstimate, PlanCost, pipeline_cost          # noqa: F401
+from .calibrate import (Calibrator, Observation,               # noqa: F401
+                        measured_kernel_factor, plan_signature,
+                        stats_digest)
+from .cost import (CostConstants, DEFAULT_CONSTANTS,           # noqa: F401
+                   OpEstimate, PlanCost, estimate_us, pipeline_cost)
 from .explain import (explain, explain_json, render_report,    # noqa: F401
                       to_json)
 from .optimize import (KERNEL_LABEL, PhysicalChoice,           # noqa: F401
@@ -31,5 +40,8 @@ from .optimize import (KERNEL_LABEL, PhysicalChoice,           # noqa: F401
                        choose, default_caps, kernel_expand_fn, plan,
                        plan_and_run)
 from .serving import PlanEntry, ServingSession, shape_key      # noqa: F401
+from .plan_store import (graph_digest, load_store,             # noqa: F401
+                         migrate_plan_doc, rehydrate_session,
+                         save_session)
 from .stats import (GraphStats, RootEstimate, compute_stats,   # noqa: F401
                     root_estimates)

@@ -17,28 +17,86 @@ block CAPACITY, not the live row count (measured: this is what makes the
 dense bitmap engine win small graphs with generous blocks, while positional
 wins once ``E`` dwarfs the block size — the planner reproduces both).
 
-Bytes are converted to an estimated wall time with two constants — an
-effective memory bandwidth and a fixed per-level driver overhead — so that a
-2-level query on a dense O(E) pipeline is not mistaken for free.  The
-constants only break ties; the ranking currency is bytes.
+Bytes are converted to an estimated wall time through a small set of
+:class:`CostConstants` — an effective memory bandwidth, a fixed per-level
+driver overhead, a per-query base, and the relative cost of the plugged
+Pallas expansion kernel — so that a 2-level query on a dense O(E) pipeline
+is not mistaken for free.  The constants only break ties; the ranking
+currency is bytes.  :data:`DEFAULT_CONSTANTS` is the hand-calibrated CPU
+prior; :mod:`repro.planner.calibrate` REFITS all four constants online from
+measured per-bucket serving latencies, and the refit values flow back into
+:func:`pipeline_cost` through the ``constants`` argument (this is why
+:class:`PlanCost` keeps the factor-independent ``plain_bytes`` /
+``kernel_bytes`` split: re-pricing a plan under new constants is arithmetic,
+not a re-walk of the operator tree).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 from repro.core.operators import CostEnv, Pipeline
 
 from .stats import GraphStats
 
-__all__ = ["OpEstimate", "PlanCost", "pipeline_cost", "column_bytes"]
+__all__ = ["CostConstants", "DEFAULT_CONSTANTS", "OpEstimate", "PlanCost",
+           "pipeline_cost", "estimate_us", "column_bytes"]
 
 # effective bandwidth (bytes/us) + fixed per-level and per-query overheads.
 # Deliberately round numbers: they convert bytes into a human-readable
 # microsecond scale and arbitrate between "more levels" and "more bytes";
-# the byte counts themselves carry the ranking.
+# the byte counts themselves carry the ranking.  These are the PRIOR values
+# (one CPU profile); the calibrator refits them from measured latencies.
 BYTES_PER_US = 10_000.0
 LEVEL_US = 25.0
 BASE_US = 50.0
+
+
+class CostConstants(NamedTuple):
+    """The cost model's time constants, refittable as one unit.
+
+    ``kernel_factor`` is the relative byte cost of the Pallas
+    ``frontier_expand`` kernel vs the XLA expansion.  ``None`` means "not
+    yet measured": the planner resolves it lazily through
+    :func:`repro.planner.calibrate.measured_kernel_factor` (a real timed
+    micro-benchmark, replacing the static 0.7x/200x guess) the first time a
+    kernel candidate is priced."""
+
+    bytes_per_us: float = BYTES_PER_US
+    level_us: float = LEVEL_US
+    base_us: float = BASE_US
+    kernel_factor: Optional[float] = None
+
+    def to_json(self) -> dict:
+        return {"bytes_per_us": self.bytes_per_us, "level_us": self.level_us,
+                "base_us": self.base_us, "kernel_factor": self.kernel_factor}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "CostConstants":
+        return cls(bytes_per_us=float(doc["bytes_per_us"]),
+                   level_us=float(doc["level_us"]),
+                   base_us=float(doc["base_us"]),
+                   kernel_factor=(None if doc.get("kernel_factor") is None
+                                  else float(doc["kernel_factor"])))
+
+
+DEFAULT_CONSTANTS = CostConstants()
+
+
+def estimate_us(constants: CostConstants, *, plain_bytes: float,
+                kernel_bytes: float, levels: int) -> float:
+    """The cost model's time formula over the factor-independent byte split:
+    ``base + level_us * levels + (plain + kf * kernel) / bandwidth``.
+    This is the single place bytes become microseconds — the optimizer, the
+    calibrator's least-squares design matrix, and EXPLAIN all agree on it."""
+    kf = constants.kernel_factor
+    if kernel_bytes > 0.0 and kf is None:
+        raise ValueError(
+            "pricing a kernel-expansion pipeline needs a concrete "
+            "kernel_factor; resolve it first (see "
+            "repro.planner.calibrate.measured_kernel_factor)")
+    total = plain_bytes + (kf or 0.0) * kernel_bytes
+    return (constants.base_us + constants.level_us * levels
+            + total / constants.bytes_per_us)
 
 
 class OpEstimate(NamedTuple):
@@ -55,6 +113,11 @@ class PlanCost(NamedTuple):
     levels: int
     result_rows: float
     per_op: Tuple[OpEstimate, ...]     # seed, *loop ops, finisher
+    # factor-independent byte split: total_bytes == plain_bytes +
+    # kernel_factor * kernel_bytes.  The calibrator's design matrix and the
+    # plan store re-price plans from these without re-walking the pipeline.
+    plain_bytes: float = 0.0
+    kernel_bytes: float = 0.0
 
 
 def column_bytes(table) -> dict:
@@ -108,12 +171,25 @@ def _level_envs(pipeline: Pipeline, stats: GraphStats, *, row_bytes: int,
 
 
 def pipeline_cost(pipeline: Pipeline, stats: GraphStats, *, row_bytes: int,
-                  col_bytes: dict, kernel_factor: float = 1.0) -> PlanCost:
+                  col_bytes: dict,
+                  constants: Optional[CostConstants] = None) -> PlanCost:
     """Estimate rows and bytes for every operator of ``pipeline`` and the
-    total cost of running it to its fixed point."""
+    total cost of running it to its fixed point.
+
+    The per-operator byte estimates are linear in ``CostEnv.kernel_factor``
+    (only a plugged expansion kernel scales with it), so two walks — one at
+    factor 0, one at factor 1 — recover the factor-independent split
+    ``plain_bytes + kernel_factor * kernel_bytes`` that the calibrator
+    refits against and the plan store re-prices from."""
+    consts = constants if constants is not None else DEFAULT_CONSTANTS
     envs = _level_envs(pipeline, stats, row_bytes=row_bytes,
-                       col_bytes=col_bytes, kernel_factor=kernel_factor)
+                       col_bytes=col_bytes, kernel_factor=1.0)
     result_rows = stats.total_edges(pipeline.max_depth)
+    all_ops = (pipeline.seed, *pipeline.ops, pipeline.finisher)
+    # only a plugged expansion kernel makes byte estimates factor-
+    # sensitive; everything else is priced in one walk
+    has_kernel = any(getattr(op, "expand_fn", None) is not None
+                     for op in all_ops)
 
     def total_env(rows):
         return CostEnv(frontier_rows=rows, unique_rows=rows,
@@ -122,27 +198,42 @@ def pipeline_cost(pipeline: Pipeline, stats: GraphStats, *, row_bytes: int,
                        frontier_cap=pipeline.caps.frontier,
                        result_cap=pipeline.caps.result,
                        row_bytes=row_bytes, col_bytes=col_bytes,
-                       kernel_factor=kernel_factor)
+                       kernel_factor=1.0)
+
+    # (plain bytes at factor 0, unit kernel bytes = bytes@1 - bytes@0)
+    def split(op, env) -> tuple[float, float, float]:
+        at1 = op.estimate(env)
+        if not has_kernel:
+            return at1.rows, at1.bytes, 0.0
+        at0 = op.estimate(env._replace(kernel_factor=0.0))
+        return at1.rows, at0.bytes, at1.bytes - at0.bytes
 
     # the seed runs once, with the level-0 cardinalities
     seed_env = envs[0] if envs else total_env(stats.edges_at(0))
-    seed_cost = pipeline.seed.estimate(seed_env)
-    per_op = [[pipeline.seed.describe(), seed_cost.rows, seed_cost.bytes]]
+    rows, plain, kern = split(pipeline.seed, seed_env)
+    per_op = [[pipeline.seed.describe(), rows, plain, kern]]
 
     for op in pipeline.ops:
-        per_op.append([op.describe(), 0.0, 0.0])
+        per_op.append([op.describe(), 0.0, 0.0, 0.0])
     for env in envs:
         for slot, op in zip(per_op[1:], pipeline.ops):
-            c = op.estimate(env)
-            slot[1] += c.rows
-            slot[2] += c.bytes
+            rows, plain, kern = split(op, env)
+            slot[1] += rows
+            slot[2] += plain
+            slot[3] += kern
 
-    fin = pipeline.finisher.estimate(total_env(result_rows))
-    per_op.append([pipeline.finisher.describe(), fin.rows, fin.bytes])
+    rows, plain, kern = split(pipeline.finisher, total_env(result_rows))
+    per_op.append([pipeline.finisher.describe(), rows, plain, kern])
 
-    total_bytes = sum(slot[2] for slot in per_op)
-    est_us = BASE_US + LEVEL_US * len(envs) + total_bytes / BYTES_PER_US
+    plain_bytes = sum(slot[2] for slot in per_op)
+    kernel_bytes = sum(slot[3] for slot in per_op)
+    # estimate_us is THE pricing formula (and the unresolved-kernel guard)
+    est_us = estimate_us(consts, plain_bytes=plain_bytes,
+                         kernel_bytes=kernel_bytes, levels=len(envs))
+    kf = consts.kernel_factor or 0.0
     return PlanCost(
-        total_bytes=total_bytes, est_us=est_us, levels=len(envs),
-        result_rows=result_rows,
-        per_op=tuple(OpEstimate(lbl, r, b) for lbl, r, b in per_op))
+        total_bytes=plain_bytes + kf * kernel_bytes, est_us=est_us,
+        levels=len(envs), result_rows=result_rows,
+        per_op=tuple(OpEstimate(lbl, r, p + kf * k)
+                     for lbl, r, p, k in per_op),
+        plain_bytes=plain_bytes, kernel_bytes=kernel_bytes)

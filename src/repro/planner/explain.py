@@ -12,6 +12,14 @@ dict, ``json.dumps``-able): the serving layer caches these per query shape
 so repeated traffic skips parsing/stats/costing, and external tooling can
 diff plans across PRs.  ``schema_version`` gates consumers; the schema is
 documented in docs/serving.md.
+
+Schema version 2 extends v1 with everything a COLD PROCESS needs to
+rehydrate a plan without re-planning (:mod:`repro.planner.plan_store`):
+the full graph statistics (per-root profiles, walk profile, histogram),
+the factor-independent ``plain_bytes``/``kernel_bytes`` cost split per
+candidate, and the :class:`~repro.planner.cost.CostConstants` the pass was
+priced with.  v1 documents still load through
+:func:`repro.planner.plan_store.migrate_plan_doc`.
 """
 from __future__ import annotations
 
@@ -24,7 +32,7 @@ from .optimize import PhysicalChoice, PlannerReport, RootBucket, plan
 
 __all__ = ["explain", "explain_json", "render_report", "to_json"]
 
-PLAN_SCHEMA_VERSION = 1
+PLAN_SCHEMA_VERSION = 2
 
 
 def _fmt_bytes(b: float) -> str:
@@ -107,7 +115,11 @@ def _choice_json(c: PhysicalChoice, chosen: bool) -> dict:
         "cost": {"est_us": c.cost.est_us,
                  "total_bytes": c.cost.total_bytes,
                  "levels": c.cost.levels,
-                 "result_rows": c.cost.result_rows},
+                 "result_rows": c.cost.result_rows,
+                 # v2: factor-independent split — a rehydrating process
+                 # re-prices the plan from these under ITS constants
+                 "plain_bytes": c.cost.plain_bytes,
+                 "kernel_bytes": c.cost.kernel_bytes},
         "ops": [{"label": op.label, "rows": op.rows, "bytes": op.bytes}
                 for op in c.cost.per_op],
     }
@@ -145,7 +157,15 @@ def to_json(report: PlannerReport,
             "level_edges": list(st.level_edges),
             "max_levels": st.max_levels,
             "reach_edges": st.reach_edges,
+            # v2: the remaining GraphStats fields, so a plan store can
+            # rehydrate the statistics without touching the graph
+            "degree_histogram": list(st.degree_histogram),
+            "level_vertices": list(st.level_vertices),
+            "max_level_edges": st.max_level_edges,
+            "root_profiles": [[r, list(p)] for r, p in st.root_profiles],
+            "level_walk_edges": list(st.level_walk_edges),
         },
+        "cost_constants": report.constants.to_json(),
         "chosen": report.best.label,
         "candidates": [_choice_json(c, chosen=(i == 0))
                        for i, c in enumerate(report.ranked)],

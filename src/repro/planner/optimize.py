@@ -34,7 +34,9 @@ from repro.core.operators import (BFSResult, EngineCaps, Pipeline, execute,
 from repro.core.recursive import precursive_plan
 
 from .ast import LogicalQuery, RecursiveCTE, normalize, parse
-from .cost import PlanCost, column_bytes, pipeline_cost
+from .calibrate import kernel_expand_fn, resolve_constants
+from .cost import (CostConstants, DEFAULT_CONSTANTS, PlanCost, column_bytes,
+                   pipeline_cost)
 from .stats import GraphStats, root_estimates
 
 __all__ = ["PhysicalChoice", "PlannerReport", "RootBucket", "plan",
@@ -43,29 +45,10 @@ __all__ = ["PhysicalChoice", "PlannerReport", "RootBucket", "plan",
 
 KERNEL_LABEL = "precursive+kernel"
 
-_KERNEL_FN = None
-
-
-def kernel_expand_fn():
-    """The Pallas ``frontier_expand`` plug-in for ``CSRIndexJoin``, created
-    once so every planned pipeline shares one jit cache entry.  Interpret
-    mode is used off-TPU (numerically identical, not perf-representative)."""
-    global _KERNEL_FN
-    if _KERNEL_FN is None:
-        import jax
-
-        from repro.kernels.frontier_expand.ops import make_expand_fn
-        _KERNEL_FN = make_expand_fn(
-            interpret=jax.default_backend() != "tpu")
-    return _KERNEL_FN
-
-
-def _kernel_factor() -> float:
-    """Relative cost of the kernel expansion vs the XLA formulation: cheap
-    on TPU (fused VMEM-tiled phases), heavily penalized elsewhere where it
-    runs in interpret mode (~200x measured on the CI profile)."""
-    import jax
-    return 0.7 if jax.default_backend() == "tpu" else 200.0
+# The kernel candidate's relative cost is NOT a constant here: it is
+# CostConstants.kernel_factor — measured (repro.planner.calibrate.
+# measured_kernel_factor) when unresolved, then refit online from served
+# traffic.  The old static 0.7x-on-TPU / 200x-elsewhere guess is gone.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,20 +161,19 @@ class PhysicalChoice:
         if fallback_caps is None:
             fallback_caps = self.query.caps
         if self.use_kernel:
-            from repro.core.engine import result_lane
+            # launch/retry/scatter live in the ONE shared bucket executor;
+            # only the dispatch callback (kernel-expansion pipeline at the
+            # bucket's caps) is this plan's own
+            from repro.core.engine import dispatch_buckets
 
             ctx = ds.context(self.query.direction)
-            results = [None] * len(roots)
-            for b in buckets:
-                r = execute_batch(self._kernel_pipeline(b.caps), ctx,
-                                  np.asarray(b.roots), ds.num_vertices)
-                if (b.caps != fallback_caps
-                        and bool(np.any(np.asarray(r.overflow)))):
-                    r = execute_batch(self._kernel_pipeline(fallback_caps),
-                                      ctx, np.asarray(b.roots),
-                                      ds.num_vertices)
-                for lane, idx in enumerate(b.indices):
-                    results[idx] = result_lane(r, lane)
+
+            def _dispatch(i, b, caps):
+                return execute_batch(self._kernel_pipeline(caps), ctx,
+                                     np.asarray(b.roots), ds.num_vertices)
+
+            results = dispatch_buckets(buckets, _dispatch,
+                                       fallback_caps=fallback_caps)
         else:
             q = dataclasses.replace(self.query, caps=fallback_caps)
             results = run_query_buckets(q, ds, buckets)
@@ -207,6 +189,7 @@ class PlannerReport:
     stats: GraphStats
     ranked: Tuple[PhysicalChoice, ...]          # best first
     skipped: Tuple[Tuple[str, str], ...]        # (engine, reason)
+    constants: CostConstants = DEFAULT_CONSTANTS   # priced with THESE
 
     @property
     def best(self) -> PhysicalChoice:
@@ -354,9 +337,15 @@ def _illegal_reason(engine: str, logical: LogicalQuery) -> Optional[str]:
 def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
          root: Optional[int] = None, caps: Optional[EngineCaps] = None,
          include_kernel: bool = False,
-         default_max_depth: Optional[int] = None) -> PlannerReport:
+         default_max_depth: Optional[int] = None,
+         constants: Optional[CostConstants] = None) -> PlannerReport:
     """One full planning pass: parse/normalize as needed, price every legal
-    candidate, rank."""
+    candidate, rank.
+
+    ``constants`` are the cost-model time constants to price with — the
+    hand-calibrated prior by default, a :class:`~repro.planner.calibrate.
+    Calibrator`'s refit values when the serving feedback loop supplies
+    them.  An unresolved ``kernel_factor`` is measured on first use."""
     if isinstance(query, str):
         query = parse(query)
     if isinstance(query, RecursiveCTE):
@@ -369,6 +358,7 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
     stats = ds.stats(logical.direction)
     if caps is None:
         caps = default_caps(stats, logical)
+    consts = resolve_constants(constants, need_kernel=include_kernel)
 
     col_bytes = column_bytes(ds.table)
     row_bytes = ds.rows.width * 4
@@ -385,7 +375,7 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
                            direction=logical.direction)
         pipeline = PLAN_BUILDERS[engine](q)
         cost = pipeline_cost(pipeline, stats, row_bytes=row_bytes,
-                             col_bytes=col_bytes)
+                             col_bytes=col_bytes, constants=consts)
         candidates.append(PhysicalChoice(engine=engine, query=q,
                                          logical=logical, pipeline=pipeline,
                                          cost=cost))
@@ -397,8 +387,7 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
                                    logical.dedup, logical.direction,
                                    expand_fn=kernel_expand_fn())
         cost = pipeline_cost(pipeline, stats, row_bytes=row_bytes,
-                             col_bytes=col_bytes,
-                             kernel_factor=_kernel_factor())
+                             col_bytes=col_bytes, constants=consts)
         candidates.append(PhysicalChoice(engine="precursive", query=q,
                                          logical=logical, pipeline=pipeline,
                                          cost=cost, use_kernel=True))
@@ -407,7 +396,8 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
                          f"(skipped: {skipped!r})")
     candidates.sort(key=lambda c: (c.cost.est_us, c.label))
     return PlannerReport(logical=logical, stats=stats,
-                         ranked=tuple(candidates), skipped=tuple(skipped))
+                         ranked=tuple(candidates), skipped=tuple(skipped),
+                         constants=consts)
 
 
 def choose(query, ds: Dataset, **kwargs) -> PhysicalChoice:
@@ -419,7 +409,8 @@ def plan_and_run(query, ds: Dataset,
                  roots: Union[int, Sequence[int], None] = None, *,
                  caps: Optional[EngineCaps] = None,
                  include_kernel: bool = False,
-                 default_max_depth: Optional[int] = None) -> BFSResult:
+                 default_max_depth: Optional[int] = None,
+                 constants: Optional[CostConstants] = None) -> BFSResult:
     """Parse -> normalize -> cost -> pick -> execute, no engine name needed.
 
     ``roots`` may be one root (scalar) or a sequence (served as ONE
@@ -430,5 +421,5 @@ def plan_and_run(query, ds: Dataset,
         root = int(roots)
     best = choose(query, ds, root=root, caps=caps,
                   include_kernel=include_kernel,
-                  default_max_depth=default_max_depth)
+                  default_max_depth=default_max_depth, constants=constants)
     return best.run(ds, roots)

@@ -1,5 +1,6 @@
 """The traversal serving layer: a plan cache over the reach-bucketed batch
-execution path.
+execution path, with a calibration feedback loop and an optional persistent
+plan store.
 
 A serving process answers the same handful of query SHAPES over and over
 with different root batches (many users, one graph).  Re-running the full
@@ -24,24 +25,42 @@ vector is partitioned by root-conditional predicted reach
 re-costed WITH ITS OWN CAPS and gets its own engine — the capacity-aware
 cost model means a leaf bucket's tiny blocks favor the positional engine
 even when the hub bucket (or the whole-batch plan) favors the dense
-bitmap.  Each bucket runs as one jitted batched dispatch; a bucket that
-overflows its predicted caps is retried once with the global caps.
+bitmap.  Each bucket runs as one jitted batched dispatch through THE shared
+bucket executor (:func:`repro.core.engine.dispatch_buckets` — launch,
+overflow-retry and scatter live there, once); a bucket that overflows its
+predicted caps is retried once with the global caps.
+
+Two feedback mechanisms close the loop:
+
+* **calibration** — the executor times every warm bucket dispatch once,
+  consistently; the session feeds ``(plan signature, levels, byte split,
+  measured us)`` to its :class:`~repro.planner.calibrate.Calibrator`, which
+  periodically refits the :class:`~repro.planner.cost.CostConstants` used
+  by every subsequent planning pass (``calibrate_every``);
+* **the plan store** — ``session.save_plan_store(path)`` serializes every
+  cache grain plus the calibration state through the schema-version-2 plan
+  JSON (:mod:`repro.planner.plan_store`); ``ServingSession(ds,
+  plan_store=path)`` rehydrates them, so a warm process answers its first
+  request with ZERO parse/stats/cost calls (see ``session.counters``).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.engine import Dataset, run_query_batch
-from repro.core.operators import BFSResult, EngineCaps
+from repro.core.engine import (Dataset, dispatch_buckets, run_query_batch)
+from repro.core.operators import BFSResult, EngineCaps, execute_batch
 
 from .ast import LogicalQuery, normalize, parse
+from .calibrate import Calibrator, plan_signature, stats_digest
 from .explain import to_json
 from .optimize import (PhysicalChoice, PlannerReport, RootBucket,
                        bucket_roots, plan)
+from .stats import compute_stats
 
 __all__ = ["PlanEntry", "ServingSession", "shape_key"]
 
@@ -72,6 +91,9 @@ class PlanEntry:
     bucket_signature: Tuple[Tuple[int, int, int], ...]
     plan_json: dict
     hits: int = 0
+    served: int = 0          # executions IN THIS PROCESS (gates calibration:
+    #   a rehydrated entry is plan-warm but its dispatches still compile
+    #   on first serve, and compile time must not enter the fit)
     last_latency_us: float = 0.0
 
 
@@ -88,15 +110,25 @@ class ServingSession:
     because every bucket is re-costed with its own caps and may pick a
     different engine than the single-root plan, and engines order result
     rows differently.  ``session.stats`` reports request/hit counters and
-    the last request's latency."""
+    the last request's latency; ``session.counters`` reports how many
+    parse / statistics / costing passes the session has actually paid
+    (a plan-store-rehydrated session replaying known traffic pays none).
+    """
 
     def __init__(self, ds: Dataset, *, max_buckets: int = 4,
                  caps: Optional[EngineCaps] = None,
-                 include_kernel: bool = False):
+                 include_kernel: bool = False,
+                 calibrator: Optional[Calibrator] = None,
+                 calibrate_every: int = 32,
+                 plan_store: Optional[str] = None):
         self.ds = ds
         self.max_buckets = max_buckets
         self.caps = caps
         self.include_kernel = include_kernel
+        self.calibrator = calibrator if calibrator is not None \
+            else Calibrator()
+        self.calibrate_every = int(calibrate_every)
+        self.plan_store_path = plan_store
         self._logical: Dict[str, LogicalQuery] = {}
         self._choice: Dict[ShapeKey, PlannerReport] = {}
         self._bucket_plans: Dict[Tuple, PhysicalChoice] = {}
@@ -106,6 +138,14 @@ class ServingSession:
         self.plan_hits = 0
         self.plan_misses = 0
         self.last_latency_us = 0.0
+        # how much planning work this session has actually paid — a
+        # rehydrated session replaying known traffic keeps all three at 0
+        self.counters = {"parse_calls": 0, "stats_calls": 0,
+                         "cost_calls": 0}
+        self._last_refit_count = 0
+        if plan_store is not None and os.path.exists(plan_store):
+            from .plan_store import rehydrate_into
+            rehydrate_into(self, plan_store)
 
     # -- the three cache grains -------------------------------------------
     def _normalize_sql(self, sql: str) -> str:
@@ -114,14 +154,19 @@ class ServingSession:
     def _logical_for(self, sql: str) -> LogicalQuery:
         key = self._normalize_sql(sql)
         if key not in self._logical:
+            before = compute_stats.calls
+            self.counters["parse_calls"] += 1
             self._logical[key] = normalize(parse(sql), self.ds)
+            self.counters["stats_calls"] += compute_stats.calls - before
         return self._logical[key]
 
     def _report_for(self, logical: LogicalQuery) -> PlannerReport:
         key = shape_key(logical)
         if key not in self._choice:
+            self.counters["cost_calls"] += 1
             self._choice[key] = plan(logical, self.ds, caps=self.caps,
-                                     include_kernel=self.include_kernel)
+                                     include_kernel=self.include_kernel,
+                                     constants=self.calibrator.constants)
         return self._choice[key]
 
     def _bucket_choice(self, logical: LogicalQuery,
@@ -133,9 +178,11 @@ class ServingSession:
         scans.  Memoized per (shape, caps)."""
         key = (shape_key(logical), bucket.caps)
         if key not in self._bucket_plans:
+            self.counters["cost_calls"] += 1
             self._bucket_plans[key] = plan(
                 logical, self.ds, caps=bucket.caps,
-                include_kernel=self.include_kernel).best
+                include_kernel=self.include_kernel,
+                constants=self.calibrator.constants).best
         return self._bucket_plans[key]
 
     def _plan_doc(self, report: PlannerReport, buckets, choices) -> dict:
@@ -147,8 +194,13 @@ class ServingSession:
     _REQUEST_MEMO_MAX = 4096      # bound the exact-request fast path
 
     def _entry_for(self, logical: LogicalQuery, roots) -> PlanEntry:
-        report = self._report_for(logical)
-        choice = report.best
+        before = compute_stats.calls
+        try:
+            return self._entry_for_inner(logical, roots)
+        finally:
+            self.counters["stats_calls"] += compute_stats.calls - before
+
+    def _entry_for_inner(self, logical: LogicalQuery, roots) -> PlanEntry:
         roots = tuple(int(r) for r in np.asarray(roots).reshape(-1))
         # exact-repeat fast path: a byte-identical request skips the
         # bucket derivation entirely (bucketing is deterministic per
@@ -161,6 +213,8 @@ class ServingSession:
                 entry.hits += 1
                 self.plan_hits += 1
                 return entry
+        report = self._report_for(logical)
+        choice = report.best
         buckets = bucket_roots(
             self.ds, roots, direction=choice.query.direction,
             max_depth=choice.query.max_depth, dedup=choice.query.dedup,
@@ -197,61 +251,89 @@ class ServingSession:
         return entry
 
     # -- the serving entry point ------------------------------------------
-    def _execute(self, entry: PlanEntry,
-                 check_overflow: bool) -> list[BFSResult]:
+    def _observer(self, entry: PlanEntry):
+        """The calibration tap: one observation per measured warm bucket,
+        pairing the executor's timing with the bucket plan's cost-model
+        inputs.  Retried buckets are skipped — the measured dispatch ran
+        at caps the bucket plan was not priced for.  The plan's byte
+        estimates price ONE lane; the measured dispatch vmaps over the
+        bucket's padded lanes, so the predictors are scaled by the lane
+        count (and the lane count joins the signature — a 1-lane and an
+        8-lane dispatch are different jit programs doing different work)."""
+        digest = stats_digest(entry.report.stats)
+        shape = shape_key(entry.report.logical)
+
+        def _observe(t):
+            if t.retried:
+                return
+            c = entry.bucket_choices[t.index]
+            lanes = max(t.padded_lanes, 1)
+            self.calibrator.observe(
+                plan_signature(c.label, c.query.direction, t.caps, digest,
+                               lanes=lanes, shape=shape),
+                levels=c.cost.levels,
+                plain_bytes=lanes * c.cost.plain_bytes,
+                kernel_bytes=lanes * c.cost.kernel_bytes,
+                measured_us=t.elapsed_us)
+
+        return _observe
+
+    def _execute(self, entry: PlanEntry, check_overflow: bool,
+                 observe: bool = False) -> list[BFSResult]:
         """One batched dispatch per bucket, each with ITS chosen engine and
-        caps; overflowed buckets retry once with the shape-level (global)
-        caps on the same engine.
-
-        ALL buckets are launched before the first result is touched (the
-        dispatches are async; a Python-side overflow check must not
-        serialize them), and lanes are sliced as free host views off one
-        per-bucket transfer rather than as per-lane device ops."""
-        import jax
-
+        caps, through THE shared bucket executor
+        (:func:`repro.core.engine.dispatch_buckets`).  Only the dispatch
+        callback (each bucket's own engine/pipeline) and the dressing hook
+        are serving-specific; launch ordering, the global-caps overflow
+        retry, the host transfer/scatter and the per-bucket timing live in
+        the executor, shared with every other bucketed path."""
         global_caps = entry.choice.query.caps
-        nroots = sum(len(b.indices) for b in entry.buckets)
-        out: list = [None] * nroots
-        launched = []
-        for b, c in zip(entry.buckets, entry.bucket_choices):
+        choices = entry.bucket_choices
+
+        def _dispatch(i, b, caps):
+            c = choices[i]
             if c.use_kernel:
-                sub = dataclasses.replace(b, indices=tuple(
-                    range(len(b.roots))))
-                lanes = c.run_bucketed(self.ds, list(b.roots),
-                                       buckets=(sub,),
-                                       check_overflow=check_overflow,
-                                       fallback_caps=global_caps)
-                for lane, idx in enumerate(b.indices):
-                    out[idx] = lanes[lane]
-                continue
-            launched.append((b, c,
-                             run_query_batch(c.query, self.ds,
-                                             list(b.roots))))
-        for b, c, r in launched:
-            if (c.query.caps != global_caps
-                    and bool(np.any(np.asarray(r.overflow)))):
-                retry = dataclasses.replace(c.query, caps=global_caps)
-                r = run_query_batch(retry, self.ds, list(b.roots))
-            dressed = c.dress(r, check_overflow=check_overflow,
-                              caps=c.query.caps)
-            host = jax.tree_util.tree_map(np.asarray, dressed)
-            for lane, idx in enumerate(b.indices):
-                out[idx] = jax.tree_util.tree_map(
-                    lambda a, lane=lane: a[lane], host)
-        return out
+                ctx = self.ds.context(c.query.direction)
+                return execute_batch(c._kernel_pipeline(caps), ctx,
+                                     np.asarray(b.roots, np.int32),
+                                     self.ds.num_vertices)
+            q = (c.query if caps == c.query.caps
+                 else dataclasses.replace(c.query, caps=caps))
+            return run_query_batch(q, self.ds, list(b.roots))
+
+        def _finish(i, b, r):
+            return choices[i].dress(r, check_overflow=check_overflow,
+                                    caps=choices[i].query.caps)
+
+        return dispatch_buckets(
+            entry.buckets, _dispatch, fallback_caps=global_caps,
+            finish=_finish, observer=self._observer(entry) if observe
+            else None, to_host=True)
 
     def submit(self, sql: str, roots: Sequence[int],
                *, check_overflow: bool = True) -> list[BFSResult]:
         """Answer one batched traversal request: per-root results in
         request order (one bucketed dispatch per reach class, each bucket
-        running ITS OWN chosen engine with right-sized caps)."""
+        running ITS OWN chosen engine with right-sized caps).
+
+        Warm requests (plan-cache hits: the dispatches are compiled) are
+        timed per bucket and fed to the calibrator; every
+        ``calibrate_every`` observations the cost constants are refit, and
+        subsequent planning passes price with the refit values."""
         self.requests += 1
         logical = self._logical_for(sql)
         entry = self._entry_for(logical, roots)
+        warm = entry.served > 0      # dispatches compiled IN THIS process
         t0 = time.perf_counter()
-        out = self._execute(entry, check_overflow)
+        out = self._execute(entry, check_overflow, observe=warm)
         self.last_latency_us = (time.perf_counter() - t0) * 1e6
         entry.last_latency_us = self.last_latency_us
+        entry.served += 1
+        if (self.calibrate_every > 0
+                and self.calibrator.count - self._last_refit_count
+                >= self.calibrate_every):
+            self.calibrator.refit()
+            self._last_refit_count = self.calibrator.count
         return out
 
     def plan_for(self, sql: str, roots: Sequence[int]) -> PlanEntry:
@@ -264,6 +346,29 @@ class ServingSession:
         with (cached; does not execute)."""
         return self.plan_for(sql, roots).plan_json
 
+    # -- the feedback loops -----------------------------------------------
+    def recalibrate(self) -> None:
+        """Force a refit and RE-RANK: the choice / bucket-choice / plan
+        caches are dropped so the next request prices every candidate with
+        the refit constants (the logical cache and the request memo keep
+        their parse work; compiled dispatches stay warm in jit's cache)."""
+        self.calibrator.refit()
+        self._last_refit_count = self.calibrator.count
+        self._choice.clear()
+        self._bucket_plans.clear()
+        self._plans.clear()
+        self._requests.clear()
+
+    def save_plan_store(self, path: Optional[str] = None) -> str:
+        """Persist every cache grain + calibration state to ``path`` (or
+        the ``plan_store`` path the session was constructed with)."""
+        from .plan_store import save_session
+        path = path if path is not None else self.plan_store_path
+        if path is None:
+            raise ValueError("no plan-store path: pass one here or to "
+                             "ServingSession(plan_store=...)")
+        return save_session(self, path)
+
     @property
     def stats(self) -> dict:
         return {
@@ -273,4 +378,9 @@ class ServingSession:
             "cached_shapes": len(self._choice),
             "cached_plans": len(self._plans),
             "last_latency_us": self.last_latency_us,
+            "parse_calls": self.counters["parse_calls"],
+            "stats_calls": self.counters["stats_calls"],
+            "cost_calls": self.counters["cost_calls"],
+            "calibration_observations": self.calibrator.count,
+            "calibration_refits": self.calibrator.refits,
         }

@@ -252,7 +252,12 @@ def _pick_roots(src: np.ndarray, num_vertices: int) -> np.ndarray:
 
 def compute_stats(ds, direction: str = "outbound") -> GraphStats:
     """Compute (host-side) the planner statistics for one direction view.
-    Called through :meth:`Dataset.stats`, which caches the result."""
+    Called through :meth:`Dataset.stats`, which caches the result.
+
+    ``compute_stats.calls`` counts executions process-wide — the serving
+    session's ``stats_calls`` counter (and the plan-store tests asserting a
+    rehydrated session pays ZERO statistics passes) read it."""
+    compute_stats.calls += 1
     ctx = ds.context(direction)
     src = np.asarray(ctx.join_src).astype(np.int64)
     dst = np.asarray(ctx.join_dst).astype(np.int64)
@@ -309,6 +314,9 @@ def compute_stats(ds, direction: str = "outbound") -> GraphStats:
             for r, p in zip(roots, profiles)),
         level_walk_edges=tuple(float(x) for x in walk_edges),
     )
+
+
+compute_stats.calls = 0
 
 
 def root_estimates(ds, direction: str, roots: Sequence[int], max_depth: int

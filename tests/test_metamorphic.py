@@ -1,0 +1,290 @@
+"""Metamorphic traversal properties over random seeded graphs.
+
+Instead of comparing engines against one oracle, these tests check
+RELATIONS that must hold between traversals regardless of the graph:
+
+* **reversal** — an outbound BFS on the reversed graph (from/to swapped)
+  emits exactly the rows of an inbound BFS on the original graph: same
+  edge ids at the same depths.  Checked for all nine engines on the
+  reversed graph and, for the engines that support ``inbound``, the other
+  way around too (rowstore engines model the outbound-only PostgreSQL
+  baseline).
+* **both-direction closure** — ``direction="both"`` reachability equals
+  the UNDIRECTED reference closure (the fixed point of unioning outbound
+  and inbound steps) and therefore contains the union of the outbound and
+  inbound closures (the union alone is only a lower bound: alternating
+  in/out paths reach vertices neither one-directional closure does).
+* **depth monotonicity** — ``row_depths`` are monotone non-decreasing in
+  emission order, and every emitted edge leaves a vertex discovered
+  exactly one level earlier (the root counts as discovered at level -1's
+  end, i.e. its edges are the depth-0 rows).
+* **planner parity** — the planner-chosen plan is row-for-row (edge id +
+  depth multiset) equal to EVERY forced engine.
+
+The deterministic seeded slice always runs; the hypothesis property (real
+package or the vendored fallback engine) extends the seed set.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EngineCaps
+from repro.core.engine import (ENGINE_NAMES, Dataset, RecursiveQuery,
+                               run_query)
+from repro.core.table import ColumnTable
+from repro.planner import plan
+
+DIRECTIONS = ("outbound", "inbound", "both")
+
+
+def _legal(engine, direction):
+    return direction == "outbound" or not engine.startswith("rowstore")
+
+
+def _edge_dataset(src, dst, num_vertices):
+    e = len(src)
+    cols = {
+        "id": np.arange(e, dtype=np.int32),
+        "from": np.asarray(src, np.int32),
+        "to": np.asarray(dst, np.int32),
+        "name": np.zeros((e, 4), np.float32)}
+    return Dataset.prepare(ColumnTable.from_numpy(cols), num_vertices)
+
+
+def _random_graph(seed):
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(6, 40))
+    e = int(rng.integers(2, 3 * v))
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    depth = int(rng.integers(1, 5))
+    root = int(rng.integers(0, v))
+    return src, dst, v, root, depth
+
+
+def _caps(e):
+    return EngineCaps(frontier=e + 16, result=e + 16)
+
+
+def _rows(r):
+    """(edge id, depth) multiset of a BFSResult (ids are arange(e), so the
+    id doubles as the edge index)."""
+    n = int(r.count)
+    ids = np.asarray(r.values["id"])[:n].tolist()
+    depths = np.asarray(r.row_depths)[:n].tolist()
+    return sorted(zip(ids, depths))
+
+
+def _bfs_edge_levels(src, dst, root, max_depth, v):
+    """Reference dedup-BFS: edge index -> emission depth (0..max_depth).
+    An edge is emitted at depth d iff its source endpoint entered the
+    (deduped) frontier at the end of level d-1 (the root seeds level 0)."""
+    visited = np.zeros(v, bool)
+    frontier = np.zeros(v, bool)
+    visited[root] = frontier[root] = True
+    out = {}
+    for d in range(max_depth + 1):
+        idx = np.nonzero(frontier[src])[0]
+        if idx.size == 0:
+            break
+        for i in idx:
+            out[int(i)] = d
+        new = np.zeros(v, bool)
+        new[dst[idx]] = True
+        new &= ~visited
+        visited |= new
+        frontier = new
+    return out
+
+
+def _undirected_closure(src, dst, root, max_depth, v):
+    """Vertices within ``max_depth + 1`` undirected hops of the root (the
+    vertex set a depth-bounded both-direction traversal can touch)."""
+    u = np.concatenate([src, dst])
+    w = np.concatenate([dst, src])
+    seen = np.zeros(v, bool)
+    frontier = np.zeros(v, bool)
+    seen[root] = frontier[root] = True
+    for _ in range(max_depth + 1):
+        idx = np.nonzero(frontier[u])[0]
+        new = np.zeros(v, bool)
+        if idx.size:
+            new[w[idx]] = True
+        new &= ~seen
+        seen |= new
+        frontier = new
+    return {int(x) for x in np.nonzero(seen)[0]}
+
+
+def _result_vertices(r, root):
+    n = int(r.count)
+    out = {root}
+    out.update(int(x) for x in np.asarray(r.values["from"])[:n])
+    out.update(int(x) for x in np.asarray(r.values["to"])[:n])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 1. reversal: outbound on reversed G == inbound on G
+# ---------------------------------------------------------------------------
+
+def _check_reversal(seed):
+    src, dst, v, root, depth = _random_graph(seed)
+    ds = _edge_dataset(src, dst, v)
+    rev = _edge_dataset(dst, src, v)          # same edge ids, arrows flipped
+    caps = _caps(len(src))
+    # inbound BFS on G follows edges backwards == outbound BFS on reversed G
+    want = sorted((i, d) for i, d in
+                  _bfs_edge_levels(dst, src, root, depth, v).items())
+    for eng in ENGINE_NAMES:
+        q = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
+                           caps=caps, direction="outbound")
+        assert _rows(run_query(q, rev, root)) == want, (eng, seed)
+        if _legal(eng, "inbound"):
+            qi = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
+                                caps=caps, direction="inbound")
+            assert _rows(run_query(qi, ds, root)) == want, (eng, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_reversal_metamorphic_seeded(seed):
+    _check_reversal(seed)
+
+
+# ---------------------------------------------------------------------------
+# 2. direction="both" == the undirected closure (>= union of one-way)
+# ---------------------------------------------------------------------------
+
+def _check_both_closure(seed):
+    src, dst, v, root, depth = _random_graph(seed)
+    ds = _edge_dataset(src, dst, v)
+    caps_both = EngineCaps(frontier=2 * len(src) + 16,
+                           result=2 * len(src) + 16)
+    caps = _caps(len(src))
+    undirected = _undirected_closure(src, dst, root, depth, v)
+
+    qo = RecursiveQuery(engine="precursive", max_depth=depth,
+                        payload_cols=0, caps=caps, direction="outbound")
+    qi = RecursiveQuery(engine="precursive", max_depth=depth,
+                        payload_cols=0, caps=caps, direction="inbound")
+    union = (_result_vertices(run_query(qo, ds, root), root)
+             | _result_vertices(run_query(qi, ds, root), root))
+
+    for eng in ENGINE_NAMES:
+        if not _legal(eng, "both"):
+            continue
+        qb = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
+                            caps=caps_both, direction="both")
+        got = _result_vertices(run_query(qb, ds, root), root)
+        assert got == undirected, (eng, seed)
+        assert got >= union, (eng, seed)
+
+
+@pytest.mark.parametrize("seed", [1, 4])
+def test_both_direction_closure_seeded(seed):
+    _check_both_closure(seed)
+
+
+# ---------------------------------------------------------------------------
+# 3. row_depths are monotone along discovered edges
+# ---------------------------------------------------------------------------
+
+def _check_depth_monotone(seed):
+    src, dst, v, root, depth = _random_graph(seed)
+    ds = _edge_dataset(src, dst, v)
+    caps = _caps(len(src))
+    for direction in ("outbound", "inbound"):
+        # the frontier endpoint of a row ('from' going forward, 'to' going
+        # backward) and the endpoint the row discovers
+        src_col, dst_col = (("from", "to") if direction == "outbound"
+                            else ("to", "from"))
+        for eng in ENGINE_NAMES:
+            if not _legal(eng, direction):
+                continue
+            q = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
+                               caps=caps, direction=direction)
+            r = run_query(q, ds, root)
+            n = int(r.count)
+            depths = np.asarray(r.row_depths)[:n]
+            srcs = np.asarray(r.values[src_col])[:n]
+            dsts = np.asarray(r.values[dst_col])[:n]
+            # first-discovery depth per vertex: the minimum depth of any
+            # row reaching it (row ORDER is an engine detail — the dense
+            # engines emit by edge position, not by level)
+            disc = {root: -1}
+            for w, d in zip(dsts, depths):
+                w, d = int(w), int(d)
+                if d < disc.get(w, depth + 1):
+                    disc[w] = d
+            for u, w, d in zip(srcs, dsts, depths):
+                u, w, d = int(u), int(w), int(d)
+                # each row leaves a vertex discovered exactly one level
+                # earlier (root at "level -1": its rows are the depth-0
+                # rows), and can only lower its target's depth to d — so
+                # depths are monotone non-decreasing along every
+                # discovered edge
+                assert disc[u] == d - 1, (eng, direction, seed)
+                assert disc[w] <= d, (eng, direction, seed)
+
+
+@pytest.mark.parametrize("seed", [2, 5])
+def test_row_depths_monotone_seeded(seed):
+    _check_depth_monotone(seed)
+
+
+# ---------------------------------------------------------------------------
+# 4. the planner-chosen plan == every forced engine, row for row
+# ---------------------------------------------------------------------------
+
+def _check_planner_parity(seed):
+    src, dst, v, root, depth = _random_graph(seed)
+    ds = _edge_dataset(src, dst, v)
+    caps = _caps(len(src))
+    sql = f"""
+        WITH RECURSIVE t (id, "from", "to", depth) AS (
+          SELECT id, "from", "to", 0 FROM edges WHERE "from" = {root}
+          UNION
+          SELECT e.id, e."from", e."to", t.depth + 1
+          FROM edges e JOIN t ON e."from" = t."to"
+          WHERE t.depth < {depth}
+        ) SELECT * FROM t"""
+    best = plan(sql, ds, caps=caps).best
+    want = _rows(best.run(ds, root))
+    for eng in ENGINE_NAMES:
+        q = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
+                           caps=caps)
+        assert _rows(run_query(q, ds, root)) == want, (eng, seed)
+
+
+@pytest.mark.parametrize("seed", [6, 7])
+def test_planner_matches_forced_engines_seeded(seed):
+    _check_planner_parity(seed)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis extension (real package, or the vendored fallback engine)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                       # pragma: no cover
+    pass
+else:
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_reversal_metamorphic_random(seed):
+        _check_reversal(seed)
+
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_both_direction_closure_random(seed):
+        _check_both_closure(seed)
+
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_row_depths_monotone_random(seed):
+        _check_depth_monotone(seed)
+
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_planner_matches_forced_engines_random(seed):
+        _check_planner_parity(seed)

@@ -1,0 +1,219 @@
+"""The persistent plan store + calibration state.
+
+The load-bearing guarantees:
+
+* serialize -> rehydrate -> serialize is a FIXED POINT (the store document
+  fully determines the rehydrated session's serializable state);
+* schema_version 1 plan documents still load under the v2 reader
+  (``migrate_plan_doc`` fills the v2-only fields conservatively);
+* a cold session and a plan-store-rehydrated session replaying IDENTICAL
+  traffic produce identical plans and identical result rows — and the
+  rehydrated one pays ZERO parse / statistics / costing passes
+  (``session.counters`` + the ``compute_stats.calls`` probe);
+* a store written for one graph refuses to warm a session over another.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import EngineCaps
+from repro.core.engine import Dataset
+from repro.data.treegen import TreeSpec, make_edge_table
+from repro.planner import ServingSession, paper_listing
+from repro.planner.plan_store import (load_store, migrate_plan_doc,
+                                      rehydrate_session, report_from_json,
+                                      save_session, session_to_json)
+from repro.planner.stats import compute_stats
+
+CAPS = EngineCaps(frontier=1024, result=2048)
+SPEC = TreeSpec(num_vertices=300, height=6, payload_cols=2, seed=5)
+
+
+def _dataset(spec=SPEC):
+    return Dataset.prepare(make_edge_table(spec), spec.num_vertices)
+
+
+def _serve_traffic(session, sql, batches):
+    return [session.submit(sql, roots) for roots in batches]
+
+
+def _row_sets(results):
+    out = []
+    for r in results:
+        n = int(r.count)
+        out.append(sorted(zip(np.asarray(r.values["id"])[:n].tolist(),
+                              np.asarray(r.row_depths)[:n].tolist())))
+    return out
+
+
+TRAFFIC = [[0, 1, 2], [0, 5, 17, 40], [0, 1, 2]]
+
+
+# ---------------------------------------------------------------------------
+# fixed point: serialize -> rehydrate -> serialize
+# ---------------------------------------------------------------------------
+
+def _check_fixed_point(seed):
+    spec = SPEC._replace(seed=seed)
+    ds = _dataset(spec)
+    sql = paper_listing(1, root=0, depth=3)
+    session = ServingSession(ds, caps=CAPS)
+    rng = np.random.default_rng(seed)
+    batches = [rng.integers(0, spec.num_vertices, 3).tolist()
+               for _ in range(2)]
+    _serve_traffic(session, sql, batches)
+    doc1 = json.loads(json.dumps(session_to_json(session),
+                                 sort_keys=True))
+
+    ds2 = _dataset(spec)
+    session2 = ServingSession(ds2, caps=CAPS)
+    import repro.planner.plan_store as ps
+    # rehydrate from the DOCUMENT (what save_session writes)
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "store.json")
+        save_session(session, path)
+        ps.rehydrate_into(session2, path)
+    doc2 = json.loads(json.dumps(session_to_json(session2),
+                                 sort_keys=True))
+    assert doc1 == doc2
+
+
+@pytest.mark.parametrize("seed", [0, 9])
+def test_store_roundtrip_is_fixed_point_seeded(seed):
+    _check_fixed_point(seed)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                       # pragma: no cover
+    pass
+else:
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_store_roundtrip_is_fixed_point_random(seed):
+        _check_fixed_point(seed % 10_000)
+
+
+# ---------------------------------------------------------------------------
+# v1 documents load under the v2 reader
+# ---------------------------------------------------------------------------
+
+def _as_v1(doc):
+    """Strip a v2 plan document down to what the PR-3 (v1) writer emitted."""
+    v1 = json.loads(json.dumps(doc))
+    v1["schema_version"] = 1
+    v1.pop("cost_constants", None)
+    for k in ("degree_histogram", "level_vertices", "max_level_edges",
+              "root_profiles", "level_walk_edges"):
+        v1["stats"].pop(k, None)
+    for c in v1["candidates"]:
+        c["cost"].pop("plain_bytes", None)
+        c["cost"].pop("kernel_bytes", None)
+    return v1
+
+
+def test_v1_plan_doc_loads_under_v2_reader(tmp_path):
+    ds = _dataset()
+    sql = paper_listing(1, root=0, depth=3)
+    session = ServingSession(ds, caps=CAPS)
+    session.submit(sql, [0, 1])
+    v2 = session.plan_json(sql, [0, 1])
+    v1 = _as_v1(v2)
+
+    migrated = migrate_plan_doc(v1)
+    assert migrated["schema_version"] == 2
+    # conservative fills: statically-factored bytes fold into plain
+    for c in migrated["candidates"]:
+        assert c["cost"]["plain_bytes"] == c["cost"]["total_bytes"]
+        assert c["cost"]["kernel_bytes"] == 0.0
+    # and it rebuilds into a live report with the v1 ranking preserved
+    report = report_from_json(v1)
+    assert [c.label for c in report.ranked] \
+        == [c["label"] for c in v2["candidates"]]
+    assert report.best.label == v2["chosen"]
+
+    # a v1-shaped STORE (v1 inner docs) also loads
+    store_path = tmp_path / "store.json"
+    save_session(session, str(store_path))
+    doc = json.loads(store_path.read_text())
+    doc["schema_version"] = 1
+    doc["shapes"] = [_as_v1(s) for s in doc["shapes"]]
+    for e in doc["entries"]:
+        e["plan_json"] = _as_v1(e["plan_json"])
+        for c in e["bucket_choices"]:
+            c["cost"].pop("plain_bytes", None)
+            c["cost"].pop("kernel_bytes", None)
+    store_path.write_text(json.dumps(doc))
+    loaded = load_store(str(store_path))
+    assert loaded["schema_version"] == 2
+    ds2 = _dataset()
+    session2 = rehydrate_session(ds2, str(store_path), caps=CAPS)
+    assert session2.plan_json(sql, [0, 1])["schema_version"] == 2
+    assert session2.counters == {"parse_calls": 0, "stats_calls": 0,
+                                 "cost_calls": 0}
+
+
+def test_migrate_rejects_unknown_versions():
+    with pytest.raises(ValueError, match="schema_version"):
+        migrate_plan_doc({"schema_version": 99})
+
+
+# ---------------------------------------------------------------------------
+# cold vs rehydrated replay: identical plans, identical rows, zero work
+# ---------------------------------------------------------------------------
+
+def test_cold_and_rehydrated_sessions_replay_identically(tmp_path):
+    sql = paper_listing(1, root=0, depth=4)
+    path = str(tmp_path / "store.json")
+
+    cold = ServingSession(_dataset(), caps=CAPS)
+    cold_out = _serve_traffic(cold, sql, TRAFFIC)
+    cold_plans = [cold.plan_json(sql, roots) for roots in TRAFFIC]
+    save_session(cold, path)
+
+    warm = ServingSession(_dataset(), caps=CAPS, plan_store=path)
+    before = compute_stats.calls
+    warm_out = _serve_traffic(warm, sql, TRAFFIC)
+    warm_plans = [warm.plan_json(sql, roots) for roots in TRAFFIC]
+
+    # zero parse / statistics / costing passes on the warm side
+    assert warm.counters == {"parse_calls": 0, "stats_calls": 0,
+                             "cost_calls": 0}
+    assert compute_stats.calls == before
+    # identical plans ...
+    assert warm_plans == cold_plans
+    # ... and identical result rows, per request, per root
+    for a_batch, b_batch in zip(cold_out, warm_out):
+        assert _row_sets(a_batch) == _row_sets(b_batch)
+
+
+def test_first_query_after_rehydrate_pays_zero_planning(tmp_path):
+    """The acceptance bar, stated directly: the FIRST query of a
+    rehydrated session performs no parse, no stats pass, no costing."""
+    sql = paper_listing(1, root=0, depth=4)
+    path = str(tmp_path / "store.json")
+    cold = ServingSession(_dataset(), caps=CAPS)
+    cold.submit(sql, TRAFFIC[0])
+    save_session(cold, path)
+
+    warm = ServingSession(_dataset(), caps=CAPS, plan_store=path)
+    warm.submit(sql, TRAFFIC[0])
+    assert warm.counters == {"parse_calls": 0, "stats_calls": 0,
+                             "cost_calls": 0}
+    # and the calibration state survived the process boundary
+    assert warm.calibrator.count >= cold.calibrator.count - 1
+
+
+def test_rehydrate_refuses_a_different_graph(tmp_path):
+    sql = paper_listing(1, root=0, depth=3)
+    path = str(tmp_path / "store.json")
+    session = ServingSession(_dataset(), caps=CAPS)
+    session.submit(sql, [0, 1])
+    save_session(session, path)
+
+    other = _dataset(TreeSpec(num_vertices=301, height=6, payload_cols=2,
+                              seed=6))
+    with pytest.raises(ValueError, match="different graph"):
+        rehydrate_session(other, path, caps=CAPS)

@@ -460,6 +460,29 @@ def test_explain_golden_snapshot(golden_dataset, listing):
         assert got == f.read()
 
 
+@pytest.mark.parametrize("listing", [1, 2, 3])
+def test_plan_json_golden_snapshot(golden_dataset, listing):
+    """The MACHINE-READABLE plan (explain.to_json, schema_version 2) is
+    golden-snapshotted alongside the text EXPLAIN: external tooling diffs
+    these across PRs, so an unintended schema or costing change must show
+    up as a snapshot diff.  Regenerate with the same dataset/caps and
+    ``json.dump(doc, f, indent=1, sort_keys=True)`` after an INTENDED
+    change."""
+    import json
+
+    from repro.planner import explain_json
+
+    n_pay = 0 if listing == 1 else 4
+    sql = paper_listing(listing, root=0, depth=7, payload_cols=n_pay)
+    got = explain_json(sql, golden_dataset, caps=CAPS)
+    path = os.path.join(GOLDEN_DIR, f"plan_listing{listing}.json")
+    with open(path) as f:
+        want = json.load(f)
+    assert got == want
+    # and the document is strict-JSON stable (what the snapshot stores)
+    assert json.loads(json.dumps(got)) == want
+
+
 def test_explain_covers_every_engine(golden_dataset):
     out = explain(paper_listing(1, root=0, depth=7), golden_dataset,
                   caps=CAPS)

@@ -410,14 +410,22 @@ def test_plan_json_schema_and_roundtrip(tree_ds):
     doc = session.plan_json(sql, [0, 1, 2])
     text = json.dumps(doc)                     # strict-JSON serializable
     doc2 = json.loads(text)
-    assert doc2["schema_version"] == 1
+    assert doc2["schema_version"] == 2
     assert doc2["chosen"] in [c["label"] for c in doc2["candidates"]]
     assert sum(c["chosen"] for c in doc2["candidates"]) == 1
     assert doc2["logical"]["max_depth"] == 4
     assert doc2["stats"]["num_vertices"] == tree_ds.num_vertices
+    # v2: full stats (rehydratable) + the constants the pass priced with
+    assert doc2["stats"]["root_profiles"]
+    assert "level_walk_edges" in doc2["stats"]
+    assert doc2["cost_constants"]["bytes_per_us"] > 0
     for c in doc2["candidates"]:
         assert {"label", "engine", "caps", "cost", "ops"} <= set(c)
         assert c["cost"]["est_us"] > 0
+        # the factor-independent byte split is consistent with the total
+        kf = doc2["cost_constants"]["kernel_factor"] or 0.0
+        assert c["cost"]["total_bytes"] == pytest.approx(
+            c["cost"]["plain_bytes"] + kf * c["cost"]["kernel_bytes"])
     lanes = sorted(l for b in doc2["buckets"] for l in b["lanes"])
     assert lanes == [0, 1, 2]
     for b in doc2["buckets"]:
