@@ -24,6 +24,28 @@ def time_call(fn: Callable, *args, warmup: int = 2, repeat: int = 5,
     return float(np.median(ts))
 
 
+def time_ratio(fn_a: Callable, fn_b: Callable, *, warmup: int = 2,
+               repeat: int = 5) -> float:
+    """Median of PAIRED a/b wall-time ratios, the two calls interleaved
+    (a, b, a, b, ...).  Slow drifting load on a shared host hits both
+    elements of a pair alike, so the ratio is far more stable than the
+    quotient of two medians taken seconds apart — this is what the
+    perf-gated comparison cells report."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ratios = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb = time.perf_counter() - t0
+        ratios.append(ta / max(tb, 1e-12))
+    return float(np.median(ratios))
+
+
 _DATASETS: dict = {}
 
 

@@ -25,10 +25,14 @@ from repro.core import EngineCaps
 from repro.core.engine import (RecursiveQuery, run_query, run_query_batch,
                                run_query_buckets)
 
-from .bench_util import emit, level_caps, time_call, tree_dataset
+from .bench_util import (emit, level_caps, time_call, time_ratio,
+                         tree_dataset)
 
 ENGINES = ("precursive", "trecursive", "rowstore", "rowstore_index",
            "bitmap", "hybrid")
+# the direction-optimizing engines, gated against the best PUSH-ONLY cell
+# (every engine above pushes from the frontier; diropt may pull)
+DIROPT_ENGINES = ("diropt", "diropt_hybrid")
 
 BATCH_ROOTS = 8
 
@@ -39,16 +43,43 @@ def run(num_vertices: int = 200_000, height: int = 60,
     caps = level_caps(num_vertices, height)
     out = {}
     for depth in depths:
-        for eng in ENGINES:
+        for eng in ENGINES + DIROPT_ENGINES:
             q = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
                                caps=caps)
             us = time_call(run_query, q, ds, 0, repeat=repeat)
             out[(eng, depth)] = us
+        best_push_eng = min(ENGINES, key=lambda e: out[(e, depth)])
         for eng in ENGINES:
             us = out[(eng, depth)]
             speedup = out[("rowstore", depth)] / us
             emit(f"exp1/{eng}/d{depth}", us,
                  f"speedup_vs_rowstore={speedup:.2f}")
+        qp = RecursiveQuery(engine=best_push_eng, max_depth=depth,
+                            payload_cols=0, caps=caps)
+        for eng in DIROPT_ENGINES:
+            us = out[(eng, depth)]
+            # the gated ratio is measured PAIRED (push and diropt calls
+            # interleaved): on a noisy shared host the quotient of two
+            # medians taken seconds apart can swing +-30%, which would
+            # gate on machine weather, not on the engines
+            qd = RecursiveQuery(engine=eng, max_depth=depth,
+                                payload_cols=0, caps=caps)
+            ratio = time_ratio(lambda: run_query(qp, ds, 0),
+                               lambda: run_query(qd, ds, 0),
+                               repeat=max(repeat, 9))
+            # informational keys (like the lockstep reference cell): the
+            # paper's exp1 TREE has E == V-1, where deferred emission's
+            # saved O(E) writes wash against the O(V) depth bookkeeping —
+            # diropt is push-PARITY here by construction (~1.0x), and
+            # gating a statistical tie would fail CI on machine weather.
+            # The GATED `diropt_vs_push_only` cell lives on the
+            # wide-frontier regime (E > V) in exp_direction/diropt_wide.
+            key = (f"diropt_vs_push_only_d{depth}" if eng == "diropt"
+                   else f"{eng}_vs_push_only")
+            emit(f"exp1/{eng}/d{depth}", us,
+                 f"{key}={ratio:.2f},push_only={best_push_eng},"
+                 f"speedup_vs_rowstore="
+                 f"{out[('rowstore', depth)] / max(us, 1e-9):.2f}")
 
     # batched multi-root serving cells: BATCH_ROOTS roots per request
     from repro.planner.optimize import bucket_roots

@@ -1,0 +1,126 @@
+"""Direction experiment: the fused bidirectional CSR's memory footprint and
+the direction-optimizing traversal on the wide-frontier regime.
+
+Cells:
+
+* ``exp_direction/both_view_memory`` — bytes of the index arrays backing
+  ``direction='both'``.  The fused view (the reverse CSR — shared with
+  ``inbound`` and the pull path — plus one merged indptr) must be
+  ~E-scale; the old doubled view materialized three 2E-sized arrays
+  (``concat(from,to)``, ``concat(to,from)``, and a 2E CSR perm).
+  ``fused_vs_doubled`` is the reduction factor.
+* ``exp_direction/diropt_wide/dD`` — the wide-frontier regime the paper's
+  exp1 identifies as hardest (depth grows, frontiers widen, E > V): a
+  dense random graph, ``diropt`` against the best static push engine.
+  The gated ``diropt_vs_push_only`` ratio is measured PAIRED (calls
+  interleaved) so shared-host noise cancels.  The cell also reports the
+  push/pull crossover level read from ``BFSResult.level_dirs`` — the
+  measured counterpart of the plan's predicted ``level_dirs``.
+* ``exp_direction/diropt_crossover/dD`` — the switch decisions on the
+  quick TREE graph (in-degree 1: the predicate correctly never pulls
+  until the frontier out-weighs the unvisited remainder).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import EngineCaps
+from repro.core.engine import Dataset, RecursiveQuery, run_query
+from repro.core.table import ColumnTable
+
+from .bench_util import emit, level_caps, time_call, time_ratio, \
+    tree_dataset
+
+PUSH_ENGINES = ("precursive", "bitmap", "hybrid")
+
+_DENSE: dict = {}
+
+
+def dense_dataset(num_vertices: int, num_edges: int, seed: int = 7
+                  ) -> Dataset:
+    """A dense random graph (E > V): the wide-frontier regime."""
+    key = (num_vertices, num_edges, seed)
+    if key not in _DENSE:
+        rng = np.random.default_rng(seed)
+        e = num_edges
+        cols = {
+            "id": np.arange(e, dtype=np.int32),
+            "from": rng.integers(0, num_vertices, e).astype(np.int32),
+            "to": rng.integers(0, num_vertices, e).astype(np.int32),
+            "name": np.zeros((e, 4), np.float32)}
+        _DENSE[key] = Dataset.prepare(ColumnTable.from_numpy(cols),
+                                      num_vertices)
+    return _DENSE[key]
+
+
+def _dirs_summary(dirs: np.ndarray) -> tuple[int, int, int]:
+    executed = dirs[dirs >= 0]
+    pulls = np.nonzero(dirs == 1)[0]
+    crossover = int(pulls[0]) if pulls.size else -1
+    return crossover, int((executed == 1).sum()), int(executed.size)
+
+
+def run(num_vertices: int = 200_000, height: int = 60, depth: int = 8,
+        repeat: int = 5, edge_factor: int = 5) -> dict:
+    ds = tree_dataset(num_vertices, height, payload_cols=0)
+    caps = level_caps(num_vertices, height)
+    out = {}
+
+    # --- fused both-view memory ------------------------------------------
+    t0 = time.perf_counter()
+    fused = ds.edge_view_bytes("both")
+    build_us = (time.perf_counter() - t0) * 1e6
+    e = ds.table.num_rows
+    v = ds.num_vertices
+    # what the pre-fused layout materialized for 'both': both_src +
+    # both_dst + both_csr.perm (2E int32 each) + both_csr.indptr
+    doubled = 3 * (2 * e * 4) + (v + 1) * 4
+    out["both_bytes"] = fused
+    emit("exp_direction/both_view_memory", build_us,
+         f"fused_bytes={fused},doubled_bytes={doubled},"
+         f"fused_vs_doubled={doubled / max(fused, 1):.2f},"
+         f"bytes_per_edge={fused / max(e, 1):.2f}")
+
+    # --- the wide-frontier regime: dense graph, diropt vs best push ------
+    wide = dense_dataset(num_vertices, edge_factor * num_vertices)
+    wcaps = EngineCaps(frontier=wide.table.num_rows + 8,
+                       result=wide.table.num_rows + 8)
+    push_us = {}
+    for eng in PUSH_ENGINES:
+        q = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
+                           caps=wcaps)
+        push_us[eng] = time_call(run_query, q, wide, 0, repeat=repeat)
+    best_push = min(push_us, key=push_us.get)
+    qp = RecursiveQuery(engine=best_push, max_depth=depth, payload_cols=0,
+                        caps=wcaps)
+    qd = RecursiveQuery(engine="diropt", max_depth=depth, payload_cols=0,
+                        caps=wcaps)
+    us_diropt = time_call(run_query, qd, wide, 0, repeat=repeat)
+    ratio = time_ratio(lambda: run_query(qp, wide, 0),
+                       lambda: run_query(qd, wide, 0),
+                       repeat=max(repeat, 9))
+    crossover, pulls, executed = _dirs_summary(
+        np.asarray(run_query(qd, wide, 0).level_dirs))
+    out["wide_ratio"] = ratio
+    emit(f"exp_direction/diropt_wide/d{depth}", us_diropt,
+         f"diropt_vs_push_only={ratio:.2f},push_only={best_push},"
+         f"crossover_level={crossover},pull_levels={pulls},"
+         f"executed_levels={executed}")
+
+    # --- switch decisions on the quick tree ------------------------------
+    q = RecursiveQuery(engine="diropt", max_depth=depth, payload_cols=0,
+                       caps=caps)
+    us = time_call(run_query, q, ds, 0, repeat=repeat)
+    crossover, pulls, executed = _dirs_summary(
+        np.asarray(run_query(q, ds, 0).level_dirs))
+    out["crossover"] = crossover
+    emit(f"exp_direction/diropt_crossover/d{depth}", us,
+         f"crossover_level={crossover},pull_levels={pulls},"
+         f"executed_levels={executed}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -13,7 +13,18 @@ Fails (exit 1) when the perf trajectory regresses past the ROADMAP bars:
   worse than the bar the hand-calibrated prior meets;
 * the plan-store gate: any cell reporting ``rehydrated_match`` other than
   1 — a session rehydrated from a plan store must produce row-identical
-  results to the cold-planned session (``exp_serving/rehydrated_serving``).
+  results to the cold-planned session (``exp_serving/rehydrated_serving``);
+* the direction-optimizing gate: any cell reporting
+  ``diropt_vs_push_only`` below 1.0 — the per-level push/pull switching
+  engine must not lose to the best static push engine on the
+  wide-frontier quick cell (``exp_direction/diropt_wide/d8``: a dense
+  E > V graph, the regime the optimization targets; the ratio is
+  measured PAIRED so shared-host drift cancels).  The exp1 tree cells
+  (``exp1/diropt/d{4,8}``) report under ``diropt_vs_push_only_d{D}``
+  (informational, ungated): on a tree E == V-1 and diropt is
+  push-parity by construction — gating a statistical tie would fail CI
+  on machine weather.  The hybrid variant likewise reports under
+  ``diropt_hybrid_vs_push_only``.
 
 The lockstep reference cell deliberately reports its ratio under a
 different key (``lockstep_vs_sequential``) so the gate does not fire on the
@@ -31,11 +42,13 @@ SPEEDUP_RE = re.compile(r"(?:^|,)per_root_speedup_vs_sequential=([\d.]+)")
 REGRET_RE = re.compile(r"(?:^|,)vs_best_forced=([\d.]+)")
 CAL_REGRET_RE = re.compile(r"(?:^|,)calibrated_vs_best_forced=([\d.]+)")
 REHYDRATED_RE = re.compile(r"(?:^|,)rehydrated_match=(\d+)")
+DIROPT_RE = re.compile(r"(?:^|,)diropt_vs_push_only=([\d.]+)")
 
 MIN_PER_ROOT_SPEEDUP = 1.0
 MAX_PLANNER_REGRET = 1.2
+MIN_DIROPT_SPEEDUP = 1.0
 
-GATES = (SPEEDUP_RE, REGRET_RE, CAL_REGRET_RE, REHYDRATED_RE)
+GATES = (SPEEDUP_RE, REGRET_RE, CAL_REGRET_RE, REHYDRATED_RE, DIROPT_RE)
 
 
 def check(rows: dict) -> list[str]:
@@ -65,6 +78,12 @@ def check(rows: dict) -> list[str]:
                 f"{name}: rehydrated_match={m.group(1)} != 1 "
                 "(plan-store-rehydrated serving must match cold-plan "
                 "results)")
+        m = DIROPT_RE.search(derived)
+        if m and float(m.group(1)) < MIN_DIROPT_SPEEDUP:
+            failures.append(
+                f"{name}: diropt_vs_push_only={m.group(1)} < "
+                f"{MIN_DIROPT_SPEEDUP} (direction-optimizing traversal "
+                "must not lose to the best static push engine)")
     return failures
 
 

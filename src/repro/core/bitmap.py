@@ -18,13 +18,14 @@ shardable.  Both engines below run through the same
 from __future__ import annotations
 
 from .csr import CSRIndex
-from .operators import (BFSResult, CompactEmitted, Context, DenseBitmapStep,
-                        EngineCaps, HybridStep, Pipeline, Seed, bitmap_level,
-                        check_direction, execute)
+from .operators import (BFSResult, CompactEmitted, Context, DeferredEmit,
+                        DenseBitmapStep, DirectionSwitch, EngineCaps,
+                        HybridPullStep, HybridStep, Pipeline, PullStep, Seed,
+                        bitmap_level, check_direction, execute)
 from .table import ColumnTable
 
 __all__ = ["bitmap_bfs", "hybrid_bfs", "bitmap_level", "bitmap_plan",
-           "hybrid_plan"]
+           "hybrid_plan", "diropt_plan", "diropt_hybrid_plan"]
 
 
 def bitmap_plan(caps: EngineCaps, max_depth: int,
@@ -54,6 +55,54 @@ def hybrid_plan(caps: EngineCaps, max_depth: int,
         ops=(HybridStep(switch_frac=switch_frac),),
         finisher=CompactEmitted(tuple(out_cols)),
         caps=caps, max_depth=max_depth, tracks_emitted=True)
+
+
+def diropt_plan(caps: EngineCaps, max_depth: int,
+                out_cols: tuple[str, ...], direction: str = "outbound",
+                alpha: float = 1.0, beta: float = 64.0,
+                pull_fn=None) -> Pipeline:
+    """Direction-optimizing dense BFS: per level a :class:`DirectionSwitch`
+    picks the push bitmap step or the Beamer bottom-up :class:`PullStep`
+    (gather over the reverse CSR from unvisited vertices); emission is
+    DEFERRED — the loop carries only per-vertex depths and the emitted
+    mask is derived in one pass by :class:`DeferredEmit`.  Row-for-row
+    equal to ``bitmap`` (same rows, order, depths, loop accounting).
+
+    ``alpha``/``beta`` are the switch thresholds
+    (``CostConstants.pull_alpha``/``pull_beta`` — the planner stamps its
+    refittable constants here); ``pull_fn`` plugs the Pallas
+    ``frontier_pull`` kernel into the pull side."""
+    check_direction(direction)
+    return Pipeline(
+        name="DirOptBFS", rep="dense",
+        seed=Seed(kind="dense"),
+        ops=(DirectionSwitch(push=DenseBitmapStep(deferred=True),
+                             pull=PullStep(deferred=True,
+                                           expand_fn=pull_fn),
+                             alpha=alpha, beta=beta),),
+        finisher=DeferredEmit(tuple(out_cols)),
+        caps=caps, max_depth=max_depth, inclusive=True,
+        tracks_vertex_depth=True, tracks_switch=True)
+
+
+def diropt_hybrid_plan(caps: EngineCaps, max_depth: int,
+                       out_cols: tuple[str, ...], switch_frac: float = 0.05,
+                       direction: str = "outbound", alpha: float = 1.0,
+                       beta: float = 64.0) -> Pipeline:
+    """Direction-optimizing hybrid BFS: the positional-frontier
+    :class:`HybridStep` (sparse IndexJoin / dense push) on the push side,
+    its bottom-up twin :class:`HybridPullStep` on the pull side.
+    Level-for-level state-identical to ``hybrid``."""
+    check_direction(direction)
+    return Pipeline(
+        name="DirOptHybridBFS", rep="pos",
+        seed=Seed(mark_emitted=True),
+        ops=(DirectionSwitch(push=HybridStep(switch_frac=switch_frac),
+                             pull=HybridPullStep(),
+                             alpha=alpha, beta=beta),),
+        finisher=CompactEmitted(tuple(out_cols)),
+        caps=caps, max_depth=max_depth, tracks_emitted=True,
+        tracks_switch=True)
 
 
 def bitmap_bfs(table: ColumnTable, num_vertices: int, root,

@@ -17,7 +17,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CSRIndex", "build_csr", "expand_frontier", "csr_degrees"]
+__all__ = ["CSRIndex", "build_csr", "expand_frontier", "csr_degrees",
+           "merged_indptr", "bidir_degrees", "expand_frontier_both"]
 
 
 class CSRIndex(NamedTuple):
@@ -79,3 +80,67 @@ def expand_frontier(csr: CSRIndex, targets: jax.Array, valid: jax.Array,
     live = j < jnp.minimum(total, capacity)
     epos = jnp.where(live, epos, csr.num_edges)                   # sentinel pad
     return epos.astype(jnp.int32), jnp.minimum(total, capacity), total > capacity
+
+
+# ---------------------------------------------------------------------------
+# fused bidirectional CSR — ONE E-sized edge array per adjacency direction
+# plus a merged indptr, replacing the old doubled (2E) edge view for
+# direction='both'.  Join-space positions stay 2E-VIRTUAL: p < E is edge p
+# traversed forward, p >= E is edge p-E traversed backward — exactly the
+# layout the old concat(from,to) view materialized, so results (including
+# emission order) are bit-identical while the stored arrays are E-scale.
+# ---------------------------------------------------------------------------
+
+def merged_indptr(out_csr: CSRIndex, in_csr: CSRIndex) -> jax.Array:
+    """The fused view's merged indptr: per-vertex out-degree + in-degree,
+    cumulated.  (V+1,) int32 — the only array 'both' adds on top of the
+    out/in CSRs that ``outbound``/``inbound`` already need."""
+    out_deg = out_csr.indptr[1:] - out_csr.indptr[:-1]
+    in_deg = in_csr.indptr[1:] - in_csr.indptr[:-1]
+    return jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        jnp.cumsum(out_deg + in_deg, dtype=jnp.int32)])
+
+
+def bidir_degrees(both_indptr: jax.Array, vertices: jax.Array,
+                  valid: jax.Array) -> jax.Array:
+    """Per-target merged (out+in) degree, masked like :func:`csr_degrees`."""
+    nv = both_indptr.shape[0] - 1
+    v = jnp.clip(vertices, 0, nv - 1)
+    deg = both_indptr[v + 1] - both_indptr[v]
+    return jnp.where(valid & (vertices >= 0) & (vertices < nv), deg, 0)
+
+
+def expand_frontier_both(out_csr: CSRIndex, in_csr: CSRIndex,
+                         both_indptr: jax.Array, targets: jax.Array,
+                         valid: jax.Array, capacity: int
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One BFS level over the FUSED bidirectional view: each target vertex
+    emits its out-edge positions (forward, ``p``) followed by its in-edge
+    positions (backward, ``E + p``) — the same join-space ordering the old
+    doubled-CSR view produced, without materializing any 2E array.
+
+    Same contract as :func:`expand_frontier`: returns
+    (edge_positions (capacity,), total (scalar), overflowed (bool)); the
+    join-space sentinel is ``2E``."""
+    e = out_csr.num_edges
+    deg = bidir_degrees(both_indptr, targets, valid)              # (F,)
+    ends = jnp.cumsum(deg, dtype=jnp.int32)
+    starts = ends - deg
+    total = ends[-1] if deg.shape[0] > 0 else jnp.zeros((), jnp.int32)
+
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    srcslot = jnp.searchsorted(ends, j, side="right").astype(jnp.int32)
+    srcslot = jnp.minimum(srcslot, deg.shape[0] - 1)
+    within = j - starts[srcslot]
+    v = jnp.clip(targets[srcslot], 0, out_csr.num_vertices - 1)
+    out_deg = out_csr.indptr[v + 1] - out_csr.indptr[v]
+    fwd = within < out_deg
+    out_idx = jnp.minimum(out_csr.indptr[v] + within, max(e - 1, 0))
+    in_idx = jnp.clip(in_csr.indptr[v] + within - out_deg, 0,
+                      max(e - 1, 0))
+    epos = jnp.where(fwd, out_csr.perm[out_idx], e + in_csr.perm[in_idx])
+    live = j < jnp.minimum(total, capacity)
+    epos = jnp.where(live, epos, 2 * e)                           # sentinel
+    return epos.astype(jnp.int32), jnp.minimum(total, capacity), \
+        total > capacity

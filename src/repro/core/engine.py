@@ -32,8 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .bitmap import bitmap_plan, hybrid_plan
-from .csr import CSRIndex, build_csr
+from .bitmap import (bitmap_plan, diropt_hybrid_plan, diropt_plan,
+                     hybrid_plan)
+from .csr import CSRIndex, build_csr, merged_indptr
 from .operators import BFSResult, Context, EngineCaps, Pipeline, execute, \
     execute_batch
 from .recursive import (DIRECTIONS, precursive_plan, rowstore_plan,
@@ -43,12 +44,20 @@ from .table import ColumnTable, RowTable, payload_names
 
 EngineName = Literal["precursive", "trecursive", "rowstore", "rowstore_index",
                      "bitmap", "hybrid", "trecursive_rewrite",
-                     "rowstore_rewrite", "rowstore_index_rewrite"]
+                     "rowstore_rewrite", "rowstore_index_rewrite",
+                     "diropt", "diropt_hybrid"]
 
 ENGINE_NAMES: tuple[str, ...] = (
     "precursive", "trecursive", "rowstore", "rowstore_index", "bitmap",
     "hybrid", "trecursive_rewrite", "rowstore_rewrite",
-    "rowstore_index_rewrite")
+    "rowstore_index_rewrite", "diropt", "diropt_hybrid")
+
+# the direction-optimizing engines (per-level push/pull switch) and their
+# push-only counterparts — parity suites assert row-for-row equality along
+# these pairs, and the perf gate compares diropt cells against the best
+# PUSH_ENGINE cell
+DIROPT_ENGINE_NAMES: tuple[str, ...] = ("diropt", "diropt_hybrid")
+PUSH_COUNTERPART = {"diropt": "bitmap", "diropt_hybrid": "hybrid"}
 
 Direction = Literal["outbound", "inbound", "both"]
 
@@ -97,6 +106,10 @@ PLAN_BUILDERS: Dict[str, Callable[[RecursiveQuery], Pipeline]] = {
     "rowstore_index_rewrite": lambda q: rowstore_rewrite_plan(
         q.caps, q.max_depth, q.out_cols, q.dedup, use_index=True,
         direction=q.direction),
+    "diropt": lambda q: diropt_plan(
+        q.caps, q.max_depth, q.out_cols, q.direction),
+    "diropt_hybrid": lambda q: diropt_hybrid_plan(
+        q.caps, q.max_depth, q.out_cols, direction=q.direction),
 }
 
 
@@ -121,17 +134,19 @@ def positions_available(engine: str) -> bool:
 class Dataset:
     """A prepared graph: columnar + row layouts + the join index.
 
-    Direction views (the reverse CSR for ``inbound``, the doubled edge view
-    for ``both``) are built on first use and cached on the instance."""
+    Direction views are built on first use and cached on the instance.
+    The reverse CSR (over ``to``) serves THREE consumers — ``inbound``
+    traversal, the pull-mode operators' bottom-up gathers, and the fused
+    ``both`` view — so ``direction='both'`` adds only one merged (V+1)
+    indptr on top of it: E-scale memory, not the old doubled-2E edge
+    view (see :func:`~repro.core.csr.expand_frontier_both`)."""
 
     table: ColumnTable
     rows: RowTable
     csr: CSRIndex
     num_vertices: int
-    rcsr: CSRIndex | None = None           # CSR over `to` (inbound)
-    both_src: object = None                # (2E,) concat(from, to)
-    both_dst: object = None                # (2E,) concat(to, from)
-    both_csr: CSRIndex | None = None
+    rcsr: CSRIndex | None = None           # reverse CSR (over `to`)
+    both_indptr: object = None             # (V+1,) merged out+in indptr
     stats_cache: dict | None = None        # direction -> GraphStats
 
     @classmethod
@@ -140,21 +155,24 @@ class Dataset:
                    csr=build_csr(table.column("from"), num_vertices),
                    num_vertices=num_vertices)
 
+    def ensure_reverse(self) -> None:
+        """Build + cache the reverse CSR.  ``inbound``/``both`` call this
+        automatically; pull-KERNEL users on an outbound-only dataset opt
+        in explicitly (the default XLA pull falls back to a natural-order
+        formulation when the reverse CSR is absent, so plain outbound
+        traffic never pays the extra O(E log E) build)."""
+        if self.rcsr is None:
+            object.__setattr__(self, "rcsr", build_csr(
+                self.table.column("to"), self.num_vertices))
+
     def ensure_direction(self, direction: str) -> None:
         if direction not in DIRECTIONS:
             raise ValueError(f"unknown direction {direction!r}")
-        if direction == "inbound" and self.rcsr is None:
-            object.__setattr__(self, "rcsr", build_csr(
-                self.table.column("to"), self.num_vertices))
-        if direction == "both" and self.both_csr is None:
-            src = jnp.concatenate([self.table.column("from"),
-                                   self.table.column("to")])
-            dst = jnp.concatenate([self.table.column("to"),
-                                   self.table.column("from")])
-            object.__setattr__(self, "both_src", src)
-            object.__setattr__(self, "both_dst", dst)
-            object.__setattr__(self, "both_csr",
-                               build_csr(src, self.num_vertices))
+        if direction in ("inbound", "both"):
+            self.ensure_reverse()
+        if direction == "both" and self.both_indptr is None:
+            object.__setattr__(self, "both_indptr",
+                               merged_indptr(self.csr, self.rcsr))
 
     def context(self, direction: str = "outbound") -> Context:
         """The direction-resolved join view the operators run against."""
@@ -162,14 +180,36 @@ class Dataset:
         if direction == "inbound":
             return Context(table=self.table, rows=self.rows, csr=self.rcsr,
                            join_src=self.table.column("to"),
-                           join_dst=self.table.column("from"))
+                           join_dst=self.table.column("from"),
+                           rcsr=self.csr)
         if direction == "both":
-            return Context(table=self.table, rows=self.rows,
-                           csr=self.both_csr, join_src=self.both_src,
-                           join_dst=self.both_dst)
+            return Context(table=self.table, rows=self.rows, csr=self.csr,
+                           join_src=self.table.column("from"),
+                           join_dst=self.table.column("to"),
+                           rcsr=self.rcsr, both_indptr=self.both_indptr,
+                           bidir=True)
         return Context(table=self.table, rows=self.rows, csr=self.csr,
                        join_src=self.table.column("from"),
-                       join_dst=self.table.column("to"))
+                       join_dst=self.table.column("to"), rcsr=self.rcsr)
+
+    def edge_view_bytes(self, direction: str = "outbound") -> int:
+        """Bytes of the index arrays one direction's join view ADDS beyond
+        the always-built outbound CSR (the benchmark's fused-CSR memory
+        audit).  ``both`` must come out E-scale: the reverse CSR (shared
+        with ``inbound`` and the pull path) plus ONE merged (V+1) indptr —
+        the old doubled view added three 2E arrays on top of the same
+        baseline."""
+        self.ensure_direction(direction)
+
+        def nbytes(a):
+            return int(np.asarray(a).size * 4)
+
+        if direction == "outbound":
+            return nbytes(self.csr.perm) + nbytes(self.csr.indptr)
+        rev = nbytes(self.rcsr.perm) + nbytes(self.rcsr.indptr)
+        if direction == "inbound":
+            return rev
+        return rev + nbytes(self.both_indptr)
 
     def stats(self, direction: str = "outbound"):
         """Planner statistics hook: per-direction

@@ -49,8 +49,18 @@ materialization, exactly the information loss the paper's Fig. 3 plan pays.
 
 Direction support: the join view (``ctx.join_src``/``ctx.join_dst`` and the
 CSR over ``join_src``) decides traversal direction.  ``outbound`` uses
-(from, to); ``inbound`` the reverse; ``both`` a doubled edge view whose
-positions fold back onto real edges at append/materialize time.
+(from, to); ``inbound`` the reverse; ``both`` the FUSED bidirectional view
+(``ctx.bidir``): the out- and in-CSRs plus one merged indptr, with a
+VIRTUAL 2E join space (position ``p < E`` is edge ``p`` forward,
+``p >= E`` backward) whose positions fold back onto real edges at
+append/materialize time — same layout the old doubled view materialized,
+at E-scale memory.
+
+Direction-optimizing traversal: :class:`PullStep` is the Beamer bottom-up
+dual of the push steps (gather over the reverse CSR from unvisited
+vertices, testing in-neighbor membership in the frontier bitmap), and
+:class:`DirectionSwitch` picks push or pull per level from exact work
+terms, with thresholds owned by the planner's refittable cost constants.
 """
 from __future__ import annotations
 
@@ -60,7 +70,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .csr import CSRIndex, expand_frontier
+from .csr import CSRIndex, expand_frontier, expand_frontier_both
 from .positions import PosBlock, append_block, block_from_mask, compact_mask
 from .table import ColumnTable, RowTable
 
@@ -69,11 +79,12 @@ __all__ = [
     "EngineCaps", "CostEnv", "OpCost",
     "BFSResult", "Context", "TraversalState", "Operator",
     "Seed", "ReadTargets", "VisitedDedup", "CSRIndexJoin", "ScanHashJoin",
-    "DenseBitmapStep", "HybridStep", "EarlyMaterialize", "AppendUnionAll",
+    "DenseBitmapStep", "PullStep", "DirectionSwitch", "HybridStep",
+    "HybridPullStep", "EarlyMaterialize", "AppendUnionAll",
     "ShardTargetExchange", "LateMaterialize", "EmitTuples", "ProjectRows",
-    "CompactEmitted", "TopLevelJoin", "RawPositions", "Pipeline",
-    "fixed_point", "fixed_point_batch", "execute", "execute_batch",
-    "dedup_targets", "bitmap_level",
+    "CompactEmitted", "DeferredEmit", "TopLevelJoin", "RawPositions",
+    "Pipeline", "fixed_point", "fixed_point_batch", "execute",
+    "execute_batch", "dedup_targets", "bitmap_level",
 ]
 
 
@@ -118,6 +129,8 @@ class CostEnv(NamedTuple):
     row_bytes: int             # full interleaved row width (bytes/row)
     col_bytes: Any             # Mapping[str, int]: bytes/row per column
     kernel_factor: float = 1.0  # relative cost of a plugged expand kernel
+    visited_rows: float = 0.0  # vertices discovered BEFORE this level (the
+    #   pull-side work term: unvisited = V - visited_rows)
 
 
 class OpCost(NamedTuple):
@@ -141,18 +154,45 @@ class BFSResult(NamedTuple):
     depth: jax.Array               # () levels actually executed
     overflow: jax.Array            # () any capacity overflow observed
     row_depths: Optional[jax.Array] = None   # (result_cap,) BFS level per row
+    level_dirs: Optional[jax.Array] = None   # (L,) int8 per-level direction
+    #   decision of a DirectionSwitch pipeline (-1 unused, 0 push, 1 pull)
 
 
-class Context(NamedTuple):
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Context:
     """Runtime inputs of a pipeline: storage + the direction-resolved join
     view.  ``join_src`` is the column the CSR indexes; ``join_dst`` holds the
-    next vertex reached by each join-space edge."""
+    next vertex reached by each join-space edge.
+
+    ``rcsr`` is the REVERSE CSR of the join view (groups join edges by
+    ``join_dst``) — the pull-mode operators and the direction-switch
+    predicate read it.  ``bidir=True`` selects the FUSED bidirectional view
+    for ``direction='both'``: ``join_src``/``join_dst`` stay the E-sized
+    base columns and the 2E join space is VIRTUAL (position ``p < E`` is
+    edge ``p`` forward, ``p >= E`` is edge ``p-E`` backward), with
+    ``both_indptr`` the merged out+in indptr — no 2E array is ever
+    materialized.  ``bidir`` is pytree aux data (static under jit)."""
 
     table: Optional[ColumnTable]
     rows: Optional[RowTable]
     csr: Optional[CSRIndex]
     join_src: jax.Array
     join_dst: jax.Array
+    rcsr: Optional[CSRIndex] = None
+    both_indptr: Optional[jax.Array] = None
+    bidir: bool = False
+
+    def tree_flatten(self):
+        return ((self.table, self.rows, self.csr, self.join_src,
+                 self.join_dst, self.rcsr, self.both_indptr), self.bidir)
+
+    @classmethod
+    def tree_unflatten(cls, bidir, children):
+        table, rows, csr, join_src, join_dst, rcsr, both_indptr = children
+        return cls(table=table, rows=rows, csr=csr, join_src=join_src,
+                   join_dst=join_dst, rcsr=rcsr, both_indptr=both_indptr,
+                   bidir=bidir)
 
 
 class TraversalState(NamedTuple):
@@ -176,6 +216,14 @@ class TraversalState(NamedTuple):
     result_count: jax.Array            # () int32
     depth: jax.Array                   # () int32 levels executed
     overflow: jax.Array                # () bool
+    vertex_depth: jax.Array            # (V,) int32 BFS depth per vertex
+    #   (-1 = undiscovered; deferred-emission pipelines derive the emitted
+    #   mask from it ONCE, after the fixed point)
+    visited_count: jax.Array           # () int32 discovered vertices so far
+    #   (maintained by the deferred dense steps so the switch predicate
+    #   reads the unvisited count without a per-level popcount)
+    level_dirs: jax.Array              # (L,) int8 per-level switch decision
+    #   (-1 = level not executed, 0 = push, 1 = pull)
 
 
 # ---------------------------------------------------------------------------
@@ -241,15 +289,141 @@ def _num_real_rows(ctx: Context) -> int:
     return ctx.join_src.shape[0]
 
 
+def _num_join(ctx: Context) -> int:
+    """Join-space edge count EJ (2E under the fused bidirectional view —
+    virtual: no 2E array backs it)."""
+    n = ctx.join_src.shape[0]
+    return 2 * n if ctx.bidir else n
+
+
 def _to_real(ctx: Context, pos: jax.Array) -> jax.Array:
     """Fold join-space positions back to real edge positions.  Identity for
-    outbound/inbound views; the 'both' view stacks the reverse copy of every
-    edge at ``e + p`` (the join-space sentinel ``2e`` folds to ``e``, the
+    outbound/inbound views; a 'both' view (fused-virtual, or a legacy
+    materialized doubled view) maps the backward copy of edge ``p`` to
+    ``e + p`` (the join-space sentinel ``2e`` folds to ``e``, the
     real-space sentinel)."""
     e = _num_real_rows(ctx)
-    if ctx.join_src.shape[0] == e:
+    if not ctx.bidir and ctx.join_src.shape[0] == e:
         return pos
     return jnp.where(pos < e, pos, pos - e)
+
+
+def _join_dst_at(ctx: Context, pos: jax.Array) -> jax.Array:
+    """The next-vertex column of the join view, gathered at join-space
+    positions (callers mask invalid lanes themselves).  Under the fused
+    view the gather resolves forward positions through ``to`` and backward
+    positions through ``from`` — two E-array gathers, no 2E column."""
+    if not ctx.bidir:
+        ej = ctx.join_src.shape[0]
+        return ctx.join_dst[jnp.minimum(pos, ej - 1)]
+    e = ctx.join_src.shape[0]
+    fwd = pos < e
+    p = jnp.clip(jnp.where(fwd, pos, pos - e), 0, e - 1)
+    return jnp.where(fwd, ctx.join_dst[p], ctx.join_src[p])
+
+
+def _join_src_at(ctx: Context, pos: jax.Array) -> jax.Array:
+    """The source-vertex column of the join view at join-space positions."""
+    if not ctx.bidir:
+        ej = ctx.join_src.shape[0]
+        return ctx.join_src[jnp.minimum(pos, ej - 1)]
+    e = ctx.join_src.shape[0]
+    fwd = pos < e
+    p = jnp.clip(jnp.where(fwd, pos, pos - e), 0, e - 1)
+    return jnp.where(fwd, ctx.join_src[p], ctx.join_dst[p])
+
+
+def _seed_mask(ctx: Context, root: jax.Array) -> jax.Array:
+    """(EJ,) mask of join edges whose source is the root (the seed
+    filter).  Fused view: forward matches on ``from``, backward on ``to``,
+    concatenated in join-space order."""
+    if not ctx.bidir:
+        return ctx.join_src == root
+    return jnp.concatenate([ctx.join_src == root, ctx.join_dst == root])
+
+
+def _hit_mask(ctx: Context, frontier_v: jax.Array) -> jax.Array:
+    """(EJ,) mask of join edges whose SOURCE vertex is in ``frontier_v`` —
+    the rows one CTE level emits (push-side emission test)."""
+    nv = frontier_v.shape[0]
+    if not ctx.bidir:
+        return frontier_v[jnp.clip(ctx.join_src, 0, nv - 1)]
+    return jnp.concatenate([
+        frontier_v[jnp.clip(ctx.join_src, 0, nv - 1)],
+        frontier_v[jnp.clip(ctx.join_dst, 0, nv - 1)]])
+
+
+def _expand_join(ctx: Context, targets: jax.Array, keep: jax.Array,
+                 capacity: int, expand_fn=None):
+    """CSR expansion over the join view: the plain/Pallas kernel over the
+    direction CSR, or the fused bidirectional expansion (out-slice then
+    in-slice, join-space positions) when ``bidir``."""
+    if ctx.bidir:
+        return expand_frontier_both(ctx.csr, ctx.rcsr, ctx.both_indptr,
+                                    targets, keep, capacity)
+    expand = expand_fn or expand_frontier
+    return expand(ctx.csr, targets, keep, capacity)
+
+
+def _dense_push(ctx: Context, frontier_v: jax.Array, visited: jax.Array
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One dense PUSH step over the join view.  Returns
+    (edge_hit_mask (EJ,), next_frontier, visited)."""
+    if not ctx.bidir:
+        return bitmap_level(ctx.join_src, ctx.join_dst, frontier_v, visited)
+    nv = frontier_v.shape[0]
+    src = jnp.clip(ctx.join_src, 0, nv - 1)
+    dst = jnp.clip(ctx.join_dst, 0, nv - 1)
+    hit_f = frontier_v[src]
+    hit_b = frontier_v[dst]
+    nxt = (jnp.zeros((nv,), bool).at[dst].max(hit_f, mode="drop")
+           .at[src].max(hit_b, mode="drop"))
+    nxt = nxt & ~visited
+    visited = visited | nxt
+    return jnp.concatenate([hit_f, hit_b]), nxt, visited
+
+
+def _dense_pull(ctx: Context, frontier_v: jax.Array, visited: jax.Array,
+                pull_fn=None) -> jax.Array:
+    """One dense PULL (Beamer bottom-up) step: the next frontier is every
+    UNVISITED vertex with an in-neighbor (over the join view) in the
+    frontier bitmap.  The default walks the reverse CSR — the candidate
+    mask gates the membership gather per reverse-adjacency entry;
+    ``pull_fn`` plugs the Pallas ``frontier_pull`` kernel in its place."""
+    nv = frontier_v.shape[0]
+    cand = ~visited
+    if ctx.bidir:
+        # fused view: both orientations contribute, natural edge order
+        src = jnp.clip(ctx.join_src, 0, nv - 1)
+        dst = jnp.clip(ctx.join_dst, 0, nv - 1)
+        nxt = (jnp.zeros((nv,), bool)
+               .at[dst].max(cand[dst] & frontier_v[src], mode="drop")
+               .at[src].max(cand[src] & frontier_v[dst], mode="drop"))
+        return nxt & cand
+    if pull_fn is not None:
+        if ctx.rcsr is None:
+            raise ValueError(
+                "the frontier_pull kernel walks the reverse CSR; call "
+                "Dataset.ensure_reverse() (inbound/both views build it "
+                "automatically) before plugging PullStep(expand_fn=)")
+        nxt = pull_fn(ctx.rcsr, ctx.join_src, ctx.join_dst, frontier_v,
+                      visited)
+        return nxt & cand
+    if ctx.rcsr is not None:
+        perm = ctx.rcsr.perm                   # join edges grouped by dst
+        nbr = jnp.clip(ctx.join_src[perm], 0, nv - 1)   # in-neighbor
+        vtx = jnp.clip(ctx.join_dst[perm], 0, nv - 1)   # owning vertex
+        contrib = cand[vtx] & frontier_v[nbr]
+        nxt = jnp.zeros((nv,), bool).at[vtx].max(contrib, mode="drop")
+        return nxt & cand
+    # no reverse CSR built (outbound-only dataset): the same bottom-up
+    # test evaluated in natural edge order — identical result, and plain
+    # outbound traffic never pays the reverse-CSR build
+    src = jnp.clip(ctx.join_src, 0, nv - 1)
+    dst = jnp.clip(ctx.join_dst, 0, nv - 1)
+    contrib = cand[dst] & frontier_v[src]
+    nxt = jnp.zeros((nv,), bool).at[dst].max(contrib, mode="drop")
+    return nxt & cand
 
 
 def _tag_depths(result_depth: jax.Array, count: jax.Array, block_cap: int,
@@ -305,6 +479,15 @@ class Seed(Operator):
     mark_emitted: bool = False
 
     def init(self, ctx, state, root):
+        if state.vertex_depth.shape[0]:
+            # deferred-emission pipeline: the per-vertex depth array IS
+            # the visited set and the frontier (no separate bitmaps)
+            nvd = state.vertex_depth.shape[0]
+            return state._replace(
+                vertex_depth=state.vertex_depth.at[
+                    jnp.clip(root, 0, nvd - 1)].set(0),
+                visited_count=jnp.ones((), jnp.int32),
+                frontier_count=jnp.ones((), jnp.int32))
         nv = state.visited.shape[0]
         visited = state.visited.at[jnp.clip(root, 0, nv - 1)].set(True)
         if self.kind == "dense":
@@ -318,11 +501,11 @@ class Seed(Operator):
             keep = jnp.zeros((cap,), bool).at[0].set(True)
             return state._replace(targets=targets, keep=keep, visited=visited,
                                   frontier_count=jnp.ones((), jnp.int32))
-        ej = ctx.join_src.shape[0]
-        col = (ctx.rows.column(self.label).astype(jnp.int32)
-               if self.scan == "rows" else ctx.join_src)
+        ej = _num_join(ctx)
+        mask = (ctx.rows.column(self.label).astype(jnp.int32) == root
+                if self.scan == "rows" else _seed_mask(ctx, root))
         cap = state.frontier_pos.shape[0]
-        blk = compact_mask(col == root, cap, ej)
+        blk = compact_mask(mask, cap, ej)
         state = state._replace(frontier_pos=blk.positions,
                                frontier_count=blk.count, visited=visited)
         if self.mark_emitted:
@@ -369,8 +552,7 @@ class ReadTargets(Operator):
         cap = state.targets.shape[0]
         valid = jnp.arange(cap, dtype=jnp.int32) < state.frontier_count
         if self.source == "pos":
-            ej = ctx.join_src.shape[0]
-            t = ctx.join_dst[jnp.minimum(state.frontier_pos, ej - 1)]
+            t = _join_dst_at(ctx, state.frontier_pos)
         elif self.source == "vals":
             t = state.frontier_vals[self.col].astype(jnp.int32)
         else:
@@ -424,8 +606,8 @@ class CSRIndexJoin(Operator):
 
     def step(self, ctx, state):
         cap = state.frontier_pos.shape[0]
-        expand = self.expand_fn or expand_frontier
-        epos, total, ovf = expand(ctx.csr, state.targets, state.keep, cap)
+        epos, total, ovf = _expand_join(ctx, state.targets, state.keep, cap,
+                                        self.expand_fn)
         return state._replace(frontier_pos=epos, frontier_count=total,
                               overflow=state.overflow | ovf)
 
@@ -471,15 +653,56 @@ class ScanHashJoin(Operator):
                       + float(env.num_edges) * (env.row_bytes + 1.0))
 
 
+def _record_deferred(state: TraversalState, new: jax.Array
+                     ) -> TraversalState:
+    """Deferred-emission bookkeeping: the loop carries ONLY the per-vertex
+    depth array (frontier = ``vd == depth``, visited = ``vd >= 0`` — no
+    separate bitmaps) plus the scalar visited count the switch predicate
+    reads.  Newly discovered vertices emit at ``state.depth + 1``; the
+    emitted mask is derived once, after the fixed point."""
+    count = jnp.sum(new, dtype=jnp.int32)
+    vd = jnp.where(new, state.depth + 1, state.vertex_depth)
+    return state._replace(vertex_depth=vd, frontier_count=count,
+                          visited_count=state.visited_count + count)
+
+
 @dataclasses.dataclass(frozen=True)
 class DenseBitmapStep(Operator):
     """Beyond-paper dense level: the frontier is a vertex bitmap and one
     level is a masked scatter over the full edge list (boolean-semiring
-    SpMV) — O(E) work but zero data-dependent shapes."""
+    SpMV) — O(E) work but zero data-dependent shapes.
+
+    ``deferred=True`` (the direction-optimizing pipelines) skips the
+    per-level emitted-mask/emit-depth upkeep — two O(E) writes per level —
+    and records per-vertex depths instead; :class:`DeferredEmit` rebuilds
+    the identical emitted set in ONE O(E) pass after the fixed point."""
+
+    deferred: bool = False
+
+    def deferred_new(self, ctx, state):
+        """Narrow deferred protocol: the newly-discovered-vertex mask from
+        the per-vertex depth array alone (DirectionSwitch conds over THIS,
+        not the whole state, so the branch exchanges one (V,) mask)."""
+        vd = state.vertex_depth
+        nv = vd.shape[0]
+        src = jnp.clip(ctx.join_src, 0, nv - 1)
+        dst = jnp.clip(ctx.join_dst, 0, nv - 1)
+        # frontier membership fused into the edge gather (vd[src] == depth)
+        # — no (V,) frontier mask is ever materialized
+        if ctx.bidir:
+            tgt = (jnp.zeros((nv,), bool)
+                   .at[dst].max(vd[src] == state.depth, mode="drop")
+                   .at[src].max(vd[dst] == state.depth, mode="drop"))
+        else:
+            tgt = jnp.zeros((nv,), bool).at[dst].max(
+                vd[src] == state.depth, mode="drop")
+        return tgt & (vd < 0)
 
     def step(self, ctx, state):
-        hit, nxt, visited = bitmap_level(ctx.join_src, ctx.join_dst,
-                                         state.frontier_bits, state.visited)
+        if self.deferred:
+            return _record_deferred(state, self.deferred_new(ctx, state))
+        hit, nxt, visited = _dense_push(ctx, state.frontier_bits,
+                                        state.visited)
         new = hit & ~state.emitted
         emit_depth = jnp.where(new, state.depth, state.emit_depth)
         return state._replace(frontier_bits=nxt, visited=visited,
@@ -488,13 +711,184 @@ class DenseBitmapStep(Operator):
                               frontier_count=jnp.sum(nxt, dtype=jnp.int32))
 
     def describe(self):
-        return "BitmapStep[push: frontier bits -> edge mask]"
+        tag = ", deferred emit" if self.deferred else ""
+        return f"BitmapStep[push: frontier bits -> edge mask{tag}]"
 
     def estimate(self, env):
-        # O(E) masked scatter + bitmap updates, independent of frontier size
+        # O(E) masked scatter + bitmap updates, independent of frontier
+        # size; the deferred variant drops the two per-level O(E) emitted
+        # writes (paid once in the finisher instead)
+        e_ops = 6.0 if self.deferred else 10.0
+        v_ops = 4.0 if self.deferred else 3.0
         return OpCost(env.emitted_rows,
-                      float(env.num_edges) * 10.0 + float(env.num_vertices)
-                      * 3.0)
+                      float(env.num_edges) * e_ops
+                      + float(env.num_vertices) * v_ops)
+
+
+@dataclasses.dataclass(frozen=True)
+class PullStep(Operator):
+    """Beamer-style bottom-up level: gather over the REVERSE CSR from
+    unvisited vertices, testing membership of their in-neighbors in the
+    frontier bitmap — the pull dual of :class:`DenseBitmapStep`'s push.
+    ``expand_fn`` plugs the Pallas ``frontier_pull`` kernel
+    (:func:`repro.kernels.frontier_pull.make_pull_fn`).
+
+    In deferred mode (the diropt pipelines) a pull level touches no
+    emitted-edge state at all; in emitted mode the push-side hit mask is
+    still computed (emission is defined by the SQL join, not by how the
+    next frontier was found), so pull only pays off with deferral."""
+
+    deferred: bool = False
+    expand_fn: Optional[Callable] = None
+
+    def deferred_new(self, ctx, state):
+        """Narrow deferred protocol (see DenseBitmapStep.deferred_new)."""
+        vd = state.vertex_depth
+        frontier = vd == state.depth
+        return _dense_pull(ctx, frontier, vd >= 0, self.expand_fn)
+
+    def step(self, ctx, state):
+        if self.deferred:
+            return _record_deferred(state, self.deferred_new(ctx, state))
+        nxt = _dense_pull(ctx, state.frontier_bits, state.visited,
+                          self.expand_fn)
+        visited = state.visited | nxt
+        hit = _hit_mask(ctx, state.frontier_bits)
+        new = hit & ~state.emitted
+        emit_depth = jnp.where(new, state.depth, state.emit_depth)
+        return state._replace(frontier_bits=nxt, visited=visited,
+                              emitted=state.emitted | hit,
+                              emit_depth=emit_depth,
+                              frontier_count=jnp.sum(nxt, dtype=jnp.int32))
+
+    def describe(self):
+        how = "kernel" if self.expand_fn is not None else "reverse CSR"
+        return f"PullStep[bottom-up: unvisited <- frontier bits ({how})]"
+
+    def estimate(self, env):
+        # the pull side reads the reverse adjacency of the UNVISITED set:
+        # work shrinks as the traversal saturates the graph — exactly the
+        # deep/wide regime where push degenerates
+        unvis = max(float(env.num_vertices) - env.visited_rows, 0.0)
+        frac = unvis / max(float(env.num_vertices), 1.0)
+        b = frac * float(env.num_edges) * 8.0 + float(env.num_vertices) * 4.0
+        if not self.deferred:
+            b += float(env.num_edges) * 4.0       # emitted upkeep anyway
+        if self.expand_fn is not None:
+            b *= env.kernel_factor
+        return OpCost(env.emitted_rows, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectionSwitch(Operator):
+    """The direction-optimizing combinator: per level, a ``lax.cond`` picks
+    the push or the pull operator by comparing the estimated work terms —
+    frontier occupancy x avg out-degree (the push side's emitted edges)
+    vs unvisited count x avg in-degree (the pull side's reverse-adjacency
+    reads):
+
+        pull  iff  alpha * n_f * avg_out > (V - visited) * avg_in
+              and  beta * n_f >= V
+
+    (Beamer's two thresholds; the second keeps shrunk tail frontiers on
+    the push side.)  The average degrees are trace-time constants off the
+    join view's shapes, so the whole predicate costs one popcount of the
+    visited bitmap per level.  ``alpha``/``beta`` are owned by
+    :class:`repro.planner.cost.CostConstants` (``pull_alpha`` /
+    ``pull_beta``) so the calibrator can refit them; the planner stamps its
+    constants' values onto the pipeline it prices.  The decision taken at
+    every level is recorded in ``TraversalState.level_dirs`` and surfaces
+    in ``BFSResult.level_dirs`` / the plan-store schema."""
+
+    push: Operator
+    pull: Operator
+    alpha: float = 1.0
+    beta: float = 64.0
+
+    def _predicate(self, ctx, state):
+        nv = state.vertex_depth.shape[0] or state.visited.shape[0]
+        ej = float(_num_join(ctx))
+        avg = ej / max(float(nv), 1.0)     # avg out == avg in over the view
+        n_f = state.frontier_count
+        if state.frontier_bits.shape[0] or state.vertex_depth.shape[0]:
+            # dense/deferred frontier: the count is VERTICES — scale by
+            # the average out-degree to get the push-side edge work
+            m_f = n_f.astype(jnp.float32) * avg
+        else:                              # positional frontier: the edge
+            m_f = n_f.astype(jnp.float32)  # block IS m_f
+        if state.vertex_depth.shape[0]:    # deferred steps keep the scalar
+            unvisited = nv - state.visited_count
+        else:
+            unvisited = nv - jnp.sum(state.visited, dtype=jnp.int32)
+        m_u = unvisited.astype(jnp.float32) * avg
+        use_pull = self.alpha * m_f > m_u
+        use_pull &= self.beta * n_f.astype(jnp.float32) >= float(nv)
+        return use_pull
+
+    def step(self, ctx, state):
+        use_pull = self._predicate(ctx, state)
+        if state.level_dirs.shape[0]:
+            idx = jnp.minimum(state.depth, state.level_dirs.shape[0] - 1)
+            state = state._replace(level_dirs=state.level_dirs.at[idx].set(
+                use_pull.astype(jnp.int8)))
+        narrow = (state.vertex_depth.shape[0]
+                  and hasattr(self.push, "deferred_new")
+                  and hasattr(self.pull, "deferred_new"))
+        if narrow:
+            # deferred dense steps: the cond exchanges ONE (V,) mask
+            # instead of threading the whole traversal state through the
+            # branch boundary
+            new = jax.lax.cond(
+                use_pull,
+                lambda: self.pull.deferred_new(ctx, state),
+                lambda: self.push.deferred_new(ctx, state))
+            return _record_deferred(state, new)
+        return jax.lax.cond(use_pull,
+                            lambda s: self.pull.step(ctx, s),
+                            lambda s: self.push.step(ctx, s), state)
+
+    def describe(self):
+        return (f"DirectionSwitch[a={self.alpha:g} b={self.beta:g}: "
+                f"{self.push.describe()} | {self.pull.describe()}]")
+
+    def predict(self, env: CostEnv) -> str:
+        """The cost model's per-level decision (mirrors the runtime
+        predicate on the sampled cardinalities): 'push' or 'pull'."""
+        avg = float(env.num_edges) / max(float(env.num_vertices), 1.0)
+        unvis = max(float(env.num_vertices) - env.visited_rows, 0.0)
+        m_f = env.emitted_rows                 # edges out of the frontier
+        m_u = unvis * avg
+        n_f = env.frontier_rows
+        if self.alpha * m_f > m_u and self.beta * n_f >= env.num_vertices:
+            return "pull"
+        return "push"
+
+    def estimate(self, env):
+        chosen = (self.pull if self.predict(env) == "pull"
+                  else self.push).estimate(env)
+        # the predicate itself: two degree reductions over (V,)
+        return OpCost(chosen.rows,
+                      chosen.bytes + float(env.num_vertices) * 2.0)
+
+
+def _install_edge_frontier(ctx: Context, state: TraversalState,
+                           nxt: PosBlock, visited: jax.Array,
+                           ovf: jax.Array) -> TraversalState:
+    """Shared positional-frontier bookkeeping (HybridStep and its pull
+    twin): install the next edge block and mark its positions emitted at
+    ``depth + 1``."""
+    ej = _num_join(ctx)
+    cap = state.frontier_pos.shape[0]
+    valid = nxt.valid_mask()
+    idx = jnp.where(valid, nxt.positions, ej)
+    new = valid & ~state.emitted[jnp.minimum(nxt.positions, ej - 1)]
+    emitted = state.emitted.at[idx].set(valid, mode="drop")
+    emit_depth = state.emit_depth.at[jnp.where(new, nxt.positions, ej)].set(
+        jnp.broadcast_to(state.depth + 1, (cap,)), mode="drop")
+    return state._replace(frontier_pos=nxt.positions,
+                          frontier_count=nxt.count, visited=visited,
+                          emitted=emitted, emit_depth=emit_depth,
+                          overflow=state.overflow | ovf)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -505,32 +899,31 @@ class HybridStep(Operator):
     switch_frac: float = 0.05
 
     def step(self, ctx, state):
-        e = ctx.join_src.shape[0]
+        ej = _num_join(ctx)
         nv = state.visited.shape[0]
         cap = state.frontier_pos.shape[0]
         threshold = max(1, int(nv * self.switch_frac))
-        from_col, to_col = ctx.join_src, ctx.join_dst
 
         def sparse_step(frontier, visited):
             fvalid = frontier.valid_mask()
-            targets = jnp.where(
-                fvalid, to_col[jnp.minimum(frontier.positions, e - 1)], -1)
+            targets = jnp.where(fvalid,
+                                _join_dst_at(ctx, frontier.positions), -1)
             keep, visited = dedup_targets(targets, fvalid, visited)
             targets = jnp.where(keep, targets, -1)
-            epos, total, ovf = expand_frontier(ctx.csr, targets, keep, cap)
+            epos, total, ovf = _expand_join(ctx, targets, keep, cap)
             return PosBlock(epos, total), visited, ovf
 
         def dense_step(frontier, visited):
             fvalid = frontier.valid_mask()
-            targets = to_col[jnp.minimum(frontier.positions, e - 1)]
+            targets = _join_dst_at(ctx, frontier.positions)
             # scatter-max: padded slots (clipped onto a real vertex) must
             # never UNSET a vertex another slot legitimately reached
             tgt_v = jnp.zeros((nv,), bool).at[
                 jnp.clip(targets, 0, nv - 1)].max(fvalid, mode="drop")
             tgt_v = tgt_v & ~visited
             visited = visited | tgt_v
-            hit = tgt_v[jnp.clip(from_col, 0, nv - 1)]
-            nxt = compact_mask(hit, cap, e)
+            hit = _hit_mask(ctx, tgt_v)
+            nxt = compact_mask(hit, cap, ej)
             ovf = jnp.sum(hit, dtype=jnp.int32) > cap
             return nxt, visited, ovf
 
@@ -538,17 +931,7 @@ class HybridStep(Operator):
         nxt, visited, ovf = jax.lax.cond(
             state.frontier_count < threshold, sparse_step, dense_step,
             frontier, state.visited)
-        valid = nxt.valid_mask()
-        idx = jnp.where(valid, nxt.positions, e)
-        new = valid & ~state.emitted[jnp.minimum(nxt.positions, e - 1)]
-        emitted = state.emitted.at[idx].set(valid, mode="drop")
-        emit_depth = state.emit_depth.at[jnp.where(new, nxt.positions, e)
-                                         ].set(
-            jnp.broadcast_to(state.depth + 1, (cap,)), mode="drop")
-        return state._replace(frontier_pos=nxt.positions,
-                              frontier_count=nxt.count, visited=visited,
-                              emitted=emitted, emit_depth=emit_depth,
-                              overflow=state.overflow | ovf)
+        return _install_edge_frontier(ctx, state, nxt, visited, ovf)
 
     def describe(self):
         return (f"DirectionOpt[<{self.switch_frac:g}V: IndexJoin[CSR] | "
@@ -562,6 +945,43 @@ class HybridStep(Operator):
         threshold = max(1.0, env.num_vertices * self.switch_frac)
         chosen = sparse if env.frontier_rows < threshold else dense
         return OpCost(env.emitted_rows, chosen + env.frontier_cap * 5.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridPullStep(Operator):
+    """The pull twin of :class:`HybridStep`'s dense branch, for positional
+    (edge-block) frontiers: rebuild the previous level's VERTEX set from
+    the frontier edges' join sources, bottom-up test the unvisited set
+    against it, then emit and compact exactly like the push branch — so a
+    :class:`DirectionSwitch` over (HybridStep, HybridPullStep) is
+    level-for-level state-identical to plain HybridStep."""
+
+    def step(self, ctx, state):
+        ej = _num_join(ctx)
+        nv = state.visited.shape[0]
+        cap = state.frontier_pos.shape[0]
+        fvalid = (jnp.arange(cap, dtype=jnp.int32) < state.frontier_count)
+        srcs = _join_src_at(ctx, state.frontier_pos)
+        prev_v = jnp.zeros((nv,), bool).at[
+            jnp.clip(srcs, 0, nv - 1)].max(fvalid, mode="drop")
+        tgt_v = _dense_pull(ctx, prev_v, state.visited)
+        visited = state.visited | tgt_v
+        hit = _hit_mask(ctx, tgt_v)
+        nxt = compact_mask(hit, cap, ej)
+        ovf = jnp.sum(hit, dtype=jnp.int32) > cap
+        return _install_edge_frontier(ctx, state, nxt, visited, ovf)
+
+    def describe(self):
+        return "PullStep[bottom-up over reverse CSR -> edge block]"
+
+    def estimate(self, env):
+        unvis = max(float(env.num_vertices) - env.visited_rows, 0.0)
+        frac = unvis / max(float(env.num_vertices), 1.0)
+        return OpCost(env.emitted_rows,
+                      frac * float(env.num_edges) * 8.0
+                      + float(env.num_edges) * 4.0       # hit + compact
+                      + float(env.num_vertices) * 4.0
+                      + env.frontier_cap * 5.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -588,11 +1008,9 @@ class EarlyMaterialize(Operator):
             return state._replace(frontier_rows=ctx.rows.take_rows(pos_real))
         vals = ctx.table.take(pos_real, self.cols)
         if self.with_next:
-            ej = ctx.join_src.shape[0]
-            valid = state.frontier_pos < ej
+            valid = state.frontier_pos < _num_join(ctx)
             vals["__next__"] = jnp.where(
-                valid, ctx.join_dst[jnp.minimum(state.frontier_pos, ej - 1)],
-                -1)
+                valid, _join_dst_at(ctx, state.frontier_pos), -1)
         return state._replace(frontier_vals=vals)
 
     def describe(self):
@@ -679,10 +1097,9 @@ class ShardTargetExchange(Operator):
 
     def step(self, ctx, state):
         cap = state.frontier_pos.shape[0]
-        ej = ctx.join_src.shape[0]
         live = jnp.arange(cap, dtype=jnp.int32) < state.frontier_count
         tloc = jnp.where(
-            live, ctx.join_dst[jnp.minimum(state.frontier_pos, ej - 1)], -1)
+            live, _join_dst_at(ctx, state.frontier_pos), -1)
         gathered = jax.lax.all_gather(tloc, self.axis, tiled=True)
         gvalid = gathered >= 0
         keep, visited = dedup_targets(gathered, gvalid, state.visited)
@@ -777,7 +1194,7 @@ class CompactEmitted:
     cols: Tuple[str, ...]
 
     def finish(self, ctx, pipeline, state):
-        ej = ctx.join_src.shape[0]
+        ej = _num_join(ctx)
         cap_r = pipeline.caps.result
         blk = compact_mask(state.emitted, cap_r, ej)
         pos_real = _to_real(ctx, blk.positions)
@@ -787,8 +1204,9 @@ class CompactEmitted:
         row_depths = jnp.where(
             blk.valid_mask(),
             state.emit_depth[jnp.minimum(blk.positions, ej - 1)], -1)
+        dirs = state.level_dirs if state.level_dirs.shape[0] else None
         return BFSResult(values, pos_real, blk.count, state.depth, overflow,
-                         row_depths)
+                         row_depths, dirs)
 
     def describe(self):
         return (f"Materialize[{', '.join(self.cols)}](Compact(emitted mask))"
@@ -797,6 +1215,53 @@ class CompactEmitted:
     def estimate(self, env):
         return OpCost(env.frontier_rows,
                       float(env.num_edges) * 2.0
+                      + env.result_cap * (_cols_bytes(env, self.cols)
+                                          + 4.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeferredEmit:
+    """Deferred-emission finisher (the diropt pipelines): the loop carried
+    only per-vertex depths, so the emitted-edge mask is DERIVED here in one
+    O(EJ) pass — a join edge is emitted iff its source vertex was
+    discovered strictly before the last executed level — then compacted
+    and late-materialized exactly like :class:`CompactEmitted` (identical
+    row set, order and depths)."""
+
+    cols: Tuple[str, ...]
+
+    def finish(self, ctx, pipeline, state):
+        ej = _num_join(ctx)
+        cap_r = pipeline.caps.result
+        vd = state.vertex_depth
+        nv = vd.shape[0]
+        if ctx.bidir:
+            src_depth = jnp.concatenate([
+                vd[jnp.clip(ctx.join_src, 0, nv - 1)],
+                vd[jnp.clip(ctx.join_dst, 0, nv - 1)]])
+        else:
+            src_depth = vd[jnp.clip(ctx.join_src, 0, nv - 1)]
+        emitted = (src_depth >= 0) & (src_depth < state.depth)
+        blk = compact_mask(emitted, cap_r, ej)
+        pos_real = _to_real(ctx, blk.positions)
+        values = ctx.table.take(pos_real, self.cols)
+        overflow = state.overflow | (
+            jnp.sum(emitted, dtype=jnp.int32) > cap_r)
+        row_depths = jnp.where(
+            blk.valid_mask(),
+            src_depth[jnp.minimum(blk.positions, ej - 1)], -1)
+        dirs = state.level_dirs if state.level_dirs.shape[0] else None
+        return BFSResult(values, pos_real, blk.count, state.depth, overflow,
+                         row_depths, dirs)
+
+    def describe(self):
+        return (f"Materialize[{', '.join(self.cols)}]"
+                "(Compact(vertex depths -> emitted))  <- ONE deferred pass")
+
+    def estimate(self, env):
+        # one (EJ,) depth gather + mask + compact, then the late gather
+        return OpCost(env.frontier_rows,
+                      float(env.num_edges) * 3.0
                       + env.result_cap * (_cols_bytes(env, self.cols)
                                           + 4.0))
 
@@ -885,6 +1350,8 @@ class Pipeline:
     max_depth: int
     inclusive: bool = False        # cond: depth <= max_depth (dense engines)
     tracks_emitted: bool = False   # carries the (EJ,) emitted-edge mask
+    tracks_vertex_depth: bool = False  # deferred emission: (V,) vertex depths
+    tracks_switch: bool = False    # records per-level push/pull decisions
 
     @property
     def carries_positions(self) -> bool:
@@ -905,11 +1372,13 @@ class Pipeline:
 def _initial_state(pipeline: Pipeline, ctx: Context, num_vertices: int
                    ) -> TraversalState:
     cap_f, cap_r = pipeline.caps.frontier, pipeline.caps.result
-    ej = ctx.join_src.shape[0]
+    ej = _num_join(ctx)
     e = _num_real_rows(ctx)
     dense = pipeline.rep == "dense"
     track = pipeline.tracks_emitted
+    deferred = pipeline.tracks_vertex_depth
     use_result_pos = pipeline.rep == "pos" and not track
+    n_levels = pipeline.max_depth + 2          # >= executed iterations
     i32z = jnp.zeros((), jnp.int32)
     return TraversalState(
         frontier_pos=(jnp.zeros((0,), jnp.int32) if dense
@@ -917,23 +1386,36 @@ def _initial_state(pipeline: Pipeline, ctx: Context, num_vertices: int
         frontier_vals={},
         frontier_rows=jnp.zeros((0, 0), jnp.float32),
         frontier_count=i32z,
-        targets=jnp.full((cap_f,), -1, jnp.int32),
-        keep=jnp.zeros((cap_f,), bool),
-        frontier_bits=(jnp.zeros((num_vertices,), bool) if dense
+        # deferred pipelines carry ONLY the vertex-depth array: no target
+        # block, no dedup mask, no per-row result buffers in the loop
+        targets=(jnp.zeros((0,), jnp.int32) if deferred
+                 else jnp.full((cap_f,), -1, jnp.int32)),
+        keep=(jnp.zeros((0,), bool) if deferred
+              else jnp.zeros((cap_f,), bool)),
+        frontier_bits=(jnp.zeros((num_vertices,), bool)
+                       if dense and not pipeline.tracks_vertex_depth
                        else jnp.zeros((0,), bool)),
         emitted=(jnp.zeros((ej,), bool) if track
                  else jnp.zeros((0,), bool)),
         emit_depth=(jnp.full((ej,), -1, jnp.int32) if track
                     else jnp.zeros((0,), jnp.int32)),
-        visited=jnp.zeros((num_vertices,), bool),
+        visited=(jnp.zeros((0,), bool) if pipeline.tracks_vertex_depth
+                 else jnp.zeros((num_vertices,), bool)),
         result_pos=(jnp.full((cap_r,), e, jnp.int32) if use_result_pos
                     else jnp.zeros((0,), jnp.int32)),
         result_vals={},
-        result_depth=(jnp.zeros((0,), jnp.int32) if track
+        result_depth=(jnp.zeros((0,), jnp.int32) if track or deferred
                       else jnp.full((cap_r,), -1, jnp.int32)),
         result_count=i32z,
         depth=i32z,
         overflow=jnp.zeros((), bool),
+        vertex_depth=(jnp.full((num_vertices,), -1, jnp.int32)
+                      if pipeline.tracks_vertex_depth
+                      else jnp.zeros((0,), jnp.int32)),
+        visited_count=i32z,
+        level_dirs=(jnp.full((n_levels,), -1, jnp.int8)
+                    if pipeline.tracks_switch
+                    else jnp.zeros((0,), jnp.int8)),
     )
 
 

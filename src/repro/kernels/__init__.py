@@ -6,4 +6,5 @@ the public contract), ``ref.py`` (pure-jnp oracle).  All kernels validate in
 ``interpret=True`` on CPU; BlockSpecs are written for the TPU (8,128)/MXU
 tiling target.
 """
-from . import late_gather, embedding_bag, spmm_segment, frontier_expand  # noqa: F401
+from . import (late_gather, embedding_bag, spmm_segment,  # noqa: F401
+               frontier_expand, frontier_pull)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: the bottom-up (pull) membership test of
+direction-optimizing BFS.
+
+One pull level asks, for every reverse-adjacency entry ``q`` (a join edge
+grouped by its DESTINATION vertex), whether the entry's in-neighbor is in
+the frontier bitmap while its owning vertex is still unvisited:
+
+    contrib[q] = frontier[nbr[q]] & ~visited[vtx[q]]
+
+The two (V,)-bitmap gathers are the whole kernel.  Like the
+``expand_index`` kernel this avoids dynamic VMEM gathers (TPU-unfriendly)
+with a *chunked one-hot masked-sum select*: the bitmaps live wholly in
+VMEM as int32 rows, and each entry tile resolves its lookups by comparing
+against a chunk-wide iota — dense VPU compares, no scatter/gather inside
+the kernel.  The segment-OR per vertex (``nxt = any(contrib over the
+vertex's reverse slice)``) stays outside in XLA, where a scatter-max is
+native.
+
+Output entries are int32 0/1 (Pallas-friendly); the wrapper casts back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_CHUNK = 512     # bitmap chunk per compare-select step
+
+
+def _pull_contrib_kernel(nbr_ref, vtx_ref, frontier_ref, visited_ref,
+                         out_ref, *, num_vertices: int):
+    nbr = nbr_ref[...]            # (1, block_e) in-neighbor per entry
+    vtx = vtx_ref[...]            # (1, block_e) owning (destination) vertex
+    frontier = frontier_ref[...]  # (1, Vp) int32 0/1 frontier bitmap
+    visited = visited_ref[...]    # (1, Vp) int32 0/1 visited bitmap
+
+    vp = frontier.shape[1]
+    nchunk = vp // _CHUNK
+
+    def chunk_body(c, carry):
+        f_sel, v_sel = carry
+        c0 = c * _CHUNK
+        f_c = jax.lax.dynamic_slice(frontier, (0, c0), (1, _CHUNK))
+        v_c = jax.lax.dynamic_slice(visited, (0, c0), (1, _CHUNK))
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, _CHUNK), 2) + c0
+        pick = lambda idx, row: jnp.sum(
+            jnp.where(idx[0, :][None, :, None] == iota,
+                      row[0, :][None, None, :], 0), axis=2)
+        return f_sel + pick(nbr, f_c), v_sel + pick(vtx, v_c)
+
+    zeros = jnp.zeros(nbr.shape, jnp.int32)
+    f_sel, v_sel = jax.lax.fori_loop(0, nchunk, chunk_body, (zeros, zeros))
+    out_ref[...] = ((f_sel > 0) & (v_sel == 0)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "block_e",
+                                             "interpret"))
+def pull_contrib_pallas(nbr: jax.Array, vtx: jax.Array,
+                        frontier: jax.Array, visited: jax.Array,
+                        num_vertices: int, *, block_e: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """(E,) int32 contribution mask: entry q contributes iff
+    ``frontier[nbr[q]] & ~visited[vtx[q]]``.  ``nbr``/``vtx`` must be
+    pre-clipped to [0, num_vertices)."""
+    e = nbr.shape[0]
+    pad_v = (-num_vertices) % _CHUNK
+    # pad the bitmaps with frontier=0 / visited=1: padded vertices never
+    # contribute even if a (clipped) index lands on them
+    f_p = jnp.pad(frontier.astype(jnp.int32), (0, pad_v))[None, :]
+    v_p = jnp.pad(visited.astype(jnp.int32), (0, pad_v),
+                  constant_values=1)[None, :]
+    vp = num_vertices + pad_v
+
+    pad_e = (-e) % block_e
+    ep = e + pad_e
+    nbr_p = jnp.pad(nbr.astype(jnp.int32), (0, pad_e))[None, :]
+    vtx_p = jnp.pad(vtx.astype(jnp.int32), (0, pad_e))[None, :]
+
+    out = pl.pallas_call(
+        functools.partial(_pull_contrib_kernel, num_vertices=num_vertices),
+        grid=(ep // block_e,),
+        in_specs=[pl.BlockSpec((1, block_e), lambda eb: (0, eb)),
+                  pl.BlockSpec((1, block_e), lambda eb: (0, eb)),
+                  pl.BlockSpec((1, vp), lambda eb: (0, 0)),
+                  pl.BlockSpec((1, vp), lambda eb: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_e), lambda eb: (0, eb)),
+        out_shape=jax.ShapeDtypeStruct((1, ep), jnp.int32),
+        interpret=interpret,
+    )(nbr_p, vtx_p, f_p, v_p)
+    return out[0, :e]

@@ -1,0 +1,25 @@
+"""Oracle for the bottom-up (pull) frontier step — pure XLA.
+
+The reference mirrors the engine's own reverse-CSR pull
+(:func:`repro.core.operators._dense_pull`, non-bidir branch): per
+reverse-adjacency entry, test the in-neighbor's frontier membership under
+the unvisited candidate mask, then segment-OR per owning vertex."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSRIndex
+
+
+def frontier_pull_ref(rcsr: CSRIndex, join_src: jax.Array,
+                      join_dst: jax.Array, frontier: jax.Array,
+                      visited: jax.Array) -> jax.Array:
+    nv = frontier.shape[0]
+    cand = ~visited
+    perm = rcsr.perm
+    nbr = jnp.clip(join_src[perm], 0, nv - 1)
+    vtx = jnp.clip(join_dst[perm], 0, nv - 1)
+    contrib = cand[vtx] & frontier[nbr]
+    nxt = jnp.zeros((nv,), bool).at[vtx].max(contrib, mode="drop")
+    return nxt & cand

@@ -39,7 +39,9 @@ from .cost import CostConstants, DEFAULT_CONSTANTS
 from .stats import GraphStats
 
 __all__ = ["Calibrator", "Observation", "kernel_expand_fn",
-           "measured_kernel_factor", "plan_signature", "resolve_constants",
+           "kernel_pull_fn", "measured_factors_state",
+           "measured_kernel_factor", "plan_signature",
+           "restore_measured_factors", "resolve_constants",
            "set_measured_kernel_factor", "stats_digest"]
 
 
@@ -61,17 +63,23 @@ def stats_digest(stats: GraphStats) -> str:
 
 
 def plan_signature(label: str, direction: str, caps, digest: str,
-                   lanes: int = 1, shape: Tuple = ()) -> Tuple:
+                   lanes: int = 1, shape: Tuple = (),
+                   mix: Tuple = ()) -> Tuple:
     """The calibration key of one served plan: engine label (kernel
     included), direction, the bucket's caps, the graph-stats digest, the
-    dispatched lane count, and the query-shape axes (max_depth, payloads,
-    dedup, ...).  Lanes and shape matter: a 1-lane and an 8-lane dispatch
-    of the same pipeline do different amounts of work, and two query
-    shapes clamped to the same caps must not pool their latencies under
-    one signature.  The shape is canonicalized to a string so signatures
-    stay flat primitives and round-trip JSON (the plan store) exactly."""
+    dispatched lane count, the query-shape axes (max_depth, payloads,
+    dedup, ...), and — for direction-optimizing plans — the predicted
+    per-level push/pull ``mix``.  Lanes and shape matter: a 1-lane and an
+    8-lane dispatch of the same pipeline do different amounts of work, and
+    two query shapes clamped to the same caps must not pool their
+    latencies under one signature.  The mix matters for the same reason:
+    a push-heavy and a pull-heavy execution of the SAME diropt pipeline
+    move very different bytes, and pooling them would corrupt the
+    per-signature means the refit validator trusts.  Shape and mix are
+    canonicalized to strings so signatures stay flat primitives and
+    round-trip JSON (the plan store) exactly."""
     return (label, direction, int(caps.frontier), int(caps.result), digest,
-            int(lanes), repr(tuple(shape)))
+            int(lanes), repr(tuple(shape)), repr(tuple(mix)))
 
 
 class Observation(NamedTuple):
@@ -88,54 +96,94 @@ class Observation(NamedTuple):
 # the measured kernel factor
 # ---------------------------------------------------------------------------
 
-_KERNEL_FN = None
+# kernel plug-ins, one per (kernel name, backend): a JAX backend change
+# mid-process (tests do this) must not serve a stale interpret-mode choice
+_KERNEL_FNS: dict = {}
+
+
+def _backend() -> str:
+    import jax
+    return jax.default_backend()
 
 
 def kernel_expand_fn():
     """The Pallas ``frontier_expand`` plug-in for ``CSRIndexJoin``, created
-    once so every planned pipeline shares one jit cache entry.  Interpret
-    mode is used off-TPU (numerically identical, not perf-representative)."""
-    global _KERNEL_FN
-    if _KERNEL_FN is None:
-        import jax
-
+    once per backend so every planned pipeline shares one jit cache entry.
+    Interpret mode is used off-TPU (numerically identical, not
+    perf-representative)."""
+    key = ("frontier_expand", _backend())
+    if key not in _KERNEL_FNS:
         from repro.kernels.frontier_expand.ops import make_expand_fn
-        _KERNEL_FN = make_expand_fn(
-            interpret=jax.default_backend() != "tpu")
-    return _KERNEL_FN
+        _KERNEL_FNS[key] = make_expand_fn(interpret=key[1] != "tpu")
+    return _KERNEL_FNS[key]
 
 
-_MEASURED_KERNEL_FACTOR: Optional[float] = None
+def kernel_pull_fn():
+    """The Pallas ``frontier_pull`` plug-in for ``PullStep`` (the
+    bottom-up membership-test kernel), created once per backend."""
+    key = ("frontier_pull", _backend())
+    if key not in _KERNEL_FNS:
+        from repro.kernels.frontier_pull.ops import make_pull_fn
+        _KERNEL_FNS[key] = make_pull_fn(interpret=key[1] != "tpu")
+    return _KERNEL_FNS[key]
+
+
+# measured kernel factors, keyed on (backend, kernel name): a backend
+# change mid-process must not serve a stale factor, and every kernel
+# (frontier_expand, frontier_pull) gets its own measurement
+_MEASURED_KERNEL_FACTORS: dict = {}
 
 _MEASURE_V = 256          # micro-benchmark graph size
 _MEASURE_E = 1024
 _MEASURE_CAP = 512
 _MEASURE_REPEAT = 5
 
-
-def set_measured_kernel_factor(value: Optional[float]) -> None:
-    """Inject (or, with ``None``, clear) the cached kernel factor — used by
-    tests and by plan-store rehydration to skip the micro-benchmark."""
-    global _MEASURED_KERNEL_FACTOR
-    _MEASURED_KERNEL_FACTOR = None if value is None else float(value)
+KERNEL_NAMES = ("frontier_expand", "frontier_pull")
 
 
-def measured_kernel_factor(*, refresh: bool = False) -> float:
-    """MEASURE the relative cost of the Pallas ``frontier_expand`` kernel
-    vs the XLA expansion on this backend: one tiny synthetic CSR, both
-    expansions jitted, median of a few timed calls.  Cached per process —
-    the first kernel-candidate pricing pays it once.
+def set_measured_kernel_factor(value: Optional[float], *,
+                               kernel: str = "frontier_expand",
+                               backend: Optional[str] = None) -> None:
+    """Inject (or, with ``None``, clear) the cached factor for one
+    (backend, kernel) cell — used by tests and by plan-store rehydration
+    to skip the micro-benchmark.  ``backend`` defaults to the CURRENT JAX
+    backend (the cell a subsequent same-backend lookup will hit)."""
+    key = (backend if backend is not None else _backend(), kernel)
+    if value is None:
+        _MEASURED_KERNEL_FACTORS.pop(key, None)
+    else:
+        _MEASURED_KERNEL_FACTORS[key] = float(value)
 
-    This replaces the static 0.7x-on-TPU / 200x-elsewhere constant: on a
-    real TPU the measurement reflects the fused VMEM-tiled kernel, on CPU
-    it reflects interpret mode (large, correctly steering the planner away
-    from the kernel candidate off-TPU)."""
-    global _MEASURED_KERNEL_FACTOR
-    if _MEASURED_KERNEL_FACTOR is not None and not refresh:
-        return _MEASURED_KERNEL_FACTOR
 
+def measured_factors_state() -> dict:
+    """JSON-serializable snapshot of every measured (backend, kernel)
+    factor (persisted in the plan store)."""
+    return {f"{b}/{k}": v for (b, k), v in _MEASURED_KERNEL_FACTORS.items()}
+
+
+def restore_measured_factors(state: dict) -> None:
+    """Seed the per-(backend, kernel) cache from a plan-store snapshot
+    (existing cells win — this process's own measurements are fresher)."""
+    for key, v in (state or {}).items():
+        b, _, k = key.partition("/")
+        _MEASURED_KERNEL_FACTORS.setdefault((b, k), float(v))
+
+
+def _median_us(fn, *args) -> float:
     import time
 
+    import jax
+
+    jax.block_until_ready(fn(*args))                 # compile
+    ts = []
+    for _ in range(_MEASURE_REPEAT):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _measure_expand_factor() -> float:
     import jax
     import jax.numpy as jnp
 
@@ -151,20 +199,64 @@ def measured_kernel_factor(*, refresh: bool = False) -> float:
 
     plain = jax.jit(lambda t, v: expand_frontier(csr, t, v, _MEASURE_CAP))
     kern = jax.jit(lambda t, v: kern_fn(csr, t, v, _MEASURE_CAP))
+    t_plain = max(_median_us(plain, targets, valid), 1e-3)
+    t_kern = max(_median_us(kern, targets, valid), 1e-3)
+    return float(np.clip(t_kern / t_plain, 1e-3, 1e6))
 
-    def median_us(fn) -> float:
-        jax.block_until_ready(fn(targets, valid))        # compile
-        ts = []
-        for _ in range(_MEASURE_REPEAT):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(targets, valid))
-            ts.append((time.perf_counter() - t0) * 1e6)
-        return float(np.median(ts))
 
-    t_plain = max(median_us(plain), 1e-3)
-    t_kern = max(median_us(kern), 1e-3)
-    _MEASURED_KERNEL_FACTOR = float(np.clip(t_kern / t_plain, 1e-3, 1e6))
-    return _MEASURED_KERNEL_FACTOR
+def _measure_pull_factor() -> float:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.csr import build_csr
+    from repro.core.engine import Dataset
+    from repro.core.operators import _dense_pull
+    from repro.core.table import ColumnTable
+
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, _MEASURE_V, _MEASURE_E).astype(np.int32)
+    dst = rng.integers(0, _MEASURE_V, _MEASURE_E).astype(np.int32)
+    table = ColumnTable.from_numpy({
+        "id": np.arange(_MEASURE_E, dtype=np.int32), "from": src, "to": dst,
+        "name": np.zeros((_MEASURE_E, 4), np.float32)})
+    ds = Dataset.prepare(table, _MEASURE_V)
+    ds.ensure_reverse()                     # the pull kernel walks it
+    ctx = ds.context("outbound")
+    frontier = jnp.asarray(rng.random(_MEASURE_V) < 0.25)
+    visited = jnp.asarray(rng.random(_MEASURE_V) < 0.5) | frontier
+    kern_fn = kernel_pull_fn()
+
+    plain = jax.jit(lambda f, vis: _dense_pull(ctx, f, vis))
+    kern = jax.jit(lambda f, vis: _dense_pull(ctx, f, vis, kern_fn))
+    t_plain = max(_median_us(plain, frontier, visited), 1e-3)
+    t_kern = max(_median_us(kern, frontier, visited), 1e-3)
+    return float(np.clip(t_kern / t_plain, 1e-3, 1e6))
+
+
+def measured_kernel_factor(*, kernel: str = "frontier_expand",
+                           refresh: bool = False) -> float:
+    """MEASURE the relative cost of a Pallas kernel vs its XLA counterpart
+    on the CURRENT backend: one tiny synthetic graph, both paths jitted,
+    median of a few timed calls.  Cached per (backend, kernel) — the first
+    pricing on a backend pays it once, and a backend change mid-process
+    gets a fresh measurement instead of a stale cached one.
+
+    ``frontier_expand`` times the VMEM-tiled expansion vs the XLA
+    two-phase expansion; ``frontier_pull`` times the bottom-up
+    membership-test kernel vs the XLA reverse-CSR pull.  This replaces the
+    old static 0.7x-on-TPU / 200x-elsewhere constant: on a real TPU the
+    measurement reflects the fused kernel, on CPU it reflects interpret
+    mode (large, correctly steering the planner away off-TPU)."""
+    if kernel not in KERNEL_NAMES:
+        raise ValueError(f"unknown kernel {kernel!r}; "
+                         f"known: {KERNEL_NAMES}")
+    key = (_backend(), kernel)
+    if key in _MEASURED_KERNEL_FACTORS and not refresh:
+        return _MEASURED_KERNEL_FACTORS[key]
+    factor = (_measure_expand_factor() if kernel == "frontier_expand"
+              else _measure_pull_factor())
+    _MEASURED_KERNEL_FACTORS[key] = factor
+    return factor
 
 
 def resolve_constants(constants: Optional[CostConstants], *,
@@ -330,8 +422,12 @@ class Calibrator:
             kf = float(np.clip(w[3] / max(a, 1e-18), 1e-3, 1e6))
         else:
             kf = self.constants.kernel_factor
-        candidate = CostConstants(bytes_per_us=bpu, level_us=level,
-                                  base_us=base, kernel_factor=kf)
+        # _replace keeps the axes the linear model does not fit — notably
+        # the pull_alpha/pull_beta switch thresholds — instead of
+        # silently resetting them to the defaults on every adopted refit
+        candidate = self.constants._replace(
+            bytes_per_us=bpu, level_us=level, base_us=base,
+            kernel_factor=kf)
         if not self._validates(candidate):
             self.rejected_refits += 1
             return self.constants

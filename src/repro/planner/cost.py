@@ -51,6 +51,12 @@ LEVEL_US = 25.0
 BASE_US = 50.0
 
 
+# direction-switch thresholds (Beamer's alpha/beta restated for the cost
+# model's work terms): pull iff alpha * m_f > m_u and beta * n_f >= V
+PULL_ALPHA = 1.0
+PULL_BETA = 64.0
+
+
 class CostConstants(NamedTuple):
     """The cost model's time constants, refittable as one unit.
 
@@ -59,16 +65,25 @@ class CostConstants(NamedTuple):
     yet measured": the planner resolves it lazily through
     :func:`repro.planner.calibrate.measured_kernel_factor` (a real timed
     micro-benchmark, replacing the static 0.7x/200x guess) the first time a
-    kernel candidate is priced."""
+    kernel candidate is priced.
+
+    ``pull_alpha``/``pull_beta`` own the direction-optimizing switch
+    thresholds (:class:`repro.core.operators.DirectionSwitch`): the planner
+    stamps them onto every diropt pipeline it prices, so a calibrator
+    refit that updates the constants re-thresholds the executed switch —
+    the decision is priced and measured, not hard-coded."""
 
     bytes_per_us: float = BYTES_PER_US
     level_us: float = LEVEL_US
     base_us: float = BASE_US
     kernel_factor: Optional[float] = None
+    pull_alpha: float = PULL_ALPHA
+    pull_beta: float = PULL_BETA
 
     def to_json(self) -> dict:
         return {"bytes_per_us": self.bytes_per_us, "level_us": self.level_us,
-                "base_us": self.base_us, "kernel_factor": self.kernel_factor}
+                "base_us": self.base_us, "kernel_factor": self.kernel_factor,
+                "pull_alpha": self.pull_alpha, "pull_beta": self.pull_beta}
 
     @classmethod
     def from_json(cls, doc: dict) -> "CostConstants":
@@ -76,7 +91,9 @@ class CostConstants(NamedTuple):
                    level_us=float(doc["level_us"]),
                    base_us=float(doc["base_us"]),
                    kernel_factor=(None if doc.get("kernel_factor") is None
-                                  else float(doc["kernel_factor"])))
+                                  else float(doc["kernel_factor"])),
+                   pull_alpha=float(doc.get("pull_alpha", PULL_ALPHA)),
+                   pull_beta=float(doc.get("pull_beta", PULL_BETA)))
 
 
 DEFAULT_CONSTANTS = CostConstants()
@@ -118,6 +135,11 @@ class PlanCost(NamedTuple):
     # plan store re-price plans from these without re-walking the pipeline.
     plain_bytes: float = 0.0
     kernel_bytes: float = 0.0
+    # a DirectionSwitch pipeline's PREDICTED per-level decision
+    # ('push'/'pull'), one entry per priced level: the calibration
+    # signature carries it so push-heavy and pull-heavy executions never
+    # pool under one regression, and the plan store persists it
+    level_dirs: Tuple[str, ...] = ()
 
 
 def column_bytes(table) -> dict:
@@ -143,30 +165,38 @@ def _level_envs(pipeline: Pipeline, stats: GraphStats, *, row_bytes: int,
     s = stats.level_edges
     n = stats.level_vertices
 
-    def mk(f, u, m):
+    def mk(f, u, m, seen):
         return CostEnv(frontier_rows=f, unique_rows=u, emitted_rows=m,
                        num_vertices=stats.num_vertices,
                        num_edges=stats.num_edges,
                        frontier_cap=pipeline.caps.frontier,
                        result_cap=pipeline.caps.result,
                        row_bytes=row_bytes, col_bytes=col_bytes,
-                       kernel_factor=kernel_factor)
+                       kernel_factor=kernel_factor, visited_rows=seen)
 
     envs = []
+    # vertices discovered before iteration i: the root + every earlier
+    # level's new vertices (the pull-side work term)
     if pipeline.seed.kind == "dense":
         # frontier entering iteration i is the level-i vertex set
         limit = md + (1 if pipeline.inclusive else 0)
+        seen = 1.0
         for i in range(limit):
             f = 1.0 if i == 0 else stats.vertices_at(i - 1)
             if f <= 0:
                 break
-            envs.append(mk(f, stats.vertices_at(i), stats.edges_at(i)))
+            envs.append(mk(f, stats.vertices_at(i), stats.edges_at(i),
+                           seen))
+            seen += stats.vertices_at(i)
     else:
+        seen = 1.0
         for i in range(md):
             f = stats.edges_at(i)
             if f <= 0:
                 break
-            envs.append(mk(f, stats.vertices_at(i), stats.edges_at(i + 1)))
+            envs.append(mk(f, stats.vertices_at(i), stats.edges_at(i + 1),
+                           seen))
+            seen += stats.vertices_at(i)
     return envs
 
 
@@ -198,7 +228,7 @@ def pipeline_cost(pipeline: Pipeline, stats: GraphStats, *, row_bytes: int,
                        frontier_cap=pipeline.caps.frontier,
                        result_cap=pipeline.caps.result,
                        row_bytes=row_bytes, col_bytes=col_bytes,
-                       kernel_factor=1.0)
+                       kernel_factor=1.0, visited_rows=0.0)
 
     # (plain bytes at factor 0, unit kernel bytes = bytes@1 - bytes@0)
     def split(op, env) -> tuple[float, float, float]:
@@ -227,6 +257,12 @@ def pipeline_cost(pipeline: Pipeline, stats: GraphStats, *, row_bytes: int,
 
     plain_bytes = sum(slot[2] for slot in per_op)
     kernel_bytes = sum(slot[3] for slot in per_op)
+    # a DirectionSwitch pipeline's predicted per-level decisions (the same
+    # predicate the runtime lax.cond evaluates, on the sampled profile)
+    switch = next((op for op in pipeline.ops
+                   if hasattr(op, "predict")), None)
+    level_dirs = (tuple(switch.predict(env) for env in envs)
+                  if switch is not None else ())
     # estimate_us is THE pricing formula (and the unresolved-kernel guard)
     est_us = estimate_us(consts, plain_bytes=plain_bytes,
                          kernel_bytes=kernel_bytes, levels=len(envs))
@@ -236,4 +272,5 @@ def pipeline_cost(pipeline: Pipeline, stats: GraphStats, *, row_bytes: int,
         levels=len(envs), result_rows=result_rows,
         per_op=tuple(OpEstimate(lbl, r, p + kf * k)
                      for lbl, r, p, k in per_op),
-        plain_bytes=plain_bytes, kernel_bytes=kernel_bytes)
+        plain_bytes=plain_bytes, kernel_bytes=kernel_bytes,
+        level_dirs=level_dirs)

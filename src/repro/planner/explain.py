@@ -18,7 +18,14 @@ rehydrate a plan without re-planning (:mod:`repro.planner.plan_store`):
 the full graph statistics (per-root profiles, walk profile, histogram),
 the factor-independent ``plain_bytes``/``kernel_bytes`` cost split per
 candidate, and the :class:`~repro.planner.cost.CostConstants` the pass was
-priced with.  v1 documents still load through
+priced with.
+
+Schema version 3 adds the direction-optimizing switch decision: each
+candidate's cost carries ``level_dirs`` (the predicted per-level
+``push``/``pull`` choice of a :class:`~repro.core.operators.
+DirectionSwitch` pipeline; empty for push-only engines), and the cost
+constants carry the refittable ``pull_alpha``/``pull_beta`` thresholds.
+v1 and v2 documents still load through
 :func:`repro.planner.plan_store.migrate_plan_doc`.
 """
 from __future__ import annotations
@@ -32,7 +39,7 @@ from .optimize import PhysicalChoice, PlannerReport, RootBucket, plan
 
 __all__ = ["explain", "explain_json", "render_report", "to_json"]
 
-PLAN_SCHEMA_VERSION = 2
+PLAN_SCHEMA_VERSION = 3
 
 
 def _fmt_bytes(b: float) -> str:
@@ -119,7 +126,10 @@ def _choice_json(c: PhysicalChoice, chosen: bool) -> dict:
                  # v2: factor-independent split — a rehydrating process
                  # re-prices the plan from these under ITS constants
                  "plain_bytes": c.cost.plain_bytes,
-                 "kernel_bytes": c.cost.kernel_bytes},
+                 "kernel_bytes": c.cost.kernel_bytes,
+                 # v3: the predicted per-level push/pull switch decision
+                 # (empty for push-only engines)
+                 "level_dirs": list(c.cost.level_dirs)},
         "ops": [{"label": op.label, "rows": op.rows, "bytes": op.bytes}
                 for op in c.cost.per_op],
     }

@@ -328,10 +328,36 @@ def _illegal_reason(engine: str, logical: LogicalQuery) -> Optional[str]:
     if logical.direction != "outbound" and engine.startswith("rowstore"):
         return ("outbound-only: the row-store emulation models the "
                 "PostgreSQL baseline")
-    if not logical.dedup and engine in ("bitmap", "hybrid"):
+    if not logical.dedup and engine in ("bitmap", "hybrid", "diropt",
+                                        "diropt_hybrid"):
         return ("needs BFS dedup: raw UNION ALL on a non-forest graph "
                 "differs from the dense visited-bitmap semantics")
     return None
+
+
+def _stamp_switch_thresholds(pipeline: Pipeline,
+                             constants: CostConstants) -> Pipeline:
+    """Stamp the cost constants' refittable switch thresholds
+    (``pull_alpha``/``pull_beta``) onto every DirectionSwitch of a diropt
+    pipeline — the planner prices AND executes the thresholds it owns.
+    (Thresholds steer performance only; the row set is branch-invariant,
+    so ``run_query`` with the default-threshold registry build stays
+    row-identical.)"""
+    from repro.core.operators import DirectionSwitch
+
+    changed = False
+    ops = []
+    for op in pipeline.ops:
+        if isinstance(op, DirectionSwitch) and (
+                op.alpha != constants.pull_alpha
+                or op.beta != constants.pull_beta):
+            op = dataclasses.replace(op, alpha=constants.pull_alpha,
+                                     beta=constants.pull_beta)
+            changed = True
+        ops.append(op)
+    if not changed:
+        return pipeline
+    return dataclasses.replace(pipeline, ops=tuple(ops))
 
 
 def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
@@ -358,12 +384,18 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
     stats = ds.stats(logical.direction)
     if caps is None:
         caps = default_caps(stats, logical)
+
+    candidates, skipped = [], []
+    if include_kernel and logical.direction == "both":
+        skipped.append((KERNEL_LABEL,
+                        "the Pallas expand kernel walks one direction CSR; "
+                        "the fused bidirectional view expands through "
+                        "expand_frontier_both"))
+        include_kernel = False
     consts = resolve_constants(constants, need_kernel=include_kernel)
 
     col_bytes = column_bytes(ds.table)
     row_bytes = ds.rows.width * 4
-
-    candidates, skipped = [], []
     for engine in ENGINE_NAMES:
         reason = _illegal_reason(engine, logical)
         if reason is not None:
@@ -373,7 +405,8 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
                            payload_cols=logical.payload_cols, caps=caps,
                            dedup=logical.dedup,
                            direction=logical.direction)
-        pipeline = PLAN_BUILDERS[engine](q)
+        pipeline = _stamp_switch_thresholds(PLAN_BUILDERS[engine](q),
+                                            consts)
         cost = pipeline_cost(pipeline, stats, row_bytes=row_bytes,
                              col_bytes=col_bytes, constants=consts)
         candidates.append(PhysicalChoice(engine=engine, query=q,

@@ -155,23 +155,32 @@ def stats_from_json(doc: dict) -> GraphStats:
 # ---------------------------------------------------------------------------
 
 def migrate_plan_doc(doc: dict) -> dict:
-    """Upgrade one machine-readable plan document to ``schema_version`` 2
-    (a copy; the input is not mutated).  v2 documents pass through."""
+    """Upgrade one machine-readable plan document to ``schema_version`` 3
+    (a copy; the input is not mutated).  v3 documents pass through.
+
+    v1 -> v2: fill the rehydration-only stats fields and fold the v1
+    writer's statically-factored kernel bytes into ``plain_bytes``.
+    v2 -> v3: candidates gain ``level_dirs: []`` (a v2 writer knew no
+    direction-optimizing engines, so every stored plan is push-only) and
+    the cost constants gain the default ``pull_alpha``/``pull_beta``
+    thresholds (:meth:`CostConstants.from_json` defaults them)."""
     v = doc.get("schema_version")
     if v == PLAN_SCHEMA_VERSION:
         return doc
-    if v != 1:
+    if v not in (1, 2):
         raise ValueError(f"unsupported plan schema_version {v!r} "
                          f"(this reader handles 1..{PLAN_SCHEMA_VERSION})")
     out = copy.deepcopy(doc)
     out["schema_version"] = PLAN_SCHEMA_VERSION
     st = out.get("stats", {})
-    st.setdefault("degree_histogram", [])
-    st.setdefault("level_vertices", [0.0] * len(st.get("level_edges", [])))
-    st.setdefault("max_level_edges",
-                  int(max(st.get("level_edges", []), default=0)))
-    st.setdefault("root_profiles", [])
-    st.setdefault("level_walk_edges", [])
+    if v == 1:
+        st.setdefault("degree_histogram", [])
+        st.setdefault("level_vertices",
+                      [0.0] * len(st.get("level_edges", [])))
+        st.setdefault("max_level_edges",
+                      int(max(st.get("level_edges", []), default=0)))
+        st.setdefault("root_profiles", [])
+        st.setdefault("level_walk_edges", [])
     out.setdefault("cost_constants", DEFAULT_CONSTANTS.to_json())
     for c in out.get("candidates", []):
         cost = c.get("cost", {})
@@ -179,6 +188,7 @@ def migrate_plan_doc(doc: dict) -> dict:
         # migrating it as plain keeps every v1 ranking reproducible
         cost.setdefault("plain_bytes", cost.get("total_bytes", 0.0))
         cost.setdefault("kernel_bytes", 0.0)
+        cost.setdefault("level_dirs", [])        # v<=2: push-only plans
     return out
 
 
@@ -211,7 +221,8 @@ def _choice_from_json(cj: dict, logical: LogicalQuery) -> PhysicalChoice:
         per_op=tuple(OpEstimate(str(o["label"]), float(o["rows"]),
                                 float(o["bytes"])) for o in cj["ops"]),
         plain_bytes=float(cost["plain_bytes"]),
-        kernel_bytes=float(cost["kernel_bytes"]))
+        kernel_bytes=float(cost["kernel_bytes"]),
+        level_dirs=tuple(str(d) for d in cost.get("level_dirs", [])))
     return PhysicalChoice(engine=engine, query=q, logical=logical,
                           pipeline=pipeline, cost=plan_cost,
                           use_kernel=use_kernel)
@@ -260,7 +271,8 @@ def _choice_json(c: PhysicalChoice) -> dict:
                  "levels": c.cost.levels,
                  "result_rows": c.cost.result_rows,
                  "plain_bytes": c.cost.plain_bytes,
-                 "kernel_bytes": c.cost.kernel_bytes},
+                 "kernel_bytes": c.cost.kernel_bytes,
+                 "level_dirs": list(c.cost.level_dirs)},
         "ops": [{"label": op.label, "rows": op.rows, "bytes": op.bytes}
                 for op in c.cost.per_op],
     }
@@ -278,7 +290,7 @@ def session_to_json(session: ServingSession) -> dict:
                   "num_edges": int(ds.table.num_rows),
                   "digest": graph_digest(ds)},
         "calibration": session.calibrator.state_dict(),
-        "kernel_factor_measured": _calibrate._MEASURED_KERNEL_FACTOR,
+        "kernel_factors_measured": _calibrate.measured_factors_state(),
         "stats": {d: stats_to_json(st) for d, st in stats_cache.items()},
         "logical": {sql: logical_to_json(lg)
                     for sql, lg in session._logical.items()},
@@ -318,7 +330,7 @@ def load_store(path: str) -> dict:
         raise ValueError(f"{path} is not a plan store "
                          f"(kind={doc.get('kind')!r})")
     v = doc.get("schema_version")
-    if v not in (1, PLAN_SCHEMA_VERSION):
+    if v not in (1, 2, PLAN_SCHEMA_VERSION):
         raise ValueError(f"unsupported plan-store schema_version {v!r}")
     doc = dict(doc)
     doc["schema_version"] = PLAN_SCHEMA_VERSION
@@ -329,6 +341,7 @@ def load_store(path: str) -> dict:
             cost = c.get("cost", {})
             cost.setdefault("plain_bytes", cost.get("total_bytes", 0.0))
             cost.setdefault("kernel_bytes", 0.0)
+            cost.setdefault("level_dirs", [])
     return doc
 
 
@@ -368,9 +381,17 @@ def rehydrate_into(session: ServingSession, path: str) -> None:
                 and cal.constants == cal.prior)
     if pristine:
         session.calibrator = Calibrator.from_state(doc["calibration"])
+    if doc.get("kernel_factors_measured"):
+        _calibrate.restore_measured_factors(doc["kernel_factors_measured"])
     if doc.get("kernel_factor_measured") is not None:
-        _calibrate.set_measured_kernel_factor(
-            float(doc["kernel_factor_measured"]))
+        # pre-v3 stores held ONE un-keyed factor: it was measured for the
+        # writer's backend and the frontier_expand kernel.  Same policy as
+        # restore_measured_factors: this process's own (current-backend)
+        # measurement is fresher than the store's — only fill a missing
+        # cell, never clobber one
+        _calibrate.restore_measured_factors(
+            {f"{_calibrate._backend()}/frontier_expand":
+             float(doc["kernel_factor_measured"])})
 
     for sql, lg in doc.get("logical", {}).items():
         session._logical[sql] = logical_from_json(lg)

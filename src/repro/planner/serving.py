@@ -270,7 +270,8 @@ class ServingSession:
             lanes = max(t.padded_lanes, 1)
             self.calibrator.observe(
                 plan_signature(c.label, c.query.direction, t.caps, digest,
-                               lanes=lanes, shape=shape),
+                               lanes=lanes, shape=shape,
+                               mix=c.cost.level_dirs),
                 levels=c.cost.levels,
                 plain_bytes=lanes * c.cost.plain_bytes,
                 kernel_bytes=lanes * c.cost.kernel_bytes,

@@ -261,6 +261,11 @@ def compute_stats(ds, direction: str = "outbound") -> GraphStats:
     ctx = ds.context(direction)
     src = np.asarray(ctx.join_src).astype(np.int64)
     dst = np.asarray(ctx.join_dst).astype(np.int64)
+    if ctx.bidir:
+        # the fused 'both' view keeps E-sized columns on device; the
+        # HOST-side statistics pass materializes the virtual 2E join space
+        # transiently (same numbers the old doubled view produced)
+        src, dst = (np.concatenate([src, dst]), np.concatenate([dst, src]))
     v = int(ds.num_vertices)
     e = int(src.shape[0])
 
@@ -326,7 +331,7 @@ def root_estimates(ds, direction: str, roots: Sequence[int], max_depth: int
     from the direction view's CSR ``indptr`` (O(1) per root, host-side)."""
     stats = ds.stats(direction)
     ctx = ds.context(direction)
-    indptr = np.asarray(ctx.csr.indptr)
+    indptr = np.asarray(ctx.both_indptr if ctx.bidir else ctx.csr.indptr)
     v = stats.num_vertices
     out = []
     for r in np.asarray(roots, dtype=np.int64).reshape(-1):

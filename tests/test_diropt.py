@@ -1,0 +1,307 @@
+"""Direction-optimizing traversal + the fused bidirectional CSR.
+
+The load-bearing guarantees:
+
+* **diropt parity** — the direction-optimizing engines are row-for-row
+  IDENTICAL (positions, depths, counts, loop accounting) to their
+  push-only counterparts (``diropt`` vs ``bitmap``, ``diropt_hybrid`` vs
+  ``hybrid``) on random graphs, every legal direction, regardless of what
+  the per-level switch decides — the push and pull branches compute the
+  same level, so thresholds steer performance only;
+* **forced pull** — pinning the switch to the pull side (huge alpha/beta)
+  exercises :class:`PullStep`/:class:`HybridPullStep` on every level and
+  must still match the push-only engines, with ``level_dirs`` recording
+  all-pull;
+* **fused == doubled** — the fused bidirectional view (E-sized columns,
+  out/in CSRs + merged indptr, virtual 2E join space) produces results
+  bit-identical to the OLD materialized doubled view (2E concat columns +
+  2E CSR) for every engine on ``direction='both'``, and the fused view's
+  added arrays are E-scale;
+* the switch decision surfaces in ``BFSResult.level_dirs`` and in the
+  planner's predicted ``PlanCost.level_dirs``.
+
+The deterministic seeded slice always runs; the hypothesis property (real
+package or the vendored fallback engine) extends the seed set.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineCaps
+from repro.core.bitmap import diropt_hybrid_plan, diropt_plan
+from repro.core.csr import build_csr
+from repro.core.engine import (DIROPT_ENGINE_NAMES, ENGINE_NAMES,
+                               PUSH_COUNTERPART, Dataset, RecursiveQuery,
+                               build_plan, run_query)
+from repro.core.operators import Context, execute
+from repro.core.table import ColumnTable
+
+DIRECTIONS = ("outbound", "inbound", "both")
+OUT_COLS = ("id", "from", "to", "name")
+
+
+def _edge_dataset(src, dst, num_vertices):
+    e = len(src)
+    cols = {
+        "id": np.arange(e, dtype=np.int32),
+        "from": np.asarray(src, np.int32),
+        "to": np.asarray(dst, np.int32),
+        "name": np.zeros((e, 4), np.float32)}
+    return Dataset.prepare(ColumnTable.from_numpy(cols), num_vertices)
+
+
+def _random_graph(seed):
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(6, 48))
+    e = int(rng.integers(2, 3 * v))
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    depth = int(rng.integers(1, 6))
+    root = int(rng.integers(0, v))
+    return src, dst, v, root, depth
+
+
+def _caps(e, direction):
+    n = 2 * e if direction == "both" else e
+    return EngineCaps(frontier=n + 16, result=n + 16)
+
+
+def _assert_same(a, b, tag):
+    assert int(a.count) == int(b.count), tag
+    assert int(a.depth) == int(b.depth), tag
+    assert bool(a.overflow) == bool(b.overflow), tag
+    assert np.array_equal(np.asarray(a.positions),
+                          np.asarray(b.positions)), tag
+    assert np.array_equal(np.asarray(a.row_depths),
+                          np.asarray(b.row_depths)), tag
+    for k in b.values:
+        assert np.array_equal(np.asarray(a.values[k]),
+                              np.asarray(b.values[k])), (tag, k)
+
+
+# ---------------------------------------------------------------------------
+# 1. diropt engines == their push-only counterparts, every direction
+# ---------------------------------------------------------------------------
+
+def _check_diropt_parity(seed):
+    src, dst, v, root, depth = _random_graph(seed)
+    ds = _edge_dataset(src, dst, v)
+    for direction in DIRECTIONS:
+        caps = _caps(len(src), direction)
+        for eng in DIROPT_ENGINE_NAMES:
+            ref = run_query(RecursiveQuery(PUSH_COUNTERPART[eng], depth, 0,
+                                           caps, direction=direction),
+                            ds, root)
+            got = run_query(RecursiveQuery(eng, depth, 0, caps,
+                                           direction=direction), ds, root)
+            _assert_same(got, ref, (eng, direction, seed))
+            dirs = np.asarray(got.level_dirs)
+            assert dirs.shape[0] >= int(got.depth)
+            assert set(dirs.tolist()) <= {-1, 0, 1}, (eng, direction)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_diropt_matches_push_only_seeded(seed):
+    _check_diropt_parity(seed)
+
+
+# ---------------------------------------------------------------------------
+# 2. forced pull: every level bottom-up, same rows
+# ---------------------------------------------------------------------------
+
+def _check_forced_pull(seed):
+    src, dst, v, root, depth = _random_graph(seed)
+    ds = _edge_dataset(src, dst, v)
+    for direction in DIRECTIONS:
+        caps = _caps(len(src), direction)
+        ref_b = run_query(RecursiveQuery("bitmap", depth, 0, caps,
+                                         direction=direction), ds, root)
+        plan = diropt_plan(caps, depth, OUT_COLS, direction=direction,
+                           alpha=1e9, beta=1e9)
+        got = execute(plan, ds.context(direction), root, v)
+        _assert_same(got, ref_b, ("diropt-pull", direction, seed))
+        dirs = np.asarray(got.level_dirs)
+        assert (dirs[: int(got.depth)] == 1).all(), (direction, seed)
+
+        ref_h = run_query(RecursiveQuery("hybrid", depth, 0, caps,
+                                         direction=direction), ds, root)
+        hplan = diropt_hybrid_plan(caps, depth, OUT_COLS,
+                                   direction=direction, alpha=1e9,
+                                   beta=1e9)
+        goth = execute(hplan, ds.context(direction), root, v)
+        _assert_same(goth, ref_h, ("hybrid-pull", direction, seed))
+
+
+@pytest.mark.parametrize("seed", [1, 7])
+def test_forced_pull_matches_push_seeded(seed):
+    _check_forced_pull(seed)
+
+
+def test_pull_kernel_plugs_into_diropt():
+    """The Pallas frontier_pull kernel (interpret mode) as PullStep's
+    expand_fn: same rows as the XLA pull and the push baseline."""
+    from repro.planner.calibrate import kernel_pull_fn
+
+    src, dst, v, root, depth = _random_graph(23)
+    ds = _edge_dataset(src, dst, v)
+    ds.ensure_reverse()                     # the pull kernel walks it
+    caps = _caps(len(src), "outbound")
+    ref = run_query(RecursiveQuery("bitmap", depth, 0, caps), ds, root)
+    plan = diropt_plan(caps, depth, OUT_COLS, alpha=1e9, beta=1e9,
+                       pull_fn=kernel_pull_fn())
+    got = execute(plan, ds.context("outbound"), root, v)
+    _assert_same(got, ref, "kernel-pull")
+
+
+# ---------------------------------------------------------------------------
+# 3. fused bidirectional CSR == the old doubled 2E view, every engine
+# ---------------------------------------------------------------------------
+
+def _doubled_context(ds: Dataset) -> Context:
+    """The PRE-FUSION 'both' view, reconstructed: materialized 2E concat
+    columns and a CSR over them (what Dataset used to cache)."""
+    both_src = jnp.concatenate([ds.table.column("from"),
+                                ds.table.column("to")])
+    both_dst = jnp.concatenate([ds.table.column("to"),
+                                ds.table.column("from")])
+    return Context(table=ds.table, rows=ds.rows,
+                   csr=build_csr(both_src, ds.num_vertices),
+                   join_src=both_src, join_dst=both_dst,
+                   rcsr=build_csr(both_dst, ds.num_vertices))
+
+
+def _check_fused_equals_doubled(seed):
+    src, dst, v, root, depth = _random_graph(seed)
+    ds = _edge_dataset(src, dst, v)
+    caps = _caps(len(src), "both")
+    old_ctx = _doubled_context(ds)
+    fused_ctx = ds.context("both")
+    assert fused_ctx.bidir and not old_ctx.bidir
+    for eng in ENGINE_NAMES:
+        if eng.startswith("rowstore"):
+            continue                       # outbound-only baseline
+        plan = build_plan(RecursiveQuery(eng, depth, 0, caps,
+                                         direction="both"))
+        got = execute(plan, fused_ctx, root, v)
+        want = execute(plan, old_ctx, root, v)
+        _assert_same(got, want, (eng, seed))
+
+
+@pytest.mark.parametrize("seed", [2, 5, 13])
+def test_fused_both_view_equals_doubled_seeded(seed):
+    _check_fused_equals_doubled(seed)
+
+
+def test_fused_inbound_unchanged_by_rcsr_sharing():
+    """inbound (which now shares its CSR with the pull path and the fused
+    view) still equals a hand-built reverse context."""
+    src, dst, v, root, depth = _random_graph(17)
+    ds = _edge_dataset(src, dst, v)
+    caps = _caps(len(src), "inbound")
+    plan = build_plan(RecursiveQuery("precursive", depth, 0, caps,
+                                     direction="inbound"))
+    manual = Context(table=ds.table, rows=ds.rows,
+                     csr=build_csr(ds.table.column("to"), v),
+                     join_src=ds.table.column("to"),
+                     join_dst=ds.table.column("from"))
+    got = execute(plan, ds.context("inbound"), root, v)
+    want = execute(plan, manual, root, v)
+    _assert_same(got, want, "inbound")
+
+
+def test_fused_view_memory_is_e_scale():
+    """The 'both' view adds the reverse CSR + ONE merged indptr — no
+    2E-sized array anywhere on the Dataset."""
+    src, dst, v, _, _ = _random_graph(4)
+    ds = _edge_dataset(src, dst, v)
+    e = len(src)
+    added = ds.edge_view_bytes("both")
+    doubled_added = 3 * (2 * e * 4) + (v + 1) * 4
+    # reverse perm (E) + reverse indptr (V+1) + merged indptr (V+1)
+    assert added == 4 * (e + 2 * (v + 1))
+    assert added < doubled_added
+    assert int(np.asarray(ds.both_indptr)[-1]) == 2 * e  # merged covers 2E
+    ctx = ds.context("both")
+    assert ctx.join_src.shape[0] == e                    # no 2E columns
+
+
+# ---------------------------------------------------------------------------
+# 4. the switch decision is recorded and predicted
+# ---------------------------------------------------------------------------
+
+def test_level_dirs_recorded_and_push_only_for_counterparts():
+    src, dst, v, root, depth = _random_graph(9)
+    ds = _edge_dataset(src, dst, v)
+    caps = _caps(len(src), "outbound")
+    r = run_query(RecursiveQuery("diropt", depth, 0, caps), ds, root)
+    dirs = np.asarray(r.level_dirs)
+    assert (dirs[: int(r.depth)] >= 0).all()     # every level decided
+    assert (dirs[int(r.depth):] == -1).all()     # unexecuted levels marked
+    # push-only engines carry no switch log
+    rb = run_query(RecursiveQuery("bitmap", depth, 0, caps), ds, root)
+    assert rb.level_dirs is None
+
+
+def test_planner_predicts_level_dirs_for_diropt():
+    from repro.planner import plan
+
+    src, dst, v, root, depth = _random_graph(31)
+    ds = _edge_dataset(src, dst, v)
+    caps = _caps(len(src), "outbound")
+    sql = f"""
+        WITH RECURSIVE t (id, "from", "to", depth) AS (
+          SELECT id, "from", "to", 0 FROM edges WHERE "from" = {root}
+          UNION
+          SELECT e.id, e."from", e."to", t.depth + 1
+          FROM edges e JOIN t ON e."from" = t."to"
+          WHERE t.depth < {depth}
+        ) SELECT * FROM t"""
+    report = plan(sql, ds, caps=caps)
+    by_label = {c.label: c for c in report.ranked}
+    for eng in DIROPT_ENGINE_NAMES:
+        dirs = by_label[eng].cost.level_dirs
+        assert len(dirs) == by_label[eng].cost.levels
+        assert set(dirs) <= {"push", "pull"}
+    assert by_label["bitmap"].cost.level_dirs == ()
+    # thresholds flow from the constants into the priced pipeline
+    from repro.core.operators import DirectionSwitch
+    switch = next(op for op in by_label["diropt"].pipeline.ops
+                  if isinstance(op, DirectionSwitch))
+    assert (switch.alpha, switch.beta) == (report.constants.pull_alpha,
+                                           report.constants.pull_beta)
+
+
+def test_deferred_emit_overflow_flag():
+    src, dst, v, root, _ = _random_graph(6)
+    ds = _edge_dataset(src, dst, v)
+    tiny = EngineCaps(frontier=len(src) + 16, result=2)
+    r = run_query(RecursiveQuery("diropt", 4, 0, tiny), ds, root)
+    rb = run_query(RecursiveQuery("bitmap", 4, 0, tiny), ds, root)
+    assert bool(r.overflow) == bool(rb.overflow)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis extension (real package, or the vendored fallback engine)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                       # pragma: no cover
+    pass
+else:
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_diropt_matches_push_only_random(seed):
+        _check_diropt_parity(seed)
+
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_forced_pull_matches_push_random(seed):
+        _check_forced_pull(seed)
+
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_fused_both_view_equals_doubled_random(seed):
+        _check_fused_equals_doubled(seed)

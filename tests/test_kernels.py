@@ -12,6 +12,8 @@ from repro.core.csr import build_csr, expand_frontier
 from repro.kernels.embedding_bag import (embedding_bag, embedding_bag_ref,
                                          fixed_hot_lookup)
 from repro.kernels.frontier_expand import frontier_expand_fused
+from repro.kernels.frontier_pull import (frontier_pull_fused,
+                                         frontier_pull_ref)
 from repro.kernels.late_gather import (late_gather_pallas, late_gather_ref,
                                        materialize)
 from repro.kernels.spmm_segment import (gcn_norm_spmm, spmm_segment,
@@ -115,3 +117,21 @@ def test_frontier_kernel_property(seed):
     eb, tb, ob = frontier_expand_fused(csr, targets, valid, cap)
     np.testing.assert_array_equal(np.asarray(ea), np.asarray(eb))
     assert int(ta) == int(tb) and bool(oa) == bool(ob)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_frontier_pull_kernel_property(seed):
+    """The Pallas bottom-up membership kernel == the XLA reverse-CSR pull
+    on random graphs, frontiers and visited sets."""
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(4, 60))
+    e = int(rng.integers(2, 300))
+    src = jnp.asarray(rng.integers(0, v, e).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, v, e).astype(np.int32))
+    rcsr = build_csr(dst, v)
+    frontier = jnp.asarray(rng.random(v) < 0.3)
+    visited = jnp.asarray(rng.random(v) < 0.4) | frontier
+    a = frontier_pull_ref(rcsr, src, dst, frontier, visited)
+    b = frontier_pull_fused(rcsr, src, dst, frontier, visited)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

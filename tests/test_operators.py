@@ -38,7 +38,9 @@ _BITMAP_GOLDEN = {
     3: (816, 4, "df7c8c7255be3827", 5.651),
     7: (1898, 8, "b4e8619e95a1430f", -53.498),
 }
-GOLDEN = {(eng, d): (_BITMAP_GOLDEN if eng == "bitmap"
+# diropt shares bitmap's emit-inside-the-body loop accounting (its
+# push-only counterpart); diropt_hybrid shares hybrid's positional one
+GOLDEN = {(eng, d): (_BITMAP_GOLDEN if eng in ("bitmap", "diropt")
                      else _POSITIONAL_GOLDEN)[d]
           for eng in ENGINE_NAMES for d in (0, 3, 7)}
 
@@ -84,7 +86,8 @@ def test_positions_contract(golden_dataset, engine):
 
 
 EXPECT_POSITIONAL = {"precursive", "bitmap", "hybrid", "trecursive_rewrite",
-                     "rowstore_rewrite", "rowstore_index_rewrite"}
+                     "rowstore_rewrite", "rowstore_index_rewrite",
+                     "diropt", "diropt_hybrid"}
 
 
 def test_positions_contract_matches_expectation():

@@ -4,8 +4,9 @@ The load-bearing guarantees:
 
 * serialize -> rehydrate -> serialize is a FIXED POINT (the store document
   fully determines the rehydrated session's serializable state);
-* schema_version 1 plan documents still load under the v2 reader
-  (``migrate_plan_doc`` fills the v2-only fields conservatively);
+* schema_version 1 AND 2 plan documents still load under the v3 reader
+  (``migrate_plan_doc`` fills the newer fields conservatively — v2 docs
+  gain empty ``level_dirs``: a v2 writer knew no diropt engines);
 * a cold session and a plan-store-rehydrated session replaying IDENTICAL
   traffic produce identical plans and identical result rows — and the
   rehydrated one pays ZERO parse / statistics / costing passes
@@ -100,9 +101,21 @@ else:
 # v1 documents load under the v2 reader
 # ---------------------------------------------------------------------------
 
+def _as_v2(doc):
+    """Strip a v3 plan document down to what the PR-4 (v2) writer emitted."""
+    v2 = json.loads(json.dumps(doc))
+    v2["schema_version"] = 2
+    cc = v2.get("cost_constants", {})
+    cc.pop("pull_alpha", None)
+    cc.pop("pull_beta", None)
+    for c in v2["candidates"]:
+        c["cost"].pop("level_dirs", None)
+    return v2
+
+
 def _as_v1(doc):
-    """Strip a v2 plan document down to what the PR-3 (v1) writer emitted."""
-    v1 = json.loads(json.dumps(doc))
+    """Strip a plan document down to what the PR-3 (v1) writer emitted."""
+    v1 = _as_v2(doc)
     v1["schema_version"] = 1
     v1.pop("cost_constants", None)
     for k in ("degree_histogram", "level_vertices", "max_level_edges",
@@ -114,25 +127,29 @@ def _as_v1(doc):
     return v1
 
 
-def test_v1_plan_doc_loads_under_v2_reader(tmp_path):
+def test_v1_plan_doc_loads_under_v3_reader(tmp_path):
+    from repro.planner.explain import PLAN_SCHEMA_VERSION
+
     ds = _dataset()
     sql = paper_listing(1, root=0, depth=3)
     session = ServingSession(ds, caps=CAPS)
     session.submit(sql, [0, 1])
-    v2 = session.plan_json(sql, [0, 1])
-    v1 = _as_v1(v2)
+    v3 = session.plan_json(sql, [0, 1])
+    v1 = _as_v1(v3)
 
     migrated = migrate_plan_doc(v1)
-    assert migrated["schema_version"] == 2
-    # conservative fills: statically-factored bytes fold into plain
+    assert migrated["schema_version"] == PLAN_SCHEMA_VERSION
+    # conservative fills: statically-factored bytes fold into plain, and
+    # a v1 writer knew no direction-optimizing plans
     for c in migrated["candidates"]:
         assert c["cost"]["plain_bytes"] == c["cost"]["total_bytes"]
         assert c["cost"]["kernel_bytes"] == 0.0
+        assert c["cost"]["level_dirs"] == []
     # and it rebuilds into a live report with the v1 ranking preserved
     report = report_from_json(v1)
     assert [c.label for c in report.ranked] \
-        == [c["label"] for c in v2["candidates"]]
-    assert report.best.label == v2["chosen"]
+        == [c["label"] for c in v3["candidates"]]
+    assert report.best.label == v3["chosen"]
 
     # a v1-shaped STORE (v1 inner docs) also loads
     store_path = tmp_path / "store.json"
@@ -143,16 +160,79 @@ def test_v1_plan_doc_loads_under_v2_reader(tmp_path):
     for e in doc["entries"]:
         e["plan_json"] = _as_v1(e["plan_json"])
         for c in e["bucket_choices"]:
-            c["cost"].pop("plain_bytes", None)
-            c["cost"].pop("kernel_bytes", None)
+            for k in ("plain_bytes", "kernel_bytes", "level_dirs"):
+                c["cost"].pop(k, None)
     store_path.write_text(json.dumps(doc))
     loaded = load_store(str(store_path))
-    assert loaded["schema_version"] == 2
+    assert loaded["schema_version"] == PLAN_SCHEMA_VERSION
     ds2 = _dataset()
     session2 = rehydrate_session(ds2, str(store_path), caps=CAPS)
-    assert session2.plan_json(sql, [0, 1])["schema_version"] == 2
+    assert session2.plan_json(sql, [0, 1])["schema_version"] \
+        == PLAN_SCHEMA_VERSION
     assert session2.counters == {"parse_calls": 0, "stats_calls": 0,
                                  "cost_calls": 0}
+
+
+def test_v2_plan_doc_and_store_load_under_v3_reader(tmp_path):
+    """The PR-5 migration note's contract: a schema-version-2 store (the
+    PR-4 writer — full stats and byte splits, but no per-level direction
+    decisions and no pull thresholds) loads under the v3 reader with
+    ``level_dirs`` conservatively empty and the default thresholds."""
+    from repro.planner.cost import PULL_ALPHA, PULL_BETA
+    from repro.planner.explain import PLAN_SCHEMA_VERSION
+
+    ds = _dataset()
+    sql = paper_listing(1, root=0, depth=3)
+    session = ServingSession(ds, caps=CAPS)
+    session.submit(sql, [0, 1])
+    v3 = session.plan_json(sql, [0, 1])
+    v2 = _as_v2(v3)
+
+    migrated = migrate_plan_doc(v2)
+    assert migrated["schema_version"] == PLAN_SCHEMA_VERSION
+    for c in migrated["candidates"]:
+        assert c["cost"]["level_dirs"] == []
+        # v2 fields survive untouched (no lossy refill)
+        assert c["cost"]["plain_bytes"] == \
+            next(x for x in v3["candidates"]
+                 if x["label"] == c["label"])["cost"]["plain_bytes"]
+    report = report_from_json(v2)
+    assert [c.label for c in report.ranked] \
+        == [c["label"] for c in v3["candidates"]]
+    assert (report.constants.pull_alpha, report.constants.pull_beta) \
+        == (PULL_ALPHA, PULL_BETA)
+
+    # a v2-shaped STORE (v2 inner docs, un-keyed measured kernel factor)
+    store_path = tmp_path / "store.json"
+    save_session(session, str(store_path))
+    doc = json.loads(store_path.read_text())
+    doc["schema_version"] = 2
+    doc["shapes"] = [_as_v2(s) for s in doc["shapes"]]
+    doc.pop("kernel_factors_measured", None)
+    doc["kernel_factor_measured"] = 2.5          # the v2 un-keyed field
+    for e in doc["entries"]:
+        e["plan_json"] = _as_v2(e["plan_json"])
+        for c in e["bucket_choices"]:
+            c["cost"].pop("level_dirs", None)
+    store_path.write_text(json.dumps(doc))
+    loaded = load_store(str(store_path))
+    assert loaded["schema_version"] == PLAN_SCHEMA_VERSION
+    from repro.planner import calibrate
+    calibrate.set_measured_kernel_factor(None)   # empty cell: legacy fills
+    ds2 = _dataset()
+    session2 = rehydrate_session(ds2, str(store_path), caps=CAPS)
+    assert session2.plan_json(sql, [0, 1])["schema_version"] \
+        == PLAN_SCHEMA_VERSION
+    assert session2.counters == {"parse_calls": 0, "stats_calls": 0,
+                                 "cost_calls": 0}
+    # the un-keyed v2 factor landed in the (current backend, expand) cell
+    assert calibrate.measured_kernel_factor() == 2.5
+    # ...but must NOT clobber a fresher current-process measurement
+    calibrate.set_measured_kernel_factor(9.9)
+    from repro.planner.plan_store import rehydrate_into
+    rehydrate_into(ServingSession(_dataset(), caps=CAPS), str(store_path))
+    assert calibrate.measured_kernel_factor() == 9.9
+    calibrate.set_measured_kernel_factor(None)   # drop the injected cell
 
 
 def test_migrate_rejects_unknown_versions():
