@@ -21,6 +21,11 @@ Five cells:
   session's plan store, rehydrate a fresh session from it, replay the same
   batch — ``rehydrated_match=1`` iff every root's row set is identical to
   the cold session's, with zero parse/stats/costing calls.
+* ``exp_serving/disabled_tracer_ratio`` — the observability overhead gate:
+  warm dispatch latency WITHOUT any tracer vs. with a DISABLED tracer
+  installed on the session, as a paired ratio (``time_ratio``).  The
+  disabled path must be free (gate: ratio >= 0.95), or tracing cannot be
+  left wired into production serving.
 """
 from __future__ import annotations
 
@@ -86,6 +91,32 @@ def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
          us_warm / BATCH_ROOTS,
          f"per_root_speedup_vs_sequential="
          f"{us_seq / max(us_warm, 1e-9):.2f}")
+
+    # -- observability gate: a disabled tracer must cost nothing ----------
+    # paired ratio (no tracer) / (disabled tracer installed): the disabled
+    # path in submit/_execute is one attribute read + a None check per
+    # seam, so this must sit at ~1.0 (gated >= 0.95 in scripts/perf_gate)
+    from repro.obs import Tracer
+
+    from .bench_util import time_ratio
+
+    disabled = Tracer(enabled=False)
+
+    def _submit_no_tracer():
+        session.tracer = None
+        return session.submit(sql, roots)
+
+    def _submit_disabled_tracer():
+        session.tracer = disabled
+        return session.submit(sql, roots)
+
+    tracer_ratio = time_ratio(_submit_no_tracer, _submit_disabled_tracer,
+                              repeat=max(repeat, 7))
+    session.tracer = None
+    out["disabled_tracer_ratio"] = tracer_ratio
+    emit(f"exp_serving/disabled_tracer_ratio/d{depth}",
+         us_warm / BATCH_ROOTS,
+         f"disabled_tracer_ratio={tracer_ratio:.3f}")
 
     # -- calibration gate: refit constants must not worsen selection ------
     cal = session.calibrator

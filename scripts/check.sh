@@ -1,14 +1,21 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + the quick benchmark profile + the perf gate.
+# CI gate: tier-1 tests + the quick benchmark profile + the perf gate +
+# the observability trace smoke.
 #
 #   scripts/check.sh
 #
 # Fails if any tier-1 test fails (pytest -x aborts on the first regression),
-# if the quick benchmark run cannot complete, or if the perf gate trips:
-# the batched serving cell must report per_root_speedup_vs_sequential >= 1.0
-# and every planner cell must keep its selection regret vs_best_forced
-# <= 1.2 (see scripts/perf_gate.py).  Writes BENCH_bfs.json so the perf
-# trajectory can be compared across PRs.
+# if the quick benchmark run cannot complete, if the perf gate trips (the
+# batched serving cell must report per_root_speedup_vs_sequential >= 1.0,
+# every planner cell must keep its selection regret vs_best_forced <= 1.2,
+# and serving with a DISABLED tracer must stay within 5% of no tracer at
+# all — see scripts/perf_gate.py), or if the trace smoke produces an
+# invalid trace (a tiny traversal-serving run with --trace on, validated
+# by scripts/check_trace.py: header, span fields, id/parent forest, time
+# nesting).  Writes BENCH_bfs.json (with a _meta provenance stamp) and
+# appends one line to BENCH_history.jsonl so the perf trajectory can be
+# compared across PRs; the perf gate prints a NON-GATING drift report
+# against that history.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,8 +32,17 @@ python -c "import hypothesis" 2>/dev/null \
 echo "== tier-1 pytest =="
 python -m pytest -x -q
 
-echo "== quick benchmarks -> BENCH_bfs.json =="
-python -m benchmarks.run --quick --json BENCH_bfs.json "$@"
+echo "== quick benchmarks -> BENCH_bfs.json (+ BENCH_history.jsonl) =="
+python -m benchmarks.run --quick --json BENCH_bfs.json \
+  --history BENCH_history.jsonl \
+  --timestamp "$(date -u +%Y-%m-%dT%H:%M:%SZ)" "$@"
 
-echo "== perf gate =="
-python scripts/perf_gate.py BENCH_bfs.json
+echo "== perf gate (+ drift report vs history) =="
+python scripts/perf_gate.py BENCH_bfs.json --history BENCH_history.jsonl
+
+echo "== trace smoke =="
+TRACE_TMP="$(mktemp -t trace_smoke.XXXXXX.jsonl)"
+trap 'rm -f "$TRACE_TMP"' EXIT
+python -m repro.launch.serve --traversal --vertices 2000 --height 8 \
+  --batch 4 --requests 3 --depth 4 --trace "$TRACE_TMP" > /dev/null
+python scripts/check_trace.py "$TRACE_TMP" --min-spans 5

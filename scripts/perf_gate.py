@@ -25,16 +25,29 @@ Fails (exit 1) when the perf trajectory regresses past the ROADMAP bars:
   push-parity by construction — gating a statistical tie would fail CI
   on machine weather.  The hybrid variant likewise reports under
   ``diropt_hybrid_vs_push_only``.
+* the observability gate: any cell reporting ``disabled_tracer_ratio``
+  below 0.95 — serving with a DISABLED tracer installed must be as fast
+  as serving with no tracer at all (paired ratio,
+  ``exp_serving/disabled_tracer_ratio``); tracing is wired into the
+  production seams only because the off path is free.
 
 The lockstep reference cell deliberately reports its ratio under a
 different key (``lockstep_vs_sequential``) so the gate does not fire on the
 kept-for-comparison regression baseline.
 
-Usage: python scripts/perf_gate.py [BENCH_bfs.json]
+With ``--history BENCH_history.jsonl`` (or when the default history file
+exists) the gate additionally prints a NON-GATING drift report: the
+current artifact's ``us_per_call`` cells against the median of the last
+few history entries.  Absolute timings vary run to run and host to host,
+so drift never fails the gate — it exists so a slow creep is VISIBLE in CI
+logs before it trips a gated ratio.
+
+Usage: python scripts/perf_gate.py [BENCH_bfs.json] [--history PATH]
 """
 from __future__ import annotations
 
 import json
+import os
 import re
 import sys
 
@@ -43,17 +56,31 @@ REGRET_RE = re.compile(r"(?:^|,)vs_best_forced=([\d.]+)")
 CAL_REGRET_RE = re.compile(r"(?:^|,)calibrated_vs_best_forced=([\d.]+)")
 REHYDRATED_RE = re.compile(r"(?:^|,)rehydrated_match=(\d+)")
 DIROPT_RE = re.compile(r"(?:^|,)diropt_vs_push_only=([\d.]+)")
+TRACER_RE = re.compile(r"(?:^|,)disabled_tracer_ratio=([\d.]+)")
 
 MIN_PER_ROOT_SPEEDUP = 1.0
 MAX_PLANNER_REGRET = 1.2
 MIN_DIROPT_SPEEDUP = 1.0
+MIN_TRACER_RATIO = 0.95
 
-GATES = (SPEEDUP_RE, REGRET_RE, CAL_REGRET_RE, REHYDRATED_RE, DIROPT_RE)
+# drift-report knobs (non-gating): compare against the median of the last
+# HISTORY_WINDOW runs, flag cells that moved more than DRIFT_FLAG x
+HISTORY_WINDOW = 5
+DRIFT_FLAG = 1.5
+
+GATES = (SPEEDUP_RE, REGRET_RE, CAL_REGRET_RE, REHYDRATED_RE, DIROPT_RE,
+         TRACER_RE)
+
+
+def bench_rows(doc: dict) -> dict:
+    """The benchmark cells of an artifact: every key except the ``_meta``
+    provenance stamp (and any future ``_``-prefixed sidecar)."""
+    return {k: v for k, v in doc.items() if not k.startswith("_")}
 
 
 def check(rows: dict) -> list[str]:
     failures = []
-    for name, row in sorted(rows.items()):
+    for name, row in sorted(bench_rows(rows).items()):
         derived = row.get("derived", "")
         m = SPEEDUP_RE.search(derived)
         if m and float(m.group(1)) < MIN_PER_ROOT_SPEEDUP:
@@ -84,22 +111,81 @@ def check(rows: dict) -> list[str]:
                 f"{name}: diropt_vs_push_only={m.group(1)} < "
                 f"{MIN_DIROPT_SPEEDUP} (direction-optimizing traversal "
                 "must not lose to the best static push engine)")
+        m = TRACER_RE.search(derived)
+        if m and float(m.group(1)) < MIN_TRACER_RATIO:
+            failures.append(
+                f"{name}: disabled_tracer_ratio={m.group(1)} < "
+                f"{MIN_TRACER_RATIO} (a disabled tracer must not slow "
+                "the serving path)")
     return failures
 
 
+def _median(xs: list[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else (s[n // 2 - 1] + s[n // 2]) / 2.0
+
+
+def drift_report(rows: dict, history_path: str) -> list[str]:
+    """NON-GATING: current us_per_call vs the median of the last
+    ``HISTORY_WINDOW`` history entries, one line per cell that moved more
+    than ``DRIFT_FLAG``x either way (plus a one-line summary).  Returns the
+    report lines; never fails the gate — absolute wall times are machine
+    weather, the gated cells are all paired ratios."""
+    try:
+        with open(history_path) as f:
+            entries = [json.loads(line) for line in f if line.strip()]
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"drift: cannot read {history_path}: {e}"]
+    if not entries:
+        return [f"drift: {history_path} is empty"]
+    window = entries[-HISTORY_WINDOW:]
+    lines = [f"drift report vs last {len(window)} history run(s) "
+             f"in {history_path} (non-gating):"]
+    flagged = compared = 0
+    for name, row in sorted(bench_rows(rows).items()):
+        us = row.get("us_per_call")
+        past = [e["rows"][name] for e in window
+                if isinstance(e.get("rows"), dict) and name in e["rows"]]
+        if us is None or not past:
+            continue
+        compared += 1
+        base = _median(past)
+        ratio = us / max(base, 1e-9)
+        if ratio > DRIFT_FLAG or ratio < 1.0 / DRIFT_FLAG:
+            flagged += 1
+            lines.append(f"  DRIFT {name}: {us:.1f}us vs median "
+                         f"{base:.1f}us ({ratio:.2f}x)")
+    lines.append(f"drift: {flagged} flagged of {compared} compared "
+                 f"cell(s), window={len(window)}")
+    return lines
+
+
 def main(argv=None) -> int:
-    path = (argv or sys.argv[1:] or ["BENCH_bfs.json"])[0]
+    argv = list(sys.argv[1:] if argv is None else argv)
+    history = None
+    if "--history" in argv:
+        i = argv.index("--history")
+        history = argv[i + 1]
+        del argv[i:i + 2]
+    path = (argv or ["BENCH_bfs.json"])[0]
+    if history is None and os.path.exists("BENCH_history.jsonl"):
+        history = "BENCH_history.jsonl"
     with open(path) as f:
         rows = json.load(f)
     failures = check(rows)
+    if history is not None:
+        for line in drift_report(rows, history):
+            print(line)
     if failures:
         print(f"PERF GATE FAILED ({path}):")
         for msg in failures:
             print(f"  FAIL {msg}")
         return 1
-    gated = sum(1 for r in rows.values()
+    gated = sum(1 for r in bench_rows(rows).values()
                 if any(g.search(r.get("derived", "")) for g in GATES))
-    print(f"perf gate OK: {gated} gated cell(s) of {len(rows)} in {path}")
+    print(f"perf gate OK: {gated} gated cell(s) of "
+          f"{len(bench_rows(rows))} in {path}")
     return 0
 
 

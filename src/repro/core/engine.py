@@ -26,11 +26,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, Literal, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import trace as _trace
 
 from .bitmap import (bitmap_plan, diropt_hybrid_plan, diropt_plan,
                      hybrid_plan)
@@ -222,15 +225,30 @@ class Dataset:
             object.__setattr__(self, "stats_cache", cache)
         if direction not in cache:
             from repro.planner.stats import compute_stats
-            cache[direction] = compute_stats(self, direction)
+            with _trace.trace_span("stats", direction=direction):
+                cache[direction] = compute_stats(self, direction)
         return cache[direction]
 
 
 def run_query(q: RecursiveQuery, ds: Dataset, root: int) -> BFSResult:
-    """Execute one query through the shared fixed-point driver."""
+    """Execute one query through the shared fixed-point driver.
+
+    With a tracer installed (:func:`repro.obs.trace.set_tracer`) the
+    dispatch is wrapped in a span and per-level traversal events are
+    derived from the result — the traced path synchronizes (tracing is an
+    enabled-only cost); the untraced path stays fully async."""
     plan = build_plan(q)
-    return execute(plan, ds.context(q.direction), jnp.int32(root),
-                   ds.num_vertices)
+    t = _trace.current_tracer()
+    if t is None:
+        return execute(plan, ds.context(q.direction), jnp.int32(root),
+                       ds.num_vertices)
+    with t.span("dispatch", engine=q.engine, direction=q.direction,
+                lanes=1):
+        r = execute(plan, ds.context(q.direction), jnp.int32(root),
+                    ds.num_vertices)
+        jax.block_until_ready(r)
+    _trace.emit_level_events(t, r, engine=q.engine)
+    return r
 
 
 def run_query_batch(q: RecursiveQuery, ds: Dataset, roots) -> BFSResult:
@@ -240,8 +258,17 @@ def run_query_batch(q: RecursiveQuery, ds: Dataset, roots) -> BFSResult:
     bit-identical to ``run_query(q, ds, roots[i])``."""
     plan = build_plan(q)
     roots = jnp.asarray(roots, jnp.int32)
-    return execute_batch(plan, ds.context(q.direction), roots,
-                         ds.num_vertices)
+    t = _trace.current_tracer()
+    if t is None:
+        return execute_batch(plan, ds.context(q.direction), roots,
+                             ds.num_vertices)
+    with t.span("dispatch", engine=q.engine, direction=q.direction,
+                lanes=int(roots.shape[0])):
+        r = execute_batch(plan, ds.context(q.direction), roots,
+                          ds.num_vertices)
+        jax.block_until_ready(r)
+    _trace.emit_level_events(t, r, engine=q.engine)
+    return r
 
 
 def result_lane(r: BFSResult, lane: int) -> BFSResult:
@@ -267,6 +294,45 @@ class BucketTiming:
     caps: EngineCaps           # the caps the MEASURED dispatch ran with
     retried: bool              # True when the fallback-caps retry ran
     elapsed_us: float
+    predicted_caps: Optional[EngineCaps] = None
+    #   the caps bucketing PREDICTED for this bucket — when ``retried`` is
+    #   True these are the caps that overflowed (the measured dispatch ran
+    #   at ``caps`` == the fallback), making the silent 2x-dispatch cliff
+    #   visible to observers instead of only to the retry branch
+
+
+# process-wide visibility for the overflow-retry path: every retry is a
+# hidden 2x-dispatch perf cliff (the bucket ran once at its predicted caps,
+# overflowed, and ran again at the fallback caps), so it is counted here,
+# surfaced on the BucketTiming, traced, and warned about once per process
+# (serving sessions additionally warn once per session and count it in
+# their metrics registry)
+_overflow_state = {"retries": 0, "warned": False}
+
+
+def overflow_retry_count() -> int:
+    """Process-wide count of fallback-caps overflow retries."""
+    return _overflow_state["retries"]
+
+
+def _note_overflow_retry(index: int, predicted: EngineCaps,
+                         fallback: EngineCaps, tracer) -> None:
+    _overflow_state["retries"] += 1
+    if tracer is not None:
+        tracer.event("overflow_retry", bucket=index,
+                     predicted_caps=[predicted.frontier, predicted.result],
+                     fallback_caps=[fallback.frontier, fallback.result])
+    if not _overflow_state["warned"]:
+        _overflow_state["warned"] = True
+        warnings.warn(
+            f"bucket {index} overflowed its predicted caps "
+            f"(frontier={predicted.frontier}, result={predicted.result}) "
+            f"and was re-dispatched at the fallback caps "
+            f"(frontier={fallback.frontier}, result={fallback.result}) — "
+            "a transparent retry that doubles that bucket's dispatch "
+            "cost; consider larger caps or fewer buckets "
+            "(warned once per process; see ServingSession.metrics() for "
+            "counts)", RuntimeWarning, stacklevel=3)
 
 
 def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
@@ -302,35 +368,66 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
     buckets = tuple(buckets)
     total = sum(len(b.indices) for b in buckets)
     out: list = [None] * total
-    launched = []
-    for i, b in enumerate(buckets):
-        t0 = time.perf_counter()
-        launched.append((i, b, t0, dispatch(i, b, b.caps)))
-    prev_done = None
-    for i, b, t0, r in launched:
-        retried = False
-        if (b.caps != fallback_caps
-                and bool(np.any(np.asarray(r.overflow)))):
-            r = dispatch(i, b, fallback_caps)
-            retried = True
-        if finish is not None:
-            r = finish(i, b, r)
-        if to_host:
-            # one device->host transfer per bucket (also synchronizes)
-            r = jax.tree_util.tree_map(np.asarray, r)
-        elif observer is not None:
-            jax.block_until_ready(r)     # timing needs a real completion
-        t_done = time.perf_counter()
-        for lane, idx in enumerate(b.indices):
-            out[idx] = jax.tree_util.tree_map(
-                lambda a, lane=lane: a[lane], r)
-        if observer is not None:
-            start = t0 if prev_done is None else max(t0, prev_done)
-            observer(BucketTiming(
+    # the executor owns bucket-granular tracing: suppress the global
+    # tracer around nested dispatches so per-root instrumentation inside
+    # run_query_batch cannot serialize the async launch loop, and emit
+    # per-bucket spans/events from the one measurement point instead
+    tracer = _trace.current_tracer()
+    prev_tracer = _trace.set_tracer(None) if tracer is not None else None
+    try:
+        launched = []
+        for i, b in enumerate(buckets):
+            t0 = time.perf_counter()
+            launched.append((i, b, t0, dispatch(i, b, b.caps)))
+        prev_done = None
+        timings = []
+        for i, b, t0, r in launched:
+            retried = False
+            if (b.caps != fallback_caps
+                    and bool(np.any(np.asarray(r.overflow)))):
+                r = dispatch(i, b, fallback_caps)
+                retried = True
+                _note_overflow_retry(i, b.caps, fallback_caps, tracer)
+            if finish is not None:
+                r = finish(i, b, r)
+            if to_host:
+                # one device->host transfer per bucket (also synchronizes)
+                if tracer is not None:
+                    with tracer.span("transfer", bucket=i,
+                                     lanes=len(b.indices)):
+                        r = jax.tree_util.tree_map(np.asarray, r)
+                else:
+                    r = jax.tree_util.tree_map(np.asarray, r)
+            elif observer is not None or tracer is not None:
+                jax.block_until_ready(r)  # timing needs a real completion
+            t_done = time.perf_counter()
+            for lane, idx in enumerate(b.indices):
+                out[idx] = jax.tree_util.tree_map(
+                    lambda a, lane=lane: a[lane], r)
+            timing = BucketTiming(
                 index=i, lanes=len(b.indices), padded_lanes=len(b.roots),
                 caps=(fallback_caps if retried else b.caps),
-                retried=retried, elapsed_us=(t_done - start) * 1e6))
-        prev_done = t_done
+                retried=retried,
+                elapsed_us=(t_done - (t0 if prev_done is None
+                                      else max(t0, prev_done))) * 1e6,
+                predicted_caps=b.caps)
+            if observer is not None:
+                observer(timing)
+            timings.append((timing, r))
+            prev_done = t_done
+    finally:
+        if tracer is not None:
+            _trace.set_tracer(prev_tracer)
+    if tracer is not None:
+        # spans + level events AFTER the measurement loop, so enabled
+        # tracing never sits inside a timed interval the calibrator trusts
+        for timing, r in timings:
+            with tracer.span("dispatch", bucket=timing.index,
+                             lanes=timing.lanes,
+                             padded_lanes=timing.padded_lanes,
+                             retried=timing.retried,
+                             elapsed_us=timing.elapsed_us):
+                _trace.emit_level_events(tracer, r, bucket=timing.index)
     if any(x is None for x in out):
         raise ValueError("buckets do not cover lanes 0..%d exactly"
                          % (total - 1))
@@ -374,6 +471,14 @@ def explain(sql_or_ast, ds: Dataset, **kwargs) -> str:
     """EXPLAIN the query: the ranked candidate engines with per-operator
     estimated rows/bytes (see :mod:`repro.planner.explain`)."""
     from repro.planner import explain as _impl
+    return _impl(sql_or_ast, ds, **kwargs)
+
+
+def explain_analyze(sql_or_ast, ds: Dataset, **kwargs) -> dict:
+    """EXPLAIN ANALYZE: plan, EXECUTE, and reconcile predicted vs. actual
+    per-operator rows/bytes and per-level push/pull directions (see
+    :func:`repro.planner.explain.explain_analyze`)."""
+    from repro.planner import explain_analyze as _impl
     return _impl(sql_or_ast, ds, **kwargs)
 
 

@@ -17,6 +17,13 @@ With ``--plan-store PATH`` the session persists its plan + calibration
 caches: the first run writes PATH, every later run rehydrates from it and
 answers its first request with zero parse/stats/costing work (the
 "(rehydrated)" line reports the session counters to prove it).
+
+Observability flags (traversal mode): ``--metrics`` prints the session's
+Prometheus text exposition on exit (latency histograms, cache hit
+counters, overflow retries, calibrator refits); ``--trace PATH`` traces
+every request (spans + per-level traversal events) to JSON lines at PATH;
+``--trace-chrome PATH`` writes the same trace as a Chrome/Perfetto-loadable
+JSON file.
 """
 from __future__ import annotations
 
@@ -71,9 +78,16 @@ def serve_traversals(args) -> dict:
                     payload_cols=0, seed=0)
     ds = Dataset.prepare(make_edge_table(spec), spec.num_vertices)
     sql = paper_listing(1, root=0, depth=args.depth)
+    tracer = None
+    if args.trace or args.trace_chrome:
+        from repro.obs import Tracer
+        tracer = Tracer(meta={"mode": "traversal-serve",
+                              "vertices": args.vertices,
+                              "batch": args.batch,
+                              "requests": args.requests})
     rehydrated = (args.plan_store is not None
                   and os.path.exists(args.plan_store))
-    session = ServingSession(ds, plan_store=args.plan_store)
+    session = ServingSession(ds, plan_store=args.plan_store, tracer=tracer)
     if rehydrated:
         print(f"(rehydrated) plan store {args.plan_store}: "
               f"{len(session._plans)} plan(s), "
@@ -107,9 +121,25 @@ def serve_traversals(args) -> dict:
           f"{stats['stats_calls']} stats / {stats['cost_calls']} costing "
           f"pass(es); calibration: {stats['calibration_observations']} "
           f"observation(s), {stats['calibration_refits']} refit(s)")
+    print(f"latency: p50={stats['latency_us_p50'] / 1e3:.2f}ms "
+          f"p95={stats['latency_us_p95'] / 1e3:.2f}ms "
+          f"p99={stats['latency_us_p99'] / 1e3:.2f}ms  "
+          f"hit rate {stats['plan_hit_rate']:.2f}, "
+          f"{stats['overflow_retries']} overflow retr(ies)")
     if args.plan_store is not None:
         session.save_plan_store()
         print(f"plan store saved to {args.plan_store}")
+    if tracer is not None:
+        if args.trace:
+            tracer.write_jsonl(args.trace)
+            print(f"trace written to {args.trace} "
+                  f"({len(tracer.records)} record(s))")
+        if args.trace_chrome:
+            tracer.write_chrome_trace(args.trace_chrome)
+            print(f"chrome trace written to {args.trace_chrome}")
+    if args.metrics:
+        print("-- metrics --")
+        print(session.metrics_text(), end="")
     return stats
 
 
@@ -131,6 +161,15 @@ def main(argv=None):
     ap.add_argument("--plan-store", default=None, metavar="PATH",
                     help="persist plans + calibration: rehydrate from PATH "
                          "when it exists, save to it on exit")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the serving metrics registry in Prometheus "
+                         "text format on exit")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="trace every request (spans + per-level events) "
+                         "to JSON lines at PATH")
+    ap.add_argument("--trace-chrome", default=None, metavar="PATH",
+                    help="write the trace as a Chrome/Perfetto-loadable "
+                         "JSON file at PATH")
     args = ap.parse_args(argv)
 
     if args.traversal:

@@ -1,0 +1,29 @@
+"""Observability: structured tracing and serving metrics.
+
+This package is a LEAF dependency — it imports nothing from
+:mod:`repro.core` or :mod:`repro.planner`, so both can thread tracer and
+metrics hooks through their hot paths without an import cycle.  The three
+surfaces:
+
+* :mod:`repro.obs.trace` — a lightweight span/event :class:`Tracer` with
+  JSON-lines and Chrome-trace (Perfetto-loadable) exporters, plus the
+  module-global ``current_tracer()`` seam the engine and serving layers
+  consult (one attribute read + ``None`` check when tracing is off);
+* :mod:`repro.obs.metrics` — counters, gauges and bounded-memory latency
+  histograms (p50/p95/p99) behind a :class:`MetricsRegistry` with a
+  Prometheus-style text rendering;
+* ``EXPLAIN ANALYZE`` lives in :mod:`repro.planner.explain`
+  (``explain_analyze``): it needs the planner's cost model, which sits
+  ABOVE this package in the import graph.
+
+See docs/observability.md for the trace schema and the metrics catalog.
+"""
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import (TRACE_SCHEMA_VERSION, Tracer, current_tracer,
+                    read_jsonl, set_tracer, trace_event, trace_span)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "TRACE_SCHEMA_VERSION", "Tracer", "current_tracer", "read_jsonl",
+    "set_tracer", "trace_event", "trace_span",
+]

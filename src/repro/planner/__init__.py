@@ -12,8 +12,10 @@ The layers (one module each):
 * :mod:`repro.planner.optimize` — enumerates every legal engine (plus the
   Pallas-kernel expansion), ranks, and executes the winner;
 * :mod:`repro.planner.explain`  — EXPLAIN with per-operator estimated rows
-  and bytes for every candidate, plus the machine-readable plan
-  (:func:`to_json`, ``schema_version`` 2);
+  and bytes for every candidate, the machine-readable plan
+  (:func:`to_json`, ``schema_version`` 4), and EXPLAIN ANALYZE
+  (:func:`explain_analyze`: execute, then reconcile predicted vs. actual
+  per-operator rows/bytes and per-level push/pull directions);
 * :mod:`repro.planner.serving`  — the plan-cached, reach-bucketed serving
   session (one graph, many root batches);
 * :mod:`repro.planner.calibrate` — the feedback loop: measured per-bucket
@@ -33,8 +35,9 @@ from .calibrate import (Calibrator, Observation,               # noqa: F401
                         stats_digest)
 from .cost import (CostConstants, DEFAULT_CONSTANTS,           # noqa: F401
                    OpEstimate, PlanCost, estimate_us, pipeline_cost)
-from .explain import (explain, explain_json, render_report,    # noqa: F401
-                      to_json)
+from .explain import (analyze_result, explain,                 # noqa: F401
+                      explain_analyze, explain_json,
+                      render_analyze, render_report, to_json)
 from .optimize import (KERNEL_LABEL, PhysicalChoice,           # noqa: F401
                        PlannerReport, RootBucket, bucket_roots,
                        choose, default_caps, kernel_expand_fn, plan,

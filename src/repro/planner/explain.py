@@ -25,21 +25,40 @@ candidate's cost carries ``level_dirs`` (the predicted per-level
 ``push``/``pull`` choice of a :class:`~repro.core.operators.
 DirectionSwitch` pipeline; empty for push-only engines), and the cost
 constants carry the refittable ``pull_alpha``/``pull_beta`` thresholds.
-v1 and v2 documents still load through
+
+Schema version 4 adds the EXPLAIN ANALYZE section: every plan document
+carries a top-level ``analyze`` key (``null`` until an execution fills
+it) holding per-operator predicted vs. ACTUAL rows/bytes and per-level
+predicted vs. TAKEN push/pull directions.  :func:`explain_analyze`
+executes the chosen (or a forced) candidate and reconciles the cost
+model against the executed :class:`~repro.core.operators.BFSResult`:
+the actual per-level edge counts are histogrammed from ``row_depths``
+(so the actual rows ARE the result's rows, not a second estimate) and
+substituted into the same :func:`~repro.planner.cost.pipeline_cost`
+walk the optimizer priced with — predicted and actual columns are the
+one cost model evaluated at predicted vs. measured cardinalities.
+v1..v3 documents still load through
 :func:`repro.planner.plan_store.migrate_plan_doc`.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.core.engine import Dataset
-from repro.core.operators import EngineCaps
+from repro.core.operators import BFSResult, EngineCaps
 
+from .cost import column_bytes, pipeline_cost
 from .optimize import PhysicalChoice, PlannerReport, RootBucket, plan
+from .stats import _bfs_profile
 
-__all__ = ["explain", "explain_json", "render_report", "to_json"]
+__all__ = ["analyze_result", "explain", "explain_analyze", "explain_json",
+           "render_analyze", "render_report", "to_json"]
 
-PLAN_SCHEMA_VERSION = 3
+PLAN_SCHEMA_VERSION = 4
 
 
 def _fmt_bytes(b: float) -> str:
@@ -136,11 +155,13 @@ def _choice_json(c: PhysicalChoice, chosen: bool) -> dict:
 
 
 def to_json(report: PlannerReport,
-            buckets: Optional[Sequence[RootBucket]] = None) -> dict:
+            buckets: Optional[Sequence[RootBucket]] = None,
+            analyze: Optional[dict] = None) -> dict:
     """The machine-readable plan: everything ``render_report`` prints, as
     one plain ``json.dumps``-able dict (the serving layer's plan-cache
     payload).  ``buckets`` optionally embeds a reach-bucketed batch layout
-    alongside the ranked candidates."""
+    alongside the ranked candidates; ``analyze`` optionally embeds an
+    EXPLAIN ANALYZE section (v4; ``null`` until an execution fills it)."""
     lg = report.logical
     st = report.stats
     doc = {
@@ -180,6 +201,9 @@ def to_json(report: PlannerReport,
         "candidates": [_choice_json(c, chosen=(i == 0))
                        for i, c in enumerate(report.ranked)],
         "skipped": [{"engine": e, "reason": r} for e, r in report.skipped],
+        # v4: the EXPLAIN ANALYZE section — null until an execution
+        # reconciles predicted vs. actual (see explain_analyze)
+        "analyze": analyze,
     }
     if buckets is not None:
         doc["buckets"] = [{
@@ -212,3 +236,196 @@ def explain(query, ds: Dataset, *, root: Optional[int] = None,
                   include_kernel=include_kernel,
                   default_max_depth=default_max_depth)
     return render_report(report)
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN ANALYZE (schema v4): predicted vs. actual, from an executed result
+# ---------------------------------------------------------------------------
+
+_DIR_CODES = {0: "push", 1: "pull"}
+
+
+def _taken_dirs(result: BFSResult) -> list:
+    """Per-level TAKEN push/pull directions decoded from the executed
+    ``level_dirs`` (empty for push-only engines)."""
+    dirs = getattr(result, "level_dirs", None)
+    if dirs is None:
+        return []
+    dv = np.asarray(dirs).reshape(-1)
+    return [_DIR_CODES[int(c)] for c in dv if int(c) in _DIR_CODES]
+
+
+def _actual_level_edges(result: BFSResult) -> list[int]:
+    """Actual edges emitted per BFS level, histogrammed STRAIGHT from the
+    result's ``row_depths`` — by construction the per-level actuals sum to
+    ``result.count``, so "actual rows" in the ANALYZE report means exactly
+    the rows this execution returned."""
+    if result.row_depths is None:
+        raise ValueError("result carries no row_depths; cannot ANALYZE")
+    rd = np.asarray(result.row_depths)[: int(result.count)]
+    rd = rd[rd >= 0]
+    if rd.size == 0:
+        return []
+    return [int(x) for x in np.bincount(rd.astype(np.int64))]
+
+
+def _actual_stats(choice: PhysicalChoice, report: PlannerReport,
+                  ds: Dataset, result: BFSResult, root: int):
+    """The MEASURED counterpart of the planner's sampled ``GraphStats``:
+    per-level edge rows come from the executed result (``row_depths``
+    histogram); per-level new-vertex counts come from one host-side BFS
+    from the actual root (the in-loop cardinality a result cannot carry).
+    Substituting these into the same ``pipeline_cost`` walk re-prices every
+    operator at the cardinalities the execution really saw."""
+    edges = _actual_level_edges(result)
+    ctx = ds.context(choice.query.direction)
+    src = np.asarray(ctx.join_src).astype(np.int64)
+    dst = np.asarray(ctx.join_dst).astype(np.int64)
+    if ctx.bidir:
+        src, dst = (np.concatenate([src, dst]), np.concatenate([dst, src]))
+    _, verts = _bfs_profile(src, dst, int(root), int(ds.num_vertices),
+                            max(len(edges), 1))
+    verts = verts[: len(edges)] + [0] * max(len(edges) - len(verts), 0)
+    return dataclasses.replace(
+        report.stats,
+        sample_roots=(int(root),),
+        level_edges=tuple(float(x) for x in edges),
+        level_vertices=tuple(float(x) for x in verts),
+        max_level_edges=int(max(edges, default=0)),
+        reach_edges=float(sum(edges)),
+        max_levels=len(edges),
+        root_profiles=((int(root), tuple(int(x) for x in edges)),),
+        level_walk_edges=tuple(float(x) for x in edges))
+
+
+def analyze_result(choice: PhysicalChoice, report: PlannerReport,
+                   ds: Dataset, result: BFSResult, *, root: int,
+                   elapsed_us: Optional[float] = None) -> dict:
+    """Reconcile one executed :class:`BFSResult` against the plan that
+    produced it: the ``analyze`` section of a schema-v4 plan document.
+
+    Predicted numbers are the candidate's :class:`~repro.planner.cost.
+    PlanCost` (what the optimizer ranked); actual numbers re-run the SAME
+    cost walk over statistics measured from this execution, so per-operator
+    "actual rows" are derived from the result's own ``row_depths``/
+    ``count`` — when the sampled profile was exact (e.g. the root was a
+    sample root of a single-profile graph), predicted == actual to the
+    row."""
+    actual_stats = _actual_stats(choice, report, ds, result, root)
+    col_bytes = column_bytes(ds.table)
+    row_bytes = ds.rows.width * 4
+    actual = pipeline_cost(choice.pipeline, actual_stats,
+                           row_bytes=row_bytes, col_bytes=col_bytes,
+                           constants=report.constants)
+    pred = choice.cost
+    edges_act = list(actual_stats.level_edges)
+    taken = _taken_dirs(result)
+    n_levels = max(pred.levels, actual.levels, len(taken))
+    levels = []
+    for lvl in range(n_levels):
+        levels.append({
+            "level": lvl,
+            "dir_predicted": (pred.level_dirs[lvl]
+                              if lvl < len(pred.level_dirs) else None),
+            "dir_taken": taken[lvl] if lvl < len(taken) else None,
+            "edges_predicted": report.stats.edges_at(lvl),
+            "edges_actual": (int(edges_act[lvl])
+                             if lvl < len(edges_act) else 0),
+        })
+    return {
+        "engine": choice.label,
+        "root": int(root),
+        "elapsed_us": (None if elapsed_us is None else float(elapsed_us)),
+        "result_count": int(result.count),
+        "overflow": bool(np.any(np.asarray(result.overflow))),
+        "predicted": {"rows": pred.result_rows, "bytes": pred.total_bytes,
+                      "levels": pred.levels, "est_us": pred.est_us,
+                      "level_dirs": list(pred.level_dirs)},
+        "actual": {"rows": actual.result_rows, "bytes": actual.total_bytes,
+                   "levels": actual.levels,
+                   "est_us": actual.est_us,     # the model at actual cards
+                   "level_dirs": taken},
+        "ops": [{"label": p.label,
+                 "rows_predicted": p.rows, "bytes_predicted": p.bytes,
+                 "rows_actual": a.rows, "bytes_actual": a.bytes}
+                for p, a in zip(pred.per_op, actual.per_op)],
+        "levels": levels,
+    }
+
+
+def _find_candidate(report: PlannerReport, engine: str) -> PhysicalChoice:
+    for c in report.ranked:
+        if c.label == engine or c.engine == engine:
+            return c
+    for eng, reason in report.skipped:
+        if eng == engine:
+            raise ValueError(f"engine {engine!r} was skipped for this "
+                             f"query: {reason}")
+    known = sorted({c.label for c in report.ranked})
+    raise ValueError(f"unknown engine {engine!r}; ranked: {known}")
+
+
+def explain_analyze(query, ds: Dataset, *, root: Optional[int] = None,
+                    engine: Optional[str] = None,
+                    caps: Optional[EngineCaps] = None,
+                    include_kernel: bool = False,
+                    default_max_depth: Optional[int] = None,
+                    check_overflow: bool = True) -> dict:
+    """EXPLAIN ANALYZE: plan ``query``, EXECUTE the chosen candidate (or
+    the forced ``engine``) on the query's root, and return the schema-v4
+    plan document with its ``analyze`` section filled — per-operator
+    predicted vs. actual rows/bytes, predicted vs. actual levels, and the
+    per-level predicted vs. taken push/pull directions of a
+    direction-optimizing pipeline.  ``render_analyze`` formats it."""
+    report = plan(query, ds, root=root, caps=caps,
+                  include_kernel=include_kernel,
+                  default_max_depth=default_max_depth)
+    choice = report.best if engine is None else _find_candidate(report,
+                                                                engine)
+    run_root = root if root is not None else report.logical.root
+    if run_root is None:
+        raise ValueError("explain_analyze executes the plan: the query "
+                         "needs a literal root (or pass root=...)")
+    t0 = time.perf_counter()
+    result = choice.run(ds, int(run_root), check_overflow=check_overflow)
+    np.asarray(result.count)     # synchronize: the timing needs completion
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+    analysis = analyze_result(choice, report, ds, result,
+                              root=int(run_root), elapsed_us=elapsed_us)
+    return to_json(report, analyze=analysis)
+
+
+def render_analyze(doc: dict) -> str:
+    """Human-readable EXPLAIN ANALYZE from a schema-v4 plan document with
+    a filled ``analyze`` section."""
+    a = doc.get("analyze")
+    if a is None:
+        raise ValueError("plan document has no analyze section "
+                         "(run explain_analyze first)")
+    p, ac = a["predicted"], a["actual"]
+    lines = [
+        f"EXPLAIN ANALYZE  engine={a['engine']}  root={a['root']}",
+        (f"total: predicted {_fmt_rows(p['rows'])} rows / "
+         f"{_fmt_bytes(p['bytes'])} / {p['levels']} levels "
+         f"(est {p['est_us']:.0f}us)  ->  actual "
+         f"{_fmt_rows(ac['rows'])} rows / {_fmt_bytes(ac['bytes'])} / "
+         f"{ac['levels']} levels"
+         + (f" (measured {a['elapsed_us']:.0f}us)"
+            if a.get("elapsed_us") is not None else "")),
+    ]
+    for op in a["ops"]:
+        lines.append(
+            f"  {op['label']:<58s} rows {_fmt_rows(op['rows_predicted']):>7s}"
+            f" -> {_fmt_rows(op['rows_actual']):>7s}   bytes "
+            f"{_fmt_bytes(op['bytes_predicted']):>9s} -> "
+            f"{_fmt_bytes(op['bytes_actual']):>9s}")
+    if any(lv["dir_predicted"] or lv["dir_taken"] for lv in a["levels"]):
+        lines.append("  per-level direction (predicted -> taken):")
+        for lv in a["levels"]:
+            lines.append(
+                f"    level {lv['level']:<3d} "
+                f"{lv['dir_predicted'] or '-':<5s} -> "
+                f"{lv['dir_taken'] or '-':<5s}  edges "
+                f"{_fmt_rows(lv['edges_predicted']):>7s} -> "
+                f"{lv['edges_actual']}")
+    return "\n".join(lines)

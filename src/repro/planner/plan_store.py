@@ -155,19 +155,21 @@ def stats_from_json(doc: dict) -> GraphStats:
 # ---------------------------------------------------------------------------
 
 def migrate_plan_doc(doc: dict) -> dict:
-    """Upgrade one machine-readable plan document to ``schema_version`` 3
-    (a copy; the input is not mutated).  v3 documents pass through.
+    """Upgrade one machine-readable plan document to ``schema_version`` 4
+    (a copy; the input is not mutated).  v4 documents pass through.
 
     v1 -> v2: fill the rehydration-only stats fields and fold the v1
     writer's statically-factored kernel bytes into ``plain_bytes``.
     v2 -> v3: candidates gain ``level_dirs: []`` (a v2 writer knew no
     direction-optimizing engines, so every stored plan is push-only) and
     the cost constants gain the default ``pull_alpha``/``pull_beta``
-    thresholds (:meth:`CostConstants.from_json` defaults them)."""
+    thresholds (:meth:`CostConstants.from_json` defaults them).
+    v3 -> v4: the document gains the top-level ``analyze`` section
+    (``null`` — an older writer never reconciled predicted vs. actual)."""
     v = doc.get("schema_version")
     if v == PLAN_SCHEMA_VERSION:
         return doc
-    if v not in (1, 2):
+    if v not in (1, 2, 3):
         raise ValueError(f"unsupported plan schema_version {v!r} "
                          f"(this reader handles 1..{PLAN_SCHEMA_VERSION})")
     out = copy.deepcopy(doc)
@@ -189,6 +191,7 @@ def migrate_plan_doc(doc: dict) -> dict:
         cost.setdefault("plain_bytes", cost.get("total_bytes", 0.0))
         cost.setdefault("kernel_bytes", 0.0)
         cost.setdefault("level_dirs", [])        # v<=2: push-only plans
+    out.setdefault("analyze", None)              # v<=3: never analyzed
     return out
 
 
@@ -330,7 +333,7 @@ def load_store(path: str) -> dict:
         raise ValueError(f"{path} is not a plan store "
                          f"(kind={doc.get('kind')!r})")
     v = doc.get("schema_version")
-    if v not in (1, 2, PLAN_SCHEMA_VERSION):
+    if v not in (1, 2, 3, PLAN_SCHEMA_VERSION):
         raise ValueError(f"unsupported plan-store schema_version {v!r}")
     doc = dict(doc)
     doc["schema_version"] = PLAN_SCHEMA_VERSION

@@ -48,16 +48,19 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.engine import (Dataset, dispatch_buckets, run_query_batch)
 from repro.core.operators import BFSResult, EngineCaps, execute_batch
+from repro.obs import trace as _trace
+from repro.obs.metrics import MetricsRegistry
 
 from .ast import LogicalQuery, normalize, parse
 from .calibrate import Calibrator, plan_signature, stats_digest
-from .explain import to_json
+from .explain import analyze_result, to_json
 from .optimize import (PhysicalChoice, PlannerReport, RootBucket,
                        bucket_roots, plan)
 from .stats import compute_stats
@@ -120,7 +123,8 @@ class ServingSession:
                  include_kernel: bool = False,
                  calibrator: Optional[Calibrator] = None,
                  calibrate_every: int = 32,
-                 plan_store: Optional[str] = None):
+                 plan_store: Optional[str] = None,
+                 tracer: Optional[_trace.Tracer] = None):
         self.ds = ds
         self.max_buckets = max_buckets
         self.caps = caps
@@ -129,6 +133,7 @@ class ServingSession:
             else Calibrator()
         self.calibrate_every = int(calibrate_every)
         self.plan_store_path = plan_store
+        self.tracer = tracer     # installed process-wide for each submit()
         self._logical: Dict[str, LogicalQuery] = {}
         self._choice: Dict[ShapeKey, PlannerReport] = {}
         self._bucket_plans: Dict[Tuple, PhysicalChoice] = {}
@@ -143,6 +148,25 @@ class ServingSession:
         self.counters = {"parse_calls": 0, "stats_calls": 0,
                          "cost_calls": 0}
         self._last_refit_count = 0
+        self._metrics = MetricsRegistry()
+        self._m_requests = self._metrics.counter(
+            "repro_requests_total", "serving requests submitted")
+        self._m_roots = self._metrics.counter(
+            "repro_roots_served_total", "roots answered across requests")
+        self._m_latency = self._metrics.histogram(
+            "repro_request_latency_us",
+            "end-to-end submit() latency (microseconds)")
+        self._m_bucket = self._metrics.histogram(
+            "repro_bucket_dispatch_us",
+            "per-bucket dispatch latency (microseconds)")
+        self._m_hits = self._metrics.counter(
+            "repro_plan_cache_hits_total", "plan-cache hits")
+        self._m_misses = self._metrics.counter(
+            "repro_plan_cache_misses_total", "plan-cache misses")
+        self._m_retries = self._metrics.counter(
+            "repro_overflow_retries_total",
+            "bucket dispatches re-run at fallback caps after overflow")
+        self._warned_overflow = False
         if plan_store is not None and os.path.exists(plan_store):
             from .plan_store import rehydrate_into
             rehydrate_into(self, plan_store)
@@ -251,20 +275,40 @@ class ServingSession:
         return entry
 
     # -- the serving entry point ------------------------------------------
-    def _observer(self, entry: PlanEntry):
-        """The calibration tap: one observation per measured warm bucket,
-        pairing the executor's timing with the bucket plan's cost-model
-        inputs.  Retried buckets are skipped — the measured dispatch ran
-        at caps the bucket plan was not priced for.  The plan's byte
-        estimates price ONE lane; the measured dispatch vmaps over the
-        bucket's padded lanes, so the predictors are scaled by the lane
-        count (and the lane count joins the signature — a 1-lane and an
-        8-lane dispatch are different jit programs doing different work)."""
+    def _observer(self, entry: PlanEntry, calibrate: bool):
+        """The executor's per-bucket timing tap.  ALWAYS feeds the metrics
+        registry (dispatch-latency histogram, overflow-retry counter, the
+        once-per-session retry warning); feeds the CALIBRATOR only when
+        ``calibrate`` (warm dispatches) and the bucket was not retried —
+        a retried dispatch ran at caps the bucket plan was not priced for,
+        and a cold dispatch's timing includes jit compilation.  The plan's
+        byte estimates price ONE lane; the measured dispatch vmaps over
+        the bucket's padded lanes, so the predictors are scaled by the
+        lane count (and the lane count joins the signature — a 1-lane and
+        an 8-lane dispatch are different jit programs doing different
+        work)."""
         digest = stats_digest(entry.report.stats)
         shape = shape_key(entry.report.logical)
 
         def _observe(t):
+            self._m_bucket.observe(t.elapsed_us)
             if t.retried:
+                self._m_retries.inc()
+                if not self._warned_overflow:
+                    self._warned_overflow = True
+                    pc = t.predicted_caps
+                    warnings.warn(
+                        f"serving bucket {t.index} overflowed its "
+                        f"predicted caps"
+                        + (f" (frontier={pc.frontier}, result={pc.result})"
+                           if pc is not None else "")
+                        + " and was re-dispatched at the global caps — a "
+                        "transparent retry that doubles that bucket's "
+                        "dispatch cost (warned once per session; "
+                        "repro_overflow_retries_total counts every one)",
+                        RuntimeWarning, stacklevel=2)
+                return
+            if not calibrate:
                 return
             c = entry.bucket_choices[t.index]
             lanes = max(t.padded_lanes, 1)
@@ -308,8 +352,8 @@ class ServingSession:
 
         return dispatch_buckets(
             entry.buckets, _dispatch, fallback_caps=global_caps,
-            finish=_finish, observer=self._observer(entry) if observe
-            else None, to_host=True)
+            finish=_finish, observer=self._observer(entry, observe),
+            to_host=True)
 
     def submit(self, sql: str, roots: Sequence[int],
                *, check_overflow: bool = True) -> list[BFSResult]:
@@ -320,14 +364,46 @@ class ServingSession:
         Warm requests (plan-cache hits: the dispatches are compiled) are
         timed per bucket and fed to the calibrator; every
         ``calibrate_every`` observations the cost constants are refit, and
-        subsequent planning passes price with the refit values."""
+        subsequent planning passes price with the refit values.  With a
+        session ``tracer`` (or a process-global one) the request is traced:
+        ``request`` > ``parse``/``plan``/``compile`` spans here,
+        ``stats``/``dispatch``/``transfer`` spans and per-level events
+        downstream."""
+        prev_tracer = (_trace.set_tracer(self.tracer)
+                       if self.tracer is not None else None)
+        try:
+            return self._submit_traced(sql, roots, check_overflow)
+        finally:
+            if self.tracer is not None:
+                _trace.set_tracer(prev_tracer)
+
+    def _submit_traced(self, sql: str, roots: Sequence[int],
+                       check_overflow: bool) -> list[BFSResult]:
         self.requests += 1
-        logical = self._logical_for(sql)
-        entry = self._entry_for(logical, roots)
-        warm = entry.served > 0      # dispatches compiled IN THIS process
-        t0 = time.perf_counter()
-        out = self._execute(entry, check_overflow, observe=warm)
-        self.last_latency_us = (time.perf_counter() - t0) * 1e6
+        self._m_requests.inc()
+        hits0, misses0 = self.plan_hits, self.plan_misses
+        with _trace.trace_span("request", requests=self.requests) as rattrs:
+            with _trace.trace_span("parse"):
+                logical = self._logical_for(sql)
+            with _trace.trace_span("plan"):
+                entry = self._entry_for(logical, roots)
+            warm = entry.served > 0  # dispatches compiled IN THIS process
+            rattrs["warm"] = warm
+            t0 = time.perf_counter()
+            if warm:
+                out = self._execute(entry, check_overflow, observe=True)
+            else:
+                # first serve of this entry in this process: the span makes
+                # jit compilation visible (it dominates cold latency)
+                with _trace.trace_span("compile", engine=entry.choice.label):
+                    out = self._execute(entry, check_overflow,
+                                        observe=False)
+            self.last_latency_us = (time.perf_counter() - t0) * 1e6
+            rattrs["latency_us"] = self.last_latency_us
+        self._m_latency.observe(self.last_latency_us)
+        self._m_roots.inc(len(out))
+        self._m_hits.inc(self.plan_hits - hits0)
+        self._m_misses.inc(self.plan_misses - misses0)
         entry.last_latency_us = self.last_latency_us
         entry.served += 1
         if (self.calibrate_every > 0
@@ -372,16 +448,83 @@ class ServingSession:
 
     @property
     def stats(self) -> dict:
+        """One-shot session counters — every historical key plus the
+        histogram-backed latency quantiles and cache hit-rate ratios
+        (``last_latency_us`` stays, as an alias for the newest request's
+        latency; ``latency_us_p50/p95/p99`` summarize the whole session)."""
+        lat = self._m_latency.snapshot()
+        lookups = self.plan_hits + self.plan_misses
         return {
             "requests": self.requests,
             "plan_hits": self.plan_hits,
             "plan_misses": self.plan_misses,
+            "plan_hit_rate": (self.plan_hits / lookups) if lookups else 0.0,
             "cached_shapes": len(self._choice),
             "cached_plans": len(self._plans),
             "last_latency_us": self.last_latency_us,
+            "latency_us_p50": lat["p50"],
+            "latency_us_p95": lat["p95"],
+            "latency_us_p99": lat["p99"],
+            "overflow_retries": int(self._m_retries.value),
             "parse_calls": self.counters["parse_calls"],
             "stats_calls": self.counters["stats_calls"],
             "cost_calls": self.counters["cost_calls"],
             "calibration_observations": self.calibrator.count,
             "calibration_refits": self.calibrator.refits,
+            "calibration_refits_rejected": self.calibrator.rejected_refits,
         }
+
+    # -- observability ------------------------------------------------------
+    def metrics(self) -> dict:
+        """Snapshot of the serving metrics registry: counters, gauges and
+        latency-histogram summaries (p50/p95/p99), keyed by metric name.
+        Calibrator refit outcomes are mirrored in as gauges so one snapshot
+        covers the whole feedback loop."""
+        self._sync_gauges()
+        return self._metrics.to_dict()
+
+    def metrics_text(self) -> str:
+        """The registry rendered in Prometheus text exposition format
+        (``# HELP``/``# TYPE`` + samples; histograms as cumulative
+        ``_bucket{le=...}`` series) — scrape-ready for ``launch/serve.py
+        --metrics``."""
+        self._sync_gauges()
+        return self._metrics.render_text()
+
+    def _sync_gauges(self) -> None:
+        g = self._metrics.gauge
+        g("repro_plan_cache_entries",
+          "Distinct cached bucket plans").set(len(self._plans))
+        g("repro_calibration_observations_total",
+          "Calibrator observations accepted").set(self.calibrator.count)
+        g("repro_calibration_refits_total",
+          "Calibrator refits accepted").set(self.calibrator.refits)
+        g("repro_calibration_refits_rejected_total",
+          "Calibrator refits rejected by the holdout check").set(
+              self.calibrator.rejected_refits)
+
+    def explain_analyze(self, sql: str, roots: Sequence[int]) -> dict:
+        """EXPLAIN ANALYZE through the serving path: submit the batch, then
+        reconcile each root's ACTUAL rows / levels / push-pull directions
+        against ITS bucket's plan (each bucket ran its own engine at its
+        own caps).  Returns the schema-4 plan document with ``analyze`` set
+        to the per-root reconciliations, grouped by bucket."""
+        from .explain import analyze_result
+        results = self.submit(sql, roots)
+        entry = self._entry_for(self._logical_for(sql), roots)
+        by_bucket = []
+        for i, b in enumerate(entry.buckets):
+            c = entry.bucket_choices[i]
+            real = b.roots[:len(b.indices)]
+            per_root = [
+                analyze_result(c, entry.report, self.ds, results[idx],
+                               root=int(r))
+                for r, idx in zip(real, b.indices)]
+            by_bucket.append({"bucket": i, "engine": c.label,
+                              "caps": [c.query.caps.frontier,
+                                       c.query.caps.result],
+                              "roots": [int(r) for r in real],
+                              "analyze": per_root})
+        doc = dict(entry.plan_json)
+        doc["analyze"] = {"mode": "serving", "buckets": by_bucket}
+        return doc

@@ -235,6 +235,53 @@ def test_v2_plan_doc_and_store_load_under_v3_reader(tmp_path):
     calibrate.set_measured_kernel_factor(None)   # drop the injected cell
 
 
+def test_v3_plan_doc_and_store_load_under_v4_reader(tmp_path):
+    """The PR-7 migration contract: a schema-version-3 document (the PR-5
+    writer — everything but the ``analyze`` slot) migrates to v4 with
+    ``analyze`` conservatively null, and a v3-shaped store loads."""
+    from repro.planner.explain import PLAN_SCHEMA_VERSION
+
+    ds = _dataset()
+    sql = paper_listing(1, root=0, depth=3)
+    session = ServingSession(ds, caps=CAPS)
+    session.submit(sql, [0, 1])
+    v4 = session.plan_json(sql, [0, 1])
+    v3 = json.loads(json.dumps(v4))
+    v3["schema_version"] = 3
+    del v3["analyze"]
+
+    migrated = migrate_plan_doc(v3)
+    assert migrated["schema_version"] == PLAN_SCHEMA_VERSION == 4
+    assert migrated["analyze"] is None
+    # everything else survives untouched (the v4 writer added one slot)
+    assert {k: v for k, v in migrated.items()
+            if k not in ("schema_version", "analyze")} \
+        == {k: v for k, v in v4.items()
+            if k not in ("schema_version", "analyze")}
+    report = report_from_json(v3)
+    assert [c.label for c in report.ranked] \
+        == [c["label"] for c in v4["candidates"]]
+
+    store_path = tmp_path / "store.json"
+    save_session(session, str(store_path))
+    doc = json.loads(store_path.read_text())
+    doc["schema_version"] = 3
+    for s in doc["shapes"]:
+        s["schema_version"] = 3
+        s.pop("analyze", None)
+    for e in doc["entries"]:
+        e["plan_json"]["schema_version"] = 3
+        e["plan_json"].pop("analyze", None)
+    store_path.write_text(json.dumps(doc))
+    loaded = load_store(str(store_path))
+    assert loaded["schema_version"] == PLAN_SCHEMA_VERSION
+    session2 = rehydrate_session(_dataset(), str(store_path), caps=CAPS)
+    assert session2.plan_json(sql, [0, 1])["schema_version"] \
+        == PLAN_SCHEMA_VERSION
+    assert session2.counters == {"parse_calls": 0, "stats_calls": 0,
+                                 "cost_calls": 0}
+
+
 def test_migrate_rejects_unknown_versions():
     with pytest.raises(ValueError, match="schema_version"):
         migrate_plan_doc({"schema_version": 99})
