@@ -11,7 +11,8 @@ Five cells:
   number a serving SLO is written against.
 * ``exp_serving/bucketed_vs_sequential`` — the reach-bucketed batch against
   a Python loop of single-root queries through the same chosen plan (the
-  exp1 regression cell, measured at the serving layer).
+  exp1 regression cell, measured at the serving layer; the gated ratio is
+  PAIRED via ``time_ratio`` so shared-host drift cancels).
 * ``exp_serving/calibrated_regret`` — the calibration gate: the warm
   traffic above fed the session's calibrator; REFIT the cost constants and
   re-rank — the calibrated pick's measured time vs the best forced engine
@@ -39,7 +40,7 @@ import numpy as np
 from repro.core.engine import run_query
 from repro.planner import ServingSession, paper_listing, plan
 
-from .bench_util import emit, time_call, tree_dataset
+from .bench_util import emit, time_call, time_ratio, tree_dataset
 
 BATCH_ROOTS = 8
 
@@ -87,10 +88,13 @@ def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
 
     us_seq = time_call(_sequential, repeat=repeat)
     out["seq"] = us_seq
+    # PAIRED like every other gated ratio (calls interleaved so shared-host
+    # drift cancels): unpaired, this cell flipped under 1.0 on machine
+    # weather while the code was byte-identical
+    speedup = time_ratio(_sequential, _submit, repeat=max(repeat, 7))
     emit(f"exp_serving/bucketed_vs_sequential/d{depth}",
          us_warm / BATCH_ROOTS,
-         f"per_root_speedup_vs_sequential="
-         f"{us_seq / max(us_warm, 1e-9):.2f}")
+         f"per_root_speedup_vs_sequential={speedup:.2f}")
 
     # -- observability gate: a disabled tracer must cost nothing ----------
     # paired ratio (no tracer) / (disabled tracer installed): the disabled
@@ -98,7 +102,6 @@ def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
     # seam, so this must sit at ~1.0 (gated >= 0.95 in scripts/perf_gate)
     from repro.obs import Tracer
 
-    from .bench_util import time_ratio
 
     disabled = Tracer(enabled=False)
 
@@ -133,7 +136,6 @@ def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
         # paired measurement for the GATED ratio (see exp_planner): two
         # near-tied engines timed seconds apart would flip this cell on
         # shared-host noise alone
-        from .bench_util import time_ratio
         q_best = next(c.query for c in cal_report.ranked
                       if c.label == best_forced)
         regret = time_ratio(

@@ -1,0 +1,137 @@
+"""Weighted-workload experiment: the semiring value plane under load.
+
+Cells:
+
+* ``exp_weighted/sssp_bucketed/dD`` — the GATED delta-stepping-style
+  cell: a root batch mixing the hub root with leaf-ish roots, weighted
+  shortest path, reach-bucketed dispatch (``bucket_roots`` + the shared
+  ``dispatch_buckets`` executor, each bucket at its own right-sized caps)
+  against ONE lockstep batched dispatch at the global caps.  Lockstep
+  vmaps every lane through the hub root's level count and pads every lane
+  to the hub root's caps; bucketing lets the leaf bucket's label-
+  correcting loop converge in a few cheap levels.  The
+  ``sssp_bucketed_vs_lockstep`` ratio is measured PAIRED (calls
+  interleaved, shared-host drift cancels) and gated >= 1.0 by
+  ``scripts/perf_gate.py``.
+* ``exp_weighted/sssp_vs_reach/dD`` — informational (ungated): the
+  planner-chosen SSSP traversal against the planner-chosen boolean reach
+  on the same tree, single root — the price of carrying the value plane.
+* ``exp_weighted/aggregate_sum/dD`` — informational (ungated): the
+  bill-of-materials shape (``SUM(t.value * e.w)``, UNION ALL) through the
+  planner-chosen weighted engine, depth-bounded; reports the chosen
+  engine and the per-call time of the walk-aggregation fold.
+
+See docs/workloads.md for the semiring table and the SQL forms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine import Dataset, dispatch_buckets, run_query_batch
+from repro.core.table import ColumnTable
+from repro.data.treegen import TreeSpec, make_edge_table
+from repro.planner import plan
+from repro.planner.ast import normalize, parse, weighted_listing
+from repro.planner.optimize import bucket_roots
+
+from .bench_util import emit, level_caps, time_call, time_ratio
+
+BATCH_ROOTS = 8
+
+_WEIGHTED: dict = {}
+
+
+def weighted_tree_dataset(num_vertices: int, height: int,
+                          seed: int = 0) -> Dataset:
+    """The shared bench tree plus a positional edge-weight column ``w``
+    (uniform in [0.5, 2.0): strictly positive, mean ~1, so weighted
+    distances stay depth-scale and the improving frontier converges like
+    BFS)."""
+    key = (num_vertices, height, seed)
+    if key not in _WEIGHTED:
+        spec = TreeSpec(num_vertices=num_vertices, height=height,
+                        payload_cols=0, seed=seed)
+        table = make_edge_table(spec)
+        rng = np.random.default_rng(seed + 1)
+        cols = {name: np.asarray(table.column(name))
+                for name in table.names}
+        cols["w"] = rng.uniform(0.5, 2.0,
+                                table.num_rows).astype(np.float32)
+        _WEIGHTED[key] = Dataset.prepare(ColumnTable.from_numpy(cols),
+                                         spec.num_vertices)
+    return _WEIGHTED[key]
+
+
+def run(num_vertices: int = 200_000, height: int = 60, depth: int = 8,
+        repeat: int = 5) -> dict:
+    ds = weighted_tree_dataset(num_vertices, height)
+    caps = level_caps(num_vertices, height, depth)
+    sql = weighted_listing("shortest_path", root=0, depth=depth,
+                           weight_col="w")
+    lg = normalize(parse(sql), ds)
+    best = plan(lg, ds, caps=caps).best
+    # the serving mix: the hub root plus true leaves (the regime where
+    # lockstep batching pads every lane to the hub's caps and rides every
+    # lane through the hub's level count)
+    roots = [0] + [num_vertices - 1 - i for i in range(BATCH_ROOTS - 1)]
+    out = {}
+
+    buckets = bucket_roots(ds, roots, direction=best.query.direction,
+                           max_depth=depth, dedup=best.query.dedup,
+                           caps=caps, max_buckets=4)
+    # per-bucket re-costing, exactly like ServingSession._bucket_choice:
+    # the capacity-aware model lets the leaf bucket pick the positional
+    # engine even when the hub bucket (and the whole batch) price dense
+    bucket_q = tuple(plan(lg, ds, caps=b.caps).best.query for b in buckets)
+
+    def _dispatch(i, b, bcaps):
+        q = bucket_q[i]
+        if bcaps != q.caps:
+            q = dataclasses.replace(q, caps=bcaps)
+        return run_query_batch(q, ds, list(b.roots))
+
+    def _bucketed():
+        return dispatch_buckets(buckets, _dispatch, fallback_caps=caps,
+                                to_host=False)
+
+    def _lockstep():
+        return run_query_batch(best.query, ds, roots)
+
+    us_bucketed = time_call(_bucketed, repeat=repeat)
+    us_lockstep = time_call(_lockstep, repeat=repeat)
+    ratio = time_ratio(_lockstep, _bucketed, repeat=max(repeat, 9))
+    out["sssp_bucketed_vs_lockstep"] = ratio
+    emit(f"exp_weighted/sssp_bucketed/d{depth}", us_bucketed,
+         f"sssp_bucketed_vs_lockstep={ratio:.2f},"
+         f"lockstep_us={us_lockstep:.1f},buckets={len(buckets)},"
+         f"engine={best.label},batch={BATCH_ROOTS}")
+
+    # -- the value plane's price vs boolean reach (informational) ---------
+    from repro.planner import paper_listing
+    reach_best = plan(paper_listing(1, root=0, depth=depth), ds,
+                      caps=caps).best
+    us_sssp = time_call(lambda: best.run(ds, 0), repeat=repeat)
+    reach_ratio = time_ratio(lambda: best.run(ds, 0),
+                             lambda: reach_best.run(ds, 0),
+                             repeat=max(repeat, 7))
+    out["sssp_vs_reach"] = reach_ratio
+    emit(f"exp_weighted/sssp_vs_reach/d{depth}", us_sssp,
+         f"sssp_over_reach={reach_ratio:.2f},sssp={best.label},"
+         f"reach={reach_best.label}")
+
+    # -- the walk-aggregation fold (informational) ------------------------
+    agg_depth = min(depth, 4)       # UNION ALL row volume is depth-bounded
+    agg_sql = weighted_listing("aggregate_sum", root=0, depth=agg_depth,
+                               weight_col="w")
+    agg_best = plan(normalize(parse(agg_sql), ds), ds, caps=caps).best
+    us_agg = time_call(lambda: agg_best.run(ds, 0), repeat=repeat)
+    out["aggregate_us"] = us_agg
+    emit(f"exp_weighted/aggregate_sum/d{agg_depth}", us_agg,
+         f"engine={agg_best.label},workload=aggregate_sum")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -53,7 +53,7 @@ def main(argv=None) -> None:
                     help="write emitted rows as JSON (e.g. BENCH_bfs.json)")
     ap.add_argument("--only", default=None,
                     help="comma list: exp1,exp2,exp3,claims,kern,planner,"
-                         "serving,direction")
+                         "serving,direction,weighted")
     ap.add_argument("--kernel", action="store_true",
                     help="benchmark the Pallas frontier_expand kernel via "
                          "CSRIndexJoin(expand_fn=) and let the planner "
@@ -70,7 +70,7 @@ def main(argv=None) -> None:
 
     from . import (bench_util, exp1_bfs, exp2_payload, exp3_rewrite,
                    exp_claims, exp_direction, exp_planner, exp_serving,
-                   kernels_bench)
+                   exp_weighted, kernels_bench)
 
     bench_util.RESULTS.clear()     # fresh per invocation (notebook reuse)
     only = set(args.only.split(",")) if args.only else None
@@ -119,6 +119,12 @@ def main(argv=None) -> None:
                               repeat=3)
         else:
             exp_direction.run()
+    if not only or "weighted" in only:
+        if args.quick:
+            exp_weighted.run(num_vertices=20_000, height=10, depth=8,
+                             repeat=3)
+        else:
+            exp_weighted.run()
     if not only or "kern" in only:
         kernels_bench.run(repeat=3 if args.quick else 5)
 

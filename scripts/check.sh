@@ -29,8 +29,20 @@ python -c "import hypothesis" 2>/dev/null \
   || echo "WARNING: pip install failed (offline?); property suites run" \
           "on the vendored fallback engine (tests/_hypothesis_fallback.py)"
 
-echo "== tier-1 pytest =="
-python -m pytest -x -q
+echo "== tier-1 pytest (sharded) =="
+# Sharded into NSHARDS pytest processes: one long-lived process
+# accumulates enough XLA compilation state that the native
+# backend_compile segfaults late in the suite on some hosts.  Several
+# smaller processes keep every test running while bounding per-process
+# compile-cache growth; the split is alphabetical (stable as files are
+# added), contiguous, non-overlapping and exhaustive by construction.
+NSHARDS=3
+mapfile -t TIER1_FILES < <(ls tests/test_*.py | sort)
+total=${#TIER1_FILES[@]}
+per=$(( (total + NSHARDS - 1) / NSHARDS ))
+for (( start=0; start<total; start+=per )); do
+  python -m pytest -x -q "${TIER1_FILES[@]:start:per}"
+done
 
 echo "== quick benchmarks -> BENCH_bfs.json (+ BENCH_history.jsonl) =="
 python -m benchmarks.run --quick --json BENCH_bfs.json \

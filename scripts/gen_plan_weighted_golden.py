@@ -1,0 +1,50 @@
+"""Regenerate ``tests/golden/plan_weighted.json``.
+
+The snapshot freezes the schema-v5 machine-readable plan document for the
+canonical weighted shortest-path query on the seeded random graph used
+throughout ``tests/test_semiring.py``: candidate ranking (the two weighted
+engines), per-engine skip reasons, per-operator byte/row estimates priced
+with the DEFAULT cost constants, and the logical section's
+``workload``/``weight_col`` axes.  External tooling diffs this across PRs,
+so an unintended weighted-costing or schema change must show up here.
+
+Usage: PYTHONPATH=src python scripts/gen_plan_weighted_golden.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.engine import Dataset, EngineCaps
+from repro.core.table import ColumnTable
+from repro.planner import explain_json
+from repro.planner.ast import weighted_listing
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
+                   "plan_weighted.json")
+
+
+def main() -> None:
+    rng = np.random.default_rng(21)
+    v, e = 50, 140
+    table = ColumnTable.from_numpy({
+        "id": np.arange(e, dtype=np.int32),
+        "from": rng.integers(0, v, e).astype(np.int32),
+        "to": rng.integers(0, v, e).astype(np.int32),
+        "name": np.zeros((e, 4), np.float32),
+        "w": rng.uniform(0.5, 3.0, e).astype(np.float32),
+    })
+    ds = Dataset.prepare(table, v)
+    caps = EngineCaps(frontier=e + 16, result=4 * e + 16)
+    sql = weighted_listing("shortest_path", root=0, depth=6, weight_col="w")
+    doc = explain_json(sql, ds, caps=caps)
+    with open(OUT, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote schema-v{doc['schema_version']} weighted plan to {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Regenerate ``tests/golden/reach_parity.json``.
+
+The golden freezes the EXACT reach (boolean BFS) output of every engine x
+every legal direction on two seeded random graphs: result positions in
+emission order, per-row ids/depths, final depth, overflow and count.  The
+snapshot was generated BEFORE the semiring value-plane refactor landed, so
+``tests/test_semiring.py::test_reach_golden_parity`` proves the refactored
+operators are bit-identical for the boolean case — not merely row-set
+equal.
+
+Usage: PYTHONPATH=src python scripts/gen_reach_golden.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.engine import (ENGINE_NAMES, Dataset, EngineCaps,
+                               RecursiveQuery, run_query)
+from repro.core.table import ColumnTable
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
+                   "reach_parity.json")
+
+GRAPHS = (
+    dict(seed=3, num_vertices=17, num_edges=40, max_depth=4),
+    dict(seed=12, num_vertices=29, num_edges=70, max_depth=6),
+)
+DIRECTIONS = ("outbound", "inbound", "both")
+
+
+def _dataset(seed: int, num_vertices: int, num_edges: int) -> Dataset:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, num_vertices, size=num_edges)
+    dst = rng.integers(0, num_vertices, size=num_edges)
+    table = ColumnTable.from_numpy({
+        "id": np.arange(num_edges, dtype=np.int32),
+        "from": src.astype(np.int32),
+        "to": dst.astype(np.int32),
+        "name": rng.standard_normal((num_edges, 4)).astype(np.float32),
+    })
+    return Dataset.prepare(table, num_vertices)
+
+
+def _cell(r) -> dict:
+    cell = {
+        "count": int(r.count),
+        "depth": int(r.depth),
+        "overflow": bool(r.overflow),
+        "positions": np.asarray(r.positions).tolist(),
+        "ids": np.asarray(r.values["id"]).tolist(),
+    }
+    if r.row_depths is not None:
+        cell["row_depths"] = np.asarray(r.row_depths).tolist()
+    return cell
+
+
+def main() -> None:
+    doc = {}
+    for g in GRAPHS:
+        ds = _dataset(g["seed"], g["num_vertices"], g["num_edges"])
+        caps = EngineCaps(frontier=g["num_edges"] + 16,
+                          result=4 * g["num_edges"] + 16)
+        for engine in ENGINE_NAMES:
+            for direction in DIRECTIONS:
+                q = RecursiveQuery(engine=engine, max_depth=g["max_depth"],
+                                   payload_cols=0, caps=caps,
+                                   direction=direction)
+                try:
+                    r = run_query(q, ds, root=0)
+                except ValueError:
+                    continue  # engine does not support this direction
+                key = f"g{g['seed']}/{engine}/{direction}"
+                doc[key] = _cell(r)
+    with open(OUT, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(doc)} cells to {OUT}")
+
+
+if __name__ == "__main__":
+    main()

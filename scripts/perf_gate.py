@@ -30,6 +30,12 @@ Fails (exit 1) when the perf trajectory regresses past the ROADMAP bars:
   as serving with no tracer at all (paired ratio,
   ``exp_serving/disabled_tracer_ratio``); tracing is wired into the
   production seams only because the off path is free.
+* the weighted gate: any cell reporting ``sssp_bucketed_vs_lockstep``
+  below 1.0 — the delta-stepping-style reach-bucketed SSSP batch
+  (``exp_weighted/sssp_bucketed/d8``) must not lose to one lockstep
+  batched dispatch at the global caps (paired ratio; the bucketing
+  machinery is shared with reach serving, so a regression here means the
+  value plane broke the bucket path's economics).
 
 The lockstep reference cell deliberately reports its ratio under a
 different key (``lockstep_vs_sequential``) so the gate does not fire on the
@@ -57,11 +63,13 @@ CAL_REGRET_RE = re.compile(r"(?:^|,)calibrated_vs_best_forced=([\d.]+)")
 REHYDRATED_RE = re.compile(r"(?:^|,)rehydrated_match=(\d+)")
 DIROPT_RE = re.compile(r"(?:^|,)diropt_vs_push_only=([\d.]+)")
 TRACER_RE = re.compile(r"(?:^|,)disabled_tracer_ratio=([\d.]+)")
+SSSP_RE = re.compile(r"(?:^|,)sssp_bucketed_vs_lockstep=([\d.]+)")
 
 MIN_PER_ROOT_SPEEDUP = 1.0
 MAX_PLANNER_REGRET = 1.2
 MIN_DIROPT_SPEEDUP = 1.0
 MIN_TRACER_RATIO = 0.95
+MIN_SSSP_SPEEDUP = 1.0
 
 # drift-report knobs (non-gating): compare against the median of the last
 # HISTORY_WINDOW runs, flag cells that moved more than DRIFT_FLAG x
@@ -69,7 +77,7 @@ HISTORY_WINDOW = 5
 DRIFT_FLAG = 1.5
 
 GATES = (SPEEDUP_RE, REGRET_RE, CAL_REGRET_RE, REHYDRATED_RE, DIROPT_RE,
-         TRACER_RE)
+         TRACER_RE, SSSP_RE)
 
 
 def bench_rows(doc: dict) -> dict:
@@ -117,6 +125,12 @@ def check(rows: dict) -> list[str]:
                 f"{name}: disabled_tracer_ratio={m.group(1)} < "
                 f"{MIN_TRACER_RATIO} (a disabled tracer must not slow "
                 "the serving path)")
+        m = SSSP_RE.search(derived)
+        if m and float(m.group(1)) < MIN_SSSP_SPEEDUP:
+            failures.append(
+                f"{name}: sssp_bucketed_vs_lockstep={m.group(1)} < "
+                f"{MIN_SSSP_SPEEDUP} (bucketed weighted dispatch must "
+                "not lose to one lockstep batch)")
     return failures
 
 

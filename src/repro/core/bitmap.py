@@ -21,11 +21,13 @@ from .csr import CSRIndex
 from .operators import (BFSResult, CompactEmitted, Context, DeferredEmit,
                         DenseBitmapStep, DirectionSwitch, EngineCaps,
                         HybridPullStep, HybridStep, Pipeline, PullStep, Seed,
-                        bitmap_level, check_direction, execute)
+                        WeightedDenseStep, bitmap_level, check_direction,
+                        execute)
 from .table import ColumnTable
 
 __all__ = ["bitmap_bfs", "hybrid_bfs", "bitmap_level", "bitmap_plan",
-           "hybrid_plan", "diropt_plan", "diropt_hybrid_plan"]
+           "hybrid_plan", "diropt_plan", "diropt_hybrid_plan",
+           "weighted_bitmap_plan"]
 
 
 def bitmap_plan(caps: EngineCaps, max_depth: int,
@@ -41,6 +43,29 @@ def bitmap_plan(caps: EngineCaps, max_depth: int,
         ops=(DenseBitmapStep(),),
         finisher=CompactEmitted(tuple(out_cols)),
         caps=caps, max_depth=max_depth, inclusive=True, tracks_emitted=True)
+
+
+def weighted_bitmap_plan(caps: EngineCaps, max_depth: int,
+                         out_cols: tuple[str, ...], semiring: str,
+                         direction: str = "outbound",
+                         use_kernel: bool = False) -> Pipeline:
+    """Dense-frontier traversal under a value semiring: per level one ⊗
+    over the full edge list and one ⊕-scatter into the (V,) value plane
+    (:class:`WeightedDenseStep`; ``use_kernel`` routes the (sum, ×)
+    combine through the ``spmm_segment`` Pallas kernel).  Single-direction
+    views only — the fused bidirectional join space has no dense weighted
+    step."""
+    check_direction(direction)
+    if direction == "both":
+        raise ValueError("the dense weighted step is single-direction; "
+                         "use the positional weighted engine for 'both'")
+    return Pipeline(
+        name="BitmapWeighted", rep="dense",
+        seed=Seed(kind="dense", semiring=semiring),
+        ops=(WeightedDenseStep(semiring=semiring, use_kernel=use_kernel),),
+        finisher=CompactEmitted(tuple(out_cols)),
+        caps=caps, max_depth=max_depth, inclusive=True, tracks_emitted=True,
+        semiring=semiring)
 
 
 def hybrid_plan(caps: EngineCaps, max_depth: int,

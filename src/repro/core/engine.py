@@ -36,13 +36,14 @@ import numpy as np
 from repro.obs import trace as _trace
 
 from .bitmap import (bitmap_plan, diropt_hybrid_plan, diropt_plan,
-                     hybrid_plan)
+                     hybrid_plan, weighted_bitmap_plan)
 from .csr import CSRIndex, build_csr, merged_indptr
 from .operators import BFSResult, Context, EngineCaps, Pipeline, execute, \
     execute_batch
 from .recursive import (DIRECTIONS, precursive_plan, rowstore_plan,
                         rowstore_rewrite_plan, trecursive_plan,
-                        trecursive_rewrite_plan)
+                        trecursive_rewrite_plan, weighted_precursive_plan)
+from .semiring import WORKLOADS
 from .table import ColumnTable, RowTable, payload_names
 
 EngineName = Literal["precursive", "trecursive", "rowstore", "rowstore_index",
@@ -75,11 +76,18 @@ class RecursiveQuery:
     caps: EngineCaps
     dedup: bool = True                # BFS semantics (UNION ALL if False)
     direction: Direction = "outbound"
+    workload: str = "reach"           # semiring name ('reach' = boolean BFS)
+    weight_col: Optional[str] = None  # edge-weight column (weighted only)
 
     @property
     def out_cols(self) -> tuple[str, ...]:
         return ("id", "from", "to", "name",
                 *payload_names(self.payload_cols))
+
+
+# the engines that can carry the semiring value plane; every other engine
+# is skipped by the planner for weighted workloads (with a recorded reason)
+WEIGHTED_ENGINE_NAMES: tuple[str, ...] = ("precursive", "bitmap")
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +125,20 @@ PLAN_BUILDERS: Dict[str, Callable[[RecursiveQuery], Pipeline]] = {
 
 
 def build_plan(q: RecursiveQuery) -> Pipeline:
+    workload = getattr(q, "workload", "reach")
+    if workload != "reach":
+        if workload not in WORKLOADS:
+            raise ValueError(f"unknown workload {workload!r}; "
+                             f"known: {WORKLOADS}")
+        if q.engine == "precursive":
+            return weighted_precursive_plan(q.caps, q.max_depth, q.out_cols,
+                                            workload, q.direction)
+        if q.engine == "bitmap":
+            return weighted_bitmap_plan(q.caps, q.max_depth, q.out_cols,
+                                        workload, q.direction)
+        raise ValueError(
+            f"engine {q.engine!r} has no value plane; weighted workloads "
+            f"run on {WEIGHTED_ENGINE_NAMES}")
     try:
         builder = PLAN_BUILDERS[q.engine]
     except KeyError:
@@ -151,6 +173,7 @@ class Dataset:
     rcsr: CSRIndex | None = None           # reverse CSR (over `to`)
     both_indptr: object = None             # (V+1,) merged out+in indptr
     stats_cache: dict | None = None        # direction -> GraphStats
+    weights_cache: dict | None = None      # weight_col -> (E,) f32 weights
 
     @classmethod
     def prepare(cls, table: ColumnTable, num_vertices: int) -> "Dataset":
@@ -177,23 +200,50 @@ class Dataset:
             object.__setattr__(self, "both_indptr",
                                merged_indptr(self.csr, self.rcsr))
 
-    def context(self, direction: str = "outbound") -> Context:
-        """The direction-resolved join view the operators run against."""
+    def edge_weights(self, weight_col: str) -> jax.Array:
+        """The (E,) float32 ⊗-weight column in real position order — the
+        edge-weight positional column of the weighted workloads.  Converted
+        once per column and cached on the instance (same array object every
+        call, so jitted dispatches keep hitting their compile cache)."""
+        cache = self.weights_cache
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "weights_cache", cache)
+        if weight_col not in cache:
+            if weight_col not in self.table.names:
+                raise ValueError(f"unknown weight column {weight_col!r}; "
+                                 f"table has {self.table.names}")
+            col = self.table.column(weight_col)
+            if col.ndim != 1:
+                raise ValueError(
+                    f"weight column {weight_col!r} must be 1-D, "
+                    f"got shape {tuple(col.shape)}")
+            cache[weight_col] = jnp.asarray(col, jnp.float32)
+        return cache[weight_col]
+
+    def context(self, direction: str = "outbound",
+                weight_col: Optional[str] = None) -> Context:
+        """The direction-resolved join view the operators run against.
+        ``weight_col`` attaches the edge-weight positional column (weighted
+        workloads; None for all-ones weights is expressed by the operators
+        themselves, so reach contexts carry no weight array at all)."""
         self.ensure_direction(direction)
+        w = self.edge_weights(weight_col) if weight_col is not None else None
         if direction == "inbound":
             return Context(table=self.table, rows=self.rows, csr=self.rcsr,
                            join_src=self.table.column("to"),
                            join_dst=self.table.column("from"),
-                           rcsr=self.csr)
+                           rcsr=self.csr, edge_weights=w)
         if direction == "both":
             return Context(table=self.table, rows=self.rows, csr=self.csr,
                            join_src=self.table.column("from"),
                            join_dst=self.table.column("to"),
                            rcsr=self.rcsr, both_indptr=self.both_indptr,
-                           bidir=True)
+                           bidir=True, edge_weights=w)
         return Context(table=self.table, rows=self.rows, csr=self.csr,
                        join_src=self.table.column("from"),
-                       join_dst=self.table.column("to"), rcsr=self.rcsr)
+                       join_dst=self.table.column("to"), rcsr=self.rcsr,
+                       edge_weights=w)
 
     def edge_view_bytes(self, direction: str = "outbound") -> int:
         """Bytes of the index arrays one direction's join view ADDS beyond
@@ -230,6 +280,13 @@ class Dataset:
         return cache[direction]
 
 
+def query_context(q: RecursiveQuery, ds: Dataset) -> Context:
+    """The join view a query runs against: direction-resolved, with the
+    edge-weight column attached for weighted workloads."""
+    wc = q.weight_col if getattr(q, "workload", "reach") != "reach" else None
+    return ds.context(q.direction, weight_col=wc)
+
+
 def run_query(q: RecursiveQuery, ds: Dataset, root: int) -> BFSResult:
     """Execute one query through the shared fixed-point driver.
 
@@ -240,11 +297,11 @@ def run_query(q: RecursiveQuery, ds: Dataset, root: int) -> BFSResult:
     plan = build_plan(q)
     t = _trace.current_tracer()
     if t is None:
-        return execute(plan, ds.context(q.direction), jnp.int32(root),
+        return execute(plan, query_context(q, ds), jnp.int32(root),
                        ds.num_vertices)
     with t.span("dispatch", engine=q.engine, direction=q.direction,
                 lanes=1):
-        r = execute(plan, ds.context(q.direction), jnp.int32(root),
+        r = execute(plan, query_context(q, ds), jnp.int32(root),
                     ds.num_vertices)
         jax.block_until_ready(r)
     _trace.emit_level_events(t, r, engine=q.engine)
@@ -260,11 +317,11 @@ def run_query_batch(q: RecursiveQuery, ds: Dataset, roots) -> BFSResult:
     roots = jnp.asarray(roots, jnp.int32)
     t = _trace.current_tracer()
     if t is None:
-        return execute_batch(plan, ds.context(q.direction), roots,
+        return execute_batch(plan, query_context(q, ds), roots,
                              ds.num_vertices)
     with t.span("dispatch", engine=q.engine, direction=q.direction,
                 lanes=int(roots.shape[0])):
-        r = execute_batch(plan, ds.context(q.direction), roots,
+        r = execute_batch(plan, query_context(q, ds), roots,
                           ds.num_vertices)
         jax.block_until_ready(r)
     _trace.emit_level_events(t, r, engine=q.engine)

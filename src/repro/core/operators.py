@@ -72,6 +72,9 @@ import jax.numpy as jnp
 
 from .csr import CSRIndex, expand_frontier, expand_frontier_both
 from .positions import PosBlock, append_block, block_from_mask, compact_mask
+from .semiring import (Semiring, elem_combine, get_semiring, or_combine,
+                       scatter_combine)
+from .semiring import propagate as sr_propagate
 from .table import ColumnTable, RowTable
 
 __all__ = [
@@ -85,6 +88,7 @@ __all__ = [
     "CompactEmitted", "DeferredEmit", "TopLevelJoin", "RawPositions",
     "Pipeline", "fixed_point", "fixed_point_batch", "execute",
     "execute_batch", "dedup_targets", "bitmap_level",
+    "Semiring", "or_combine", "WeightedExpand", "WeightedDenseStep",
 ]
 
 
@@ -156,6 +160,8 @@ class BFSResult(NamedTuple):
     row_depths: Optional[jax.Array] = None   # (result_cap,) BFS level per row
     level_dirs: Optional[jax.Array] = None   # (L,) int8 per-level direction
     #   decision of a DirectionSwitch pipeline (-1 unused, 0 push, 1 pull)
+    vertex_values: Optional[jax.Array] = None  # (V,) float32 semiring value
+    #   plane of a weighted pipeline (None for the boolean reach workload)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -182,17 +188,22 @@ class Context:
     rcsr: Optional[CSRIndex] = None
     both_indptr: Optional[jax.Array] = None
     bidir: bool = False
+    edge_weights: Optional[jax.Array] = None   # (E,) float32 per-edge ⊗
+    #   weight in REAL position order (shared by both orientations of the
+    #   fused bidirectional view); None for unweighted traffic
 
     def tree_flatten(self):
         return ((self.table, self.rows, self.csr, self.join_src,
-                 self.join_dst, self.rcsr, self.both_indptr), self.bidir)
+                 self.join_dst, self.rcsr, self.both_indptr,
+                 self.edge_weights), self.bidir)
 
     @classmethod
     def tree_unflatten(cls, bidir, children):
-        table, rows, csr, join_src, join_dst, rcsr, both_indptr = children
+        (table, rows, csr, join_src, join_dst, rcsr, both_indptr,
+         edge_weights) = children
         return cls(table=table, rows=rows, csr=csr, join_src=join_src,
                    join_dst=join_dst, rcsr=rcsr, both_indptr=both_indptr,
-                   bidir=bidir)
+                   bidir=bidir, edge_weights=edge_weights)
 
 
 class TraversalState(NamedTuple):
@@ -224,6 +235,11 @@ class TraversalState(NamedTuple):
     #   reads the unvisited count without a per-level popcount)
     level_dirs: jax.Array              # (L,) int8 per-level switch decision
     #   (-1 = level not executed, 0 = push, 1 = pull)
+    frontier_val: jax.Array            # weighted value plane of the frontier:
+    #   (F,) value arriving along each frontier edge (positional rep) or
+    #   (V,) per-vertex level values (dense rep); zero-size for 'reach'
+    vertex_val: jax.Array              # (V,) float32 ⊕-accumulated value per
+    #   vertex (semiring identity = unreached); zero-size for 'reach'
 
 
 # ---------------------------------------------------------------------------
@@ -244,8 +260,9 @@ def dedup_targets(targets: jax.Array, valid: jax.Array, visited: jax.Array
     ticket = jnp.full((nv,), cap, jnp.int32).at[safe].min(
         jnp.where(fresh, slots, cap), mode="drop")
     keep = fresh & (ticket[safe] == slots)
-    # scatter-max: dropped duplicates must not race the winner's True write
-    new_visited = visited.at[safe].max(keep, mode="drop")
+    # boolean ⊕ (scatter-max): dropped duplicates must not race the
+    # winner's True write; weighted pipelines use scatter_combine instead
+    new_visited = or_combine(visited, safe, keep)
     return keep, new_visited
 
 
@@ -259,7 +276,7 @@ def bitmap_level(from_col: jax.Array, to_col: jax.Array,
     nv = frontier_v.shape[0]
     hit = frontier_v[jnp.clip(from_col, 0, nv - 1)]
     tgt = jnp.clip(to_col, 0, nv - 1)
-    nxt = jnp.zeros((nv,), bool).at[tgt].max(hit, mode="drop")
+    nxt = or_combine(jnp.zeros((nv,), bool), tgt, hit)
     nxt = nxt & ~visited
     visited = visited | nxt
     return hit, nxt, visited
@@ -353,6 +370,18 @@ def _hit_mask(ctx: Context, frontier_v: jax.Array) -> jax.Array:
         frontier_v[jnp.clip(ctx.join_dst, 0, nv - 1)]])
 
 
+def _edge_weight_at(ctx: Context, pos: jax.Array) -> jax.Array:
+    """Per-edge ⊗ weight gathered at JOIN-SPACE positions (callers mask
+    invalid lanes themselves).  Weights live in real position order, so the
+    fused bidirectional view folds the backward copy onto the same weight;
+    a weightless context traverses with all-ones (reach-compatible)."""
+    if ctx.edge_weights is None:
+        return jnp.ones(pos.shape, jnp.float32)
+    e = _num_real_rows(ctx)
+    real = _to_real(ctx, pos)
+    return ctx.edge_weights[jnp.clip(real, 0, e - 1)]
+
+
 def _expand_join(ctx: Context, targets: jax.Array, keep: jax.Array,
                  capacity: int, expand_fn=None):
     """CSR expansion over the join view: the plain/Pallas kernel over the
@@ -376,8 +405,8 @@ def _dense_push(ctx: Context, frontier_v: jax.Array, visited: jax.Array
     dst = jnp.clip(ctx.join_dst, 0, nv - 1)
     hit_f = frontier_v[src]
     hit_b = frontier_v[dst]
-    nxt = (jnp.zeros((nv,), bool).at[dst].max(hit_f, mode="drop")
-           .at[src].max(hit_b, mode="drop"))
+    nxt = or_combine(or_combine(jnp.zeros((nv,), bool), dst, hit_f),
+                     src, hit_b)
     nxt = nxt & ~visited
     visited = visited | nxt
     return jnp.concatenate([hit_f, hit_b]), nxt, visited
@@ -396,9 +425,10 @@ def _dense_pull(ctx: Context, frontier_v: jax.Array, visited: jax.Array,
         # fused view: both orientations contribute, natural edge order
         src = jnp.clip(ctx.join_src, 0, nv - 1)
         dst = jnp.clip(ctx.join_dst, 0, nv - 1)
-        nxt = (jnp.zeros((nv,), bool)
-               .at[dst].max(cand[dst] & frontier_v[src], mode="drop")
-               .at[src].max(cand[src] & frontier_v[dst], mode="drop"))
+        nxt = or_combine(
+            or_combine(jnp.zeros((nv,), bool), dst,
+                       cand[dst] & frontier_v[src]),
+            src, cand[src] & frontier_v[dst])
         return nxt & cand
     if pull_fn is not None:
         if ctx.rcsr is None:
@@ -414,7 +444,7 @@ def _dense_pull(ctx: Context, frontier_v: jax.Array, visited: jax.Array,
         nbr = jnp.clip(ctx.join_src[perm], 0, nv - 1)   # in-neighbor
         vtx = jnp.clip(ctx.join_dst[perm], 0, nv - 1)   # owning vertex
         contrib = cand[vtx] & frontier_v[nbr]
-        nxt = jnp.zeros((nv,), bool).at[vtx].max(contrib, mode="drop")
+        nxt = or_combine(jnp.zeros((nv,), bool), vtx, contrib)
         return nxt & cand
     # no reverse CSR built (outbound-only dataset): the same bottom-up
     # test evaluated in natural edge order — identical result, and plain
@@ -422,7 +452,7 @@ def _dense_pull(ctx: Context, frontier_v: jax.Array, visited: jax.Array,
     src = jnp.clip(ctx.join_src, 0, nv - 1)
     dst = jnp.clip(ctx.join_dst, 0, nv - 1)
     contrib = cand[dst] & frontier_v[src]
-    nxt = jnp.zeros((nv,), bool).at[dst].max(contrib, mode="drop")
+    nxt = or_combine(jnp.zeros((nv,), bool), dst, contrib)
     return nxt & cand
 
 
@@ -471,14 +501,43 @@ class Seed(Operator):
     kind='dense'    — the root bit in a dense vertex bitmap.
     scan='rows' emulates the PostgreSQL SeqScan (strided read over the
     interleaved row table).  mark_emitted seeds the emitted-edge mask used by
-    bitmap-style pipelines."""
+    bitmap-style pipelines.  ``semiring != 'reach'`` additionally seeds the
+    value plane: the root's vertex value is the semiring's seed value and
+    (edge kind) each seed edge carries seed ⊗ weight."""
 
     kind: str = "edges"
     scan: str = "columnar"
     label: str = "from"
     mark_emitted: bool = False
+    semiring: str = "reach"
+
+    def _init_weighted(self, ctx, state, root):
+        sr = get_semiring(self.semiring)
+        nv = state.visited.shape[0]
+        r = jnp.clip(root, 0, nv - 1)
+        visited = state.visited.at[r].set(True)
+        vertex_val = state.vertex_val.at[r].set(sr.seed_value)
+        if self.kind == "dense":
+            bits = jnp.zeros((nv,), bool).at[r].set(True)
+            fval = jnp.full((nv,), sr.identity, jnp.float32).at[r].set(
+                sr.seed_value)
+            return state._replace(frontier_bits=bits, visited=visited,
+                                  vertex_val=vertex_val, frontier_val=fval,
+                                  frontier_count=jnp.ones((), jnp.int32))
+        ej = _num_join(ctx)
+        cap = state.frontier_pos.shape[0]
+        blk = compact_mask(_seed_mask(ctx, root), cap, ej)
+        w = _edge_weight_at(ctx, blk.positions)
+        fval = jnp.where(
+            blk.valid_mask(),
+            sr_propagate(sr, jnp.float32(sr.seed_value), w), sr.identity)
+        return state._replace(frontier_pos=blk.positions,
+                              frontier_count=blk.count, visited=visited,
+                              vertex_val=vertex_val, frontier_val=fval)
 
     def init(self, ctx, state, root):
+        if self.semiring != "reach":
+            return self._init_weighted(ctx, state, root)
         if state.vertex_depth.shape[0]:
             # deferred-emission pipeline: the per-vertex depth array IS
             # the visited set and the frontier (no separate bitmaps)
@@ -633,8 +692,8 @@ class ScanHashJoin(Operator):
         nv = state.visited.shape[0]
         e = ctx.rows.num_rows
         cap = state.frontier_pos.shape[0]
-        probe = jnp.zeros((nv,), bool).at[
-            jnp.clip(state.targets, 0, nv - 1)].max(state.keep, mode="drop")
+        probe = or_combine(jnp.zeros((nv,), bool),
+                           jnp.clip(state.targets, 0, nv - 1), state.keep)
         scan_from = ctx.rows.column("from").astype(jnp.int32)  # full scan
         hit = probe[jnp.clip(scan_from, 0, nv - 1)] & (scan_from >= 0)
         blk = compact_mask(hit, cap, e)
@@ -651,6 +710,145 @@ class ScanHashJoin(Operator):
         return OpCost(env.emitted_rows,
                       env.num_vertices * 1.0 + env.frontier_cap * 4.0
                       + float(env.num_edges) * (env.row_bytes + 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedExpand(Operator):
+    """The positional weighted level: one fused ⊗-propagate / ⊕-combine /
+    winner-select / IndexJoin step.
+
+    Each frontier entry is a join-space edge position carrying the value
+    that arrives along it (``frontier_val``).  The step ⊕-combines the
+    arrivals per target vertex into the level plane ``lvl``, folds ``lvl``
+    into the per-vertex accumulator, picks ONE expansion slot per active
+    vertex with the same scatter-argmin ticket :func:`dedup_targets` uses
+    (⊗ distributes over ⊕, so expanding the COMBINED per-vertex value once
+    equals expanding every path separately — the UNION-ALL fold), and
+    expands the winners through the CSR join index.
+
+    Improving semirings (``shortest_path``) re-expand only vertices whose
+    value STRICTLY improved — label-correcting Bellman-Ford whose fixed
+    point (empty improved set) is exactly the driver's existing
+    ``frontier_count > 0`` convergence test, i.e. value stabilization.
+    Walk semirings (the aggregates) re-expand every vertex that received a
+    value this level and rely on the pipeline depth bound."""
+
+    semiring: str
+
+    def step(self, ctx, state):
+        sr = get_semiring(self.semiring)
+        cap = state.frontier_pos.shape[0]
+        nv = state.vertex_val.shape[0]
+        slots = jnp.arange(cap, dtype=jnp.int32)
+        valid = slots < state.frontier_count
+        t = _join_dst_at(ctx, state.frontier_pos)
+        safe = jnp.clip(t, 0, nv - 1)
+        idx = jnp.where(valid, safe, nv)
+        prop = state.frontier_val            # ⊗ was applied at expansion
+        lvl = scatter_combine(sr, jnp.full((nv,), sr.identity, jnp.float32),
+                              idx, prop)
+        received = or_combine(jnp.zeros((nv,), bool), idx, valid)
+        new_vv = jnp.where(received, elem_combine(sr, state.vertex_val, lvl),
+                           state.vertex_val)
+        if sr.improving:                     # frontier = strictly improved
+            eligible = valid & (lvl < state.vertex_val)[safe]
+        else:                                # frontier = all receivers
+            eligible = valid
+        eidx = jnp.where(eligible, safe, nv)
+        ticket = jnp.full((nv,), cap, jnp.int32).at[eidx].min(
+            jnp.where(eligible, slots, cap), mode="drop")
+        winner = eligible & (ticket[safe] == slots)
+        targets = jnp.where(winner, t, -1)
+        epos, total, ovf = _expand_join(ctx, targets, winner, cap)
+        evalid = jnp.arange(cap, dtype=jnp.int32) < total
+        sval = lvl[jnp.clip(_join_src_at(ctx, epos), 0, nv - 1)]
+        w = _edge_weight_at(ctx, epos)
+        fval = jnp.where(evalid, sr_propagate(sr, sval, w), sr.identity)
+        return state._replace(frontier_pos=epos, frontier_count=total,
+                              frontier_val=fval, vertex_val=new_vv,
+                              targets=targets, keep=winner,
+                              overflow=state.overflow | ovf)
+
+    def describe(self):
+        return (f"WeightedExpand[{self.semiring}: combine(+)=per-vertex, "
+                "winner -> IndexJoin[CSR(join_src)]]")
+
+    def estimate(self, env):
+        # the boolean ReadCol+Dedup+IndexJoin work at capacity, plus the
+        # value plane: frontier values r/w (8B/slot) and the (V,) level +
+        # accumulator planes (two f32 r/w passes)
+        b = (env.frontier_cap * 36.0 + env.num_vertices * 5.0
+             + env.frontier_cap * 8.0 + env.num_vertices * 16.0)
+        return OpCost(env.emitted_rows, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedDenseStep(Operator):
+    """The dense weighted level: ⊗ over the full edge list then one
+    ⊕-scatter into the (V,) level plane — the weighted generalization of
+    :class:`DenseBitmapStep`'s boolean SpMV.
+
+    For the (sum, ×) semiring the ⊕-scatter IS the fused
+    gather-scale-segment-sum the idle ``kernels/spmm_segment`` implements,
+    so ``use_kernel=True`` routes the combine through it (inactive edges
+    are disabled with the kernel's own ``src >= N`` padding contract);
+    every other ⊕ uses the jnp scatter.  Single-direction views only: the
+    planner never offers the dense engine for ``direction='both'`` under a
+    weighted workload."""
+
+    semiring: str
+    use_kernel: bool = False
+    interpret: bool = True       # Pallas interpret mode (CPU-safe default)
+
+    def step(self, ctx, state):
+        sr = get_semiring(self.semiring)
+        nv = state.vertex_val.shape[0]
+        src = jnp.clip(ctx.join_src, 0, nv - 1)
+        dst = jnp.clip(ctx.join_dst, 0, nv - 1)
+        hit = state.frontier_bits[src]
+        w = _edge_weight_at(ctx, jnp.arange(ctx.join_src.shape[0],
+                                            dtype=jnp.int32))
+        if self.use_kernel and sr.combine == "add" and sr.propagate == "mul":
+            from ..kernels.spmm_segment import spmm_segment
+            lvl = spmm_segment(state.frontier_val[:, None],
+                               jnp.where(hit, src, nv), dst, w, nv,
+                               use_pallas=True, interpret=self.interpret
+                               )[:, 0]
+        else:
+            prop = sr_propagate(sr, state.frontier_val[src], w)
+            lvl = scatter_combine(
+                sr, jnp.full((nv,), sr.identity, jnp.float32),
+                jnp.where(hit, dst, nv), prop)
+        received = or_combine(jnp.zeros((nv,), bool),
+                              jnp.where(hit, dst, nv), hit)
+        new_vv = jnp.where(received, elem_combine(sr, state.vertex_val, lvl),
+                           state.vertex_val)
+        if sr.improving:
+            nxt = received & (lvl < state.vertex_val)
+        else:
+            nxt = received
+        fval = jnp.where(nxt, lvl, sr.identity)
+        new = hit & ~state.emitted
+        emit_depth = jnp.where(new, state.depth, state.emit_depth)
+        return state._replace(frontier_bits=nxt, frontier_val=fval,
+                              vertex_val=new_vv,
+                              visited=state.visited | nxt,
+                              emitted=state.emitted | hit,
+                              emit_depth=emit_depth,
+                              frontier_count=jnp.sum(nxt, dtype=jnp.int32))
+
+    def describe(self):
+        how = "spmm_segment kernel" if self.use_kernel else "(+)-scatter"
+        return f"BitmapStep[weighted {self.semiring}: {how}]"
+
+    def estimate(self, env):
+        # the boolean dense step's O(E) traffic, plus the value plane: one
+        # f32 propagate per edge and the (V,) level + accumulator planes
+        b = (float(env.num_edges) * (10.0 + 8.0)
+             + float(env.num_vertices) * (3.0 + 16.0))
+        if self.use_kernel:
+            b *= env.kernel_factor
+        return OpCost(env.emitted_rows, b)
 
 
 def _record_deferred(state: TraversalState, new: jax.Array
@@ -690,12 +888,13 @@ class DenseBitmapStep(Operator):
         # frontier membership fused into the edge gather (vd[src] == depth)
         # — no (V,) frontier mask is ever materialized
         if ctx.bidir:
-            tgt = (jnp.zeros((nv,), bool)
-                   .at[dst].max(vd[src] == state.depth, mode="drop")
-                   .at[src].max(vd[dst] == state.depth, mode="drop"))
+            tgt = or_combine(
+                or_combine(jnp.zeros((nv,), bool), dst,
+                           vd[src] == state.depth),
+                src, vd[dst] == state.depth)
         else:
-            tgt = jnp.zeros((nv,), bool).at[dst].max(
-                vd[src] == state.depth, mode="drop")
+            tgt = or_combine(jnp.zeros((nv,), bool), dst,
+                             vd[src] == state.depth)
         return tgt & (vd < 0)
 
     def step(self, ctx, state):
@@ -916,10 +1115,10 @@ class HybridStep(Operator):
         def dense_step(frontier, visited):
             fvalid = frontier.valid_mask()
             targets = _join_dst_at(ctx, frontier.positions)
-            # scatter-max: padded slots (clipped onto a real vertex) must
-            # never UNSET a vertex another slot legitimately reached
-            tgt_v = jnp.zeros((nv,), bool).at[
-                jnp.clip(targets, 0, nv - 1)].max(fvalid, mode="drop")
+            # boolean ⊕ (scatter-max): padded slots (clipped onto a real
+            # vertex) must never UNSET a vertex another slot reached
+            tgt_v = or_combine(jnp.zeros((nv,), bool),
+                               jnp.clip(targets, 0, nv - 1), fvalid)
             tgt_v = tgt_v & ~visited
             visited = visited | tgt_v
             hit = _hit_mask(ctx, tgt_v)
@@ -962,8 +1161,8 @@ class HybridPullStep(Operator):
         cap = state.frontier_pos.shape[0]
         fvalid = (jnp.arange(cap, dtype=jnp.int32) < state.frontier_count)
         srcs = _join_src_at(ctx, state.frontier_pos)
-        prev_v = jnp.zeros((nv,), bool).at[
-            jnp.clip(srcs, 0, nv - 1)].max(fvalid, mode="drop")
+        prev_v = or_combine(jnp.zeros((nv,), bool),
+                            jnp.clip(srcs, 0, nv - 1), fvalid)
         tgt_v = _dense_pull(ctx, prev_v, state.visited)
         visited = state.visited | tgt_v
         hit = _hit_mask(ctx, tgt_v)
@@ -1122,6 +1321,30 @@ class ShardTargetExchange(Operator):
 # finishers
 # ---------------------------------------------------------------------------
 
+def _drain_value_frontier(ctx, pipeline, state):
+    """Fold the FINAL frontier's arrivals into the vertex accumulator.
+
+    :class:`WeightedExpand` ⊕-combines the arrivals produced by the
+    PREVIOUS expansion at the start of each step, so when the depth bound
+    (rather than convergence) stops the loop, the last expansion's rows
+    are in the result but their values are still sitting in
+    ``frontier_val``.  The dense step combines in the same iteration it
+    emits, so only the positional finisher needs this drain; it is a
+    no-op on a converged (empty) frontier."""
+    cap = state.frontier_pos.shape[0]
+    nv = state.vertex_val.shape[0]
+    sr = get_semiring(pipeline.semiring)
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    valid = slots < state.frontier_count
+    safe = jnp.clip(_join_dst_at(ctx, state.frontier_pos), 0, nv - 1)
+    idx = jnp.where(valid, safe, nv)
+    lvl = scatter_combine(sr, jnp.full((nv,), sr.identity, jnp.float32),
+                          idx, state.frontier_val)
+    received = or_combine(jnp.zeros((nv,), bool), idx, valid)
+    return jnp.where(received, elem_combine(sr, state.vertex_val, lvl),
+                     state.vertex_val)
+
+
 @dataclasses.dataclass(frozen=True)
 class LateMaterialize:
     """Fig. 4's single Materialize after the fixed point — the paper's core
@@ -1131,8 +1354,11 @@ class LateMaterialize:
 
     def finish(self, ctx, pipeline, state):
         values = ctx.table.take(state.result_pos, self.cols)
+        vv = (_drain_value_frontier(ctx, pipeline, state)
+              if pipeline.semiring != "reach" else None)
         return BFSResult(values, state.result_pos, state.result_count,
-                         state.depth, state.overflow, state.result_depth)
+                         state.depth, state.overflow, state.result_depth,
+                         vertex_values=vv)
 
     def describe(self):
         return (f"Materialize[{', '.join(self.cols)}]"
@@ -1205,8 +1431,9 @@ class CompactEmitted:
             blk.valid_mask(),
             state.emit_depth[jnp.minimum(blk.positions, ej - 1)], -1)
         dirs = state.level_dirs if state.level_dirs.shape[0] else None
+        vv = state.vertex_val if pipeline.semiring != "reach" else None
         return BFSResult(values, pos_real, blk.count, state.depth, overflow,
-                         row_depths, dirs)
+                         row_depths, dirs, vertex_values=vv)
 
     def describe(self):
         return (f"Materialize[{', '.join(self.cols)}](Compact(emitted mask))"
@@ -1299,7 +1526,7 @@ class TopLevelJoin:
         else:
             values = ctx.table.take(pos, self.cols)
         return BFSResult(values, pos, slim.count, slim.depth, slim.overflow,
-                         slim.row_depths)
+                         slim.row_depths, vertex_values=slim.vertex_values)
 
     def describe(self):
         return (f"HashJoin[id = cte.id](Hash(id -> pos), "
@@ -1352,6 +1579,8 @@ class Pipeline:
     tracks_emitted: bool = False   # carries the (EJ,) emitted-edge mask
     tracks_vertex_depth: bool = False  # deferred emission: (V,) vertex depths
     tracks_switch: bool = False    # records per-level push/pull decisions
+    semiring: str = "reach"        # value-plane workload; 'reach' = boolean
+    #   BFS with zero-size value placeholders (bit-identical fast path)
 
     @property
     def carries_positions(self) -> bool:
@@ -1377,6 +1606,8 @@ def _initial_state(pipeline: Pipeline, ctx: Context, num_vertices: int
     dense = pipeline.rep == "dense"
     track = pipeline.tracks_emitted
     deferred = pipeline.tracks_vertex_depth
+    weighted = pipeline.semiring != "reach"
+    sr = get_semiring(pipeline.semiring) if weighted else None
     use_result_pos = pipeline.rep == "pos" and not track
     n_levels = pipeline.max_depth + 2          # >= executed iterations
     i32z = jnp.zeros((), jnp.int32)
@@ -1416,6 +1647,13 @@ def _initial_state(pipeline: Pipeline, ctx: Context, num_vertices: int
         level_dirs=(jnp.full((n_levels,), -1, jnp.int8)
                     if pipeline.tracks_switch
                     else jnp.zeros((0,), jnp.int8)),
+        # the semiring value plane: zero-size placeholders for 'reach' keep
+        # the boolean pipelines' loop state bit-identical to pre-value-plane
+        frontier_val=(jnp.zeros((0,), jnp.float32) if not weighted
+                      else jnp.full((num_vertices if dense else cap_f,),
+                                    sr.identity, jnp.float32)),
+        vertex_val=(jnp.full((num_vertices,), sr.identity, jnp.float32)
+                    if weighted else jnp.zeros((0,), jnp.float32)),
     )
 
 

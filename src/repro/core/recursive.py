@@ -48,7 +48,8 @@ from .operators import (DIRECTIONS, AppendUnionAll, BFSResult, Context,
                         CSRIndexJoin, EarlyMaterialize, EmitTuples,
                         EngineCaps, LateMaterialize, Pipeline, ProjectRows,
                         ReadTargets, ScanHashJoin, Seed, TopLevelJoin,
-                        VisitedDedup, check_direction as _check_direction,
+                        VisitedDedup, WeightedExpand,
+                        check_direction as _check_direction,
                         dedup_targets, execute)
 from .table import ColumnTable, RowTable
 
@@ -57,6 +58,7 @@ __all__ = [
     "rowstore_bfs", "trecursive_rewrite_bfs", "rowstore_rewrite_bfs",
     "dedup_targets", "precursive_plan", "trecursive_plan", "rowstore_plan",
     "trecursive_rewrite_plan", "rowstore_rewrite_plan", "DIRECTIONS",
+    "weighted_precursive_plan",
 ]
 
 # per-direction (seed filter column label, tuple-rep next-vertex column)
@@ -88,6 +90,26 @@ def precursive_plan(caps: EngineCaps, max_depth: int,
              AppendUnionAll("pos")),
         finisher=LateMaterialize(tuple(out_cols)),
         caps=caps, max_depth=max_depth)
+
+
+def weighted_precursive_plan(caps: EngineCaps, max_depth: int,
+                             out_cols: Tuple[str, ...], semiring: str,
+                             direction: str = "outbound") -> Pipeline:
+    """The positional engine under a value semiring: the same
+    position-carrying recursion and single late materialize, with the
+    level body fused into ONE :class:`WeightedExpand` (⊗-propagate,
+    per-vertex ⊕-combine, winner select, CSR expansion).  BFS's
+    VisitedDedup is subsumed: improving semirings re-expand exactly the
+    strictly-improved vertices, walk semirings every receiving vertex."""
+    _check_direction(direction)
+    seed_label, _ = _DIRECTION_COLS[direction]
+    return Pipeline(
+        name="PRecursiveWeighted", rep="pos",
+        seed=Seed(label=seed_label, semiring=semiring),
+        ops=(WeightedExpand(semiring=semiring),
+             AppendUnionAll("pos")),
+        finisher=LateMaterialize(tuple(out_cols)),
+        caps=caps, max_depth=max_depth, semiring=semiring)
 
 
 def trecursive_plan(caps: EngineCaps, max_depth: int,

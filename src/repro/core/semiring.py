@@ -1,0 +1,142 @@
+"""The semiring value plane: pluggable (⊕, ⊗) algebra for traversal.
+
+The paper's positional operators decide *reachability + depth* only.  This
+module generalizes them: a traversal can carry one float32 value per
+vertex, edges ⊗-propagate the value along the traversed edge, and
+multi-path conflicts at a target vertex resolve with the semiring's
+⊕-combine instead of a hardcoded boolean ``.at[...].max`` race.  BFS is
+the boolean special case (``reach``), weighted SSSP is (min, +), and path
+aggregation (e.g. bill-of-materials explosion) is (sum|min|max|mul, ×).
+
+Registry
+--------
+========================  =====  =====  ==========  ==========  =========
+name                      ⊕      ⊗      identity    seed        improving
+========================  =====  =====  ==========  ==========  =========
+``reach``                 or     —      False       True        —
+``shortest_path``         min    +      +inf        0.0         yes
+``aggregate_sum``         sum    ×      0.0         1.0         no
+``aggregate_max``         max    ×      -inf        1.0         no
+``aggregate_min``         min    ×      +inf        1.0         no
+``aggregate_mul``         mul    ×      1.0         1.0         no
+========================  =====  =====  ==========  ==========  =========
+
+``improving`` marks label-correcting semirings: the next frontier is the
+set of vertices whose value STRICTLY improved this round (Bellman-Ford
+style), and the fixed point is value stabilization — the monotone
+decreasing (min, +) iteration converges when no vertex improves, which is
+exactly the existing ``frontier_count > 0`` loop condition.  Walk
+semirings (the aggregates) re-expand every vertex that received a value
+this level; they are depth-bounded and rely on ⊗ distributing over ⊕ to
+combine per-vertex per level yet stay equal to the per-path UNION-ALL
+fold.
+
+``or_combine`` is the boolean ⊕ hook: it compiles to the identical
+``arr.at[idx].max(vals)`` scatter the operators used before the refactor,
+which is what keeps ``reach`` bit-identical by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Semiring", "SEMIRINGS", "WORKLOADS", "get_semiring", "or_combine",
+    "scatter_combine", "elem_combine", "propagate",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """One (⊕, ⊗) pair plus the constants the operators need.
+
+    ``combine``    ⊕ name: ``min`` | ``max`` | ``add`` | ``mul``.
+    ``propagate``  ⊗ name: ``plus`` | ``mul`` (applied as value ⊗ weight).
+    ``identity``   ⊕-identity; the initial per-vertex value.
+    ``seed_value`` the root's value (the ⊗-identity: 0 for +, 1 for ×).
+    ``improving``  label-correcting: frontier = strictly improved vertices.
+    """
+    name: str
+    combine: str
+    propagate: str
+    identity: float
+    seed_value: float
+    improving: bool
+
+
+SEMIRINGS: Dict[str, Semiring] = {
+    s.name: s for s in (
+        Semiring("shortest_path", "min", "plus", float("inf"), 0.0, True),
+        Semiring("aggregate_sum", "add", "mul", 0.0, 1.0, False),
+        Semiring("aggregate_max", "max", "mul", float("-inf"), 1.0, False),
+        Semiring("aggregate_min", "min", "mul", float("inf"), 1.0, False),
+        Semiring("aggregate_mul", "mul", "mul", 1.0, 1.0, False),
+    )
+}
+
+# Every workload name a query can carry: the boolean case plus the value
+# semirings.  ``reach`` deliberately has NO Semiring entry — the boolean
+# pipelines never consult the registry, so get_semiring("reach") raising
+# is a bug trap, not a missing feature.
+WORKLOADS: Tuple[str, ...] = ("reach", *SEMIRINGS)
+
+
+def get_semiring(name: str) -> Semiring:
+    try:
+        return SEMIRINGS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown semiring {name!r}; known: {sorted(SEMIRINGS)}"
+        ) from None
+
+
+def or_combine(arr: jax.Array, idx: jax.Array, vals: jax.Array,
+               *, mode: str = "drop") -> jax.Array:
+    """Boolean ⊕: scatter-or, spelled as the ``.max`` scatter it replaces.
+
+    This is the one hook every boolean dedup site in ``operators.py`` now
+    routes through.  It must stay ``arr.at[idx].max(vals)`` — same
+    primitive, same lowering — so the ``reach`` workload remains
+    bit-identical to the pre-refactor operators.
+    """
+    return arr.at[idx].max(vals, mode=mode)
+
+
+def scatter_combine(sr: Semiring, arr: jax.Array, idx: jax.Array,
+                    vals: jax.Array, *, mode: str = "drop") -> jax.Array:
+    """⊕-scatter ``vals`` into ``arr`` at ``idx`` (the dense combine)."""
+    at = arr.at[idx]
+    if sr.combine == "min":
+        return at.min(vals, mode=mode)
+    if sr.combine == "max":
+        return at.max(vals, mode=mode)
+    if sr.combine == "add":
+        return at.add(vals, mode=mode)
+    if sr.combine == "mul":
+        return at.mul(vals, mode=mode)
+    raise ValueError(f"unknown combine {sr.combine!r}")
+
+
+def elem_combine(sr: Semiring, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise ⊕ of two value planes."""
+    if sr.combine == "min":
+        return jnp.minimum(a, b)
+    if sr.combine == "max":
+        return jnp.maximum(a, b)
+    if sr.combine == "add":
+        return a + b
+    if sr.combine == "mul":
+        return a * b
+    raise ValueError(f"unknown combine {sr.combine!r}")
+
+
+def propagate(sr: Semiring, vals: jax.Array, weights: jax.Array) -> jax.Array:
+    """⊗: carry ``vals`` across edges with per-edge ``weights``."""
+    if sr.propagate == "plus":
+        return vals + weights
+    if sr.propagate == "mul":
+        return vals * weights
+    raise ValueError(f"unknown propagate {sr.propagate!r}")

@@ -21,7 +21,8 @@ Dialect grammar (see docs/planner.md for the full write-up)::
               [WHERE depth ('<'|'<=') INT]
     joincond := colref '=' colref [OR colref '=' colref]
     items  := item (',' item)* ; item := '*' | alias'.*' | colref
-              | INT | colref '+' INT
+              | INT | colref '+' (INT | colref)
+              | agg '(' colref '*' colref ')' ; agg := SUM|MIN|MAX|MUL
     root   := INT | ':' name | '?'
 
 Because ``from`` is also a keyword, the edge columns are written quoted
@@ -29,6 +30,16 @@ Because ``from`` is also a keyword, the edge columns are written quoted
 select list is always the keyword.  A literal ``0`` seed item and the
 ``t.depth + 1`` recursive item denote the depth counter; the counter column
 must be named ``depth``.
+
+Weighted accumulators (the semiring workloads, docs/workloads.md):
+
+* ``t.depth + e.w`` in the recursive term generalizes the depth counter to
+  a (min, +) distance — the query becomes weighted SSSP
+  (``workload='shortest_path'``) over the edge-weight column ``w``;
+* ``SUM(t.value * e.qty)`` (or MIN/MAX/MUL) declares a path-aggregation
+  accumulator (``workload='aggregate_sum'`` …) over ``qty``; the
+  accumulator column must be named ``value`` and is seeded with the
+  literal ``1`` (the ⊗-identity) in the seed select.
 """
 from __future__ import annotations
 
@@ -37,7 +48,7 @@ import re
 from typing import Optional, Tuple
 
 __all__ = ["RecursiveCTE", "LogicalQuery", "ParseError", "parse",
-           "normalize", "paper_listing", "EDGE_COLS"]
+           "normalize", "paper_listing", "weighted_listing", "EDGE_COLS"]
 
 EDGE_COLS = ("id", "from", "to", "name")
 
@@ -63,6 +74,8 @@ class RecursiveCTE:
     outer_cols: Tuple[str, ...]        # outer select list ('*' kept literal)
     depth_filter: Optional[int]        # outer WHERE depth <= k (inclusive)
     top_level_join: bool               # Listing-1.3 shape: outer join on id
+    workload: str = "reach"            # semiring workload (from accumulator)
+    weight_col: Optional[str] = None   # ⊗-weight column (weighted only)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +92,8 @@ class LogicalQuery:
     want_cols: Tuple[str, ...]         # value columns the caller asked for
     want_depth: bool                   # expose row depths as a 'depth' column
     union_all: bool                    # as written (pre-canonicalization)
+    workload: str = "reach"            # semiring workload
+    weight_col: Optional[str] = None   # ⊗-weight column (weighted only)
 
 
 # ---------------------------------------------------------------------------
@@ -205,12 +220,17 @@ class _Parser:
             raise ParseError(
                 f"seed predicate on {seed_col!r} contradicts the "
                 f"{direction} recursive join (expected {expect_seed!r})")
+        if rec["workload"].startswith("aggregate_") and not any(
+                item[0] == "value_seed" for item in seed_items):
+            raise ParseError("an aggregation accumulator needs the literal "
+                             "value seed 1 in the seed select")
         return RecursiveCTE(
             cte_name=cte_name, carried_cols=tuple(carried),
             carries_depth=carries_depth, seed_col=seed_col, root=root,
             union_all=union_all, direction=direction,
             max_depth=rec["max_depth"], outer_cols=tuple(outer_cols),
-            depth_filter=depth_filter, top_level_join=top_join)
+            depth_filter=depth_filter, top_level_join=top_join,
+            workload=rec["workload"], weight_col=rec["weight_col"])
 
     def _ident_only(self) -> str:
         t = self._next()
@@ -237,9 +257,12 @@ class _Parser:
             return self._next().text
         return None
 
+    _AGG_FNS = ("sum", "min", "max", "mul")
+
     def _select_items(self) -> list:
         """Items are ('col', name) | ('star', alias|None) | ('depth0',)
-        | ('depth+1',).  Alias qualifiers are stripped."""
+        | ('value_seed',) | ('depth+1',) | ('depth+w', col)
+        | ('agg', fn, col).  Alias qualifiers are stripped."""
         items = [self._select_item()]
         while self._accept("punct", ","):
             items.append(self._select_item())
@@ -251,22 +274,48 @@ class _Parser:
         t = self._peek()
         if t is not None and t.kind == "num":
             self._next()
-            if t.text != "0":
-                raise ParseError("the only literal select item is the "
-                                 "depth seed 0")
-            return ("depth0",)
+            if t.text == "0":
+                return ("depth0",)
+            if t.text == "1":
+                return ("value_seed",)      # ⊗-identity seed for the value
+            raise ParseError("the only literal select items are the depth "
+                             "seed 0 and the value seed 1")
+        nxt = self._peek(1)
+        if (t is not None and t.kind == "name" and t.text in self._AGG_FNS
+                and nxt is not None and nxt.kind == "punct"
+                and nxt.text == "("):
+            return self._agg_item()
         name = self._colref()
         nxt = self._peek()
         if nxt is not None and nxt.kind == "punct" and nxt.text == "*":
             # alias '.' '*' was parsed as colref consuming '.'? handled below
             raise ParseError("unexpected '*'")
         if self._accept("punct", "+"):
-            one = self._expect("num")
-            if name != "depth" or one.text != "1":
-                raise ParseError("the only arithmetic select item is "
-                                 "depth + 1")
-            return ("depth+1",)
+            if name != "depth":
+                raise ParseError("the only arithmetic select items are "
+                                 "depth + 1 and depth + <weight column>")
+            t = self._peek()
+            if t is not None and t.kind == "num":
+                one = self._next()
+                if one.text != "1":
+                    raise ParseError("the depth counter increments by 1; "
+                                     "a weight is a column reference")
+                return ("depth+1",)
+            return ("depth+w", self._colref())
         return ("col", name)
+
+    def _agg_item(self):
+        """``AGG(t.value * e.w)`` — a path-aggregation accumulator."""
+        fn = self._next().text
+        self._expect("punct", "(")
+        left = self._colref()
+        if left != "value":
+            raise ParseError(f"the aggregation accumulator must be named "
+                             f"'value', got {left!r}")
+        self._expect("punct", "*")
+        weight = self._colref()
+        self._expect("punct", ")")
+        return ("agg", fn, weight)
 
     def _colref(self) -> str:
         """[alias '.'] column — returns the bare column name; ``alias.*``
@@ -294,7 +343,19 @@ class _Parser:
 
     def _recursive_term(self, cte_name: str) -> dict:
         self._kw("select")
-        self._select_items()               # carried cols re-checked via CTE
+        items = self._select_items()       # carried cols re-checked via CTE
+        workload, weight_col = "reach", None
+        for item in items:
+            if item[0] == "depth+w":
+                w, c = "shortest_path", item[1]
+            elif item[0] == "agg":
+                w, c = "aggregate_" + item[1], item[2]
+            else:
+                continue
+            if workload != "reach":
+                raise ParseError("at most one weighted accumulator per "
+                                 "recursive term")
+            workload, weight_col = w, c
         self._kw("from")
         first = self._name()
         first_alias = self._opt_alias()
@@ -313,7 +374,8 @@ class _Parser:
         max_depth = None
         if self._accept("kw", "where"):
             max_depth = self._depth_bound()
-        return {"direction": direction, "max_depth": max_depth}
+        return {"direction": direction, "max_depth": max_depth,
+                "workload": workload, "weight_col": weight_col}
 
     def _qualified(self) -> tuple[Optional[str], str]:
         first = self._name()
@@ -410,7 +472,9 @@ class _Parser:
     def _carried(named_cols: Optional[list[str]],
                  seed_items: list) -> tuple[list[str], bool]:
         if named_cols is not None:
-            carried = [c for c in named_cols if c != "depth"]
+            # 'value' is the synthesized accumulator column, not a carried
+            # edge column
+            carried = [c for c in named_cols if c not in ("depth", "value")]
             return carried, "depth" in named_cols
         carried, depth = [], False
         for item in seed_items:
@@ -418,6 +482,8 @@ class _Parser:
                 carried.append(item[1])
             elif item[0] in ("depth0", "depth+1"):
                 depth = True
+            elif item[0] == "value_seed":
+                pass                        # accumulator column, not carried
             else:
                 raise ParseError("SELECT * is not allowed inside the CTE; "
                                  "name the carried columns")
@@ -479,7 +545,9 @@ def normalize(ast: RecursiveCTE, ds, *, root=None,
     want_depth = "depth" in want or (
         "*" in ast.outer_cols and not ast.top_level_join
         and ast.carries_depth)
-    want = [c for c in want if c != "depth"]
+    # 'depth' maps to row_depths; 'value' to the semiring value plane the
+    # physical choice attaches — neither is a stored edge column
+    want = [c for c in want if c not in ("depth", "value")]
     # N covers every referenced payload, including explicit outer extras
     payloads = payload_n(want)
 
@@ -488,6 +556,11 @@ def normalize(ast: RecursiveCTE, ds, *, root=None,
         if c not in known:
             raise ParseError(f"unknown column {c!r}; the edge table has "
                              f"{sorted(known)}")
+    workload = getattr(ast, "workload", "reach")
+    weight_col = getattr(ast, "weight_col", None)
+    if workload != "reach" and weight_col not in known:
+        raise ParseError(f"unknown weight column {weight_col!r}; the edge "
+                         f"table has {sorted(known)}")
 
     stats = ds.stats(ast.direction)
     dedup = (not ast.union_all) or stats.is_forest
@@ -508,7 +581,8 @@ def normalize(ast: RecursiveCTE, ds, *, root=None,
     return LogicalQuery(
         root=root, max_depth=max_depth, payload_cols=payloads, dedup=dedup,
         direction=ast.direction, want_cols=tuple(want),
-        want_depth=want_depth, union_all=ast.union_all)
+        want_depth=want_depth, union_all=ast.union_all,
+        workload=workload, weight_col=weight_col)
 
 
 # ---------------------------------------------------------------------------
@@ -542,3 +616,33 @@ def paper_listing(n: int, *, root: int = 0, depth: int = 10,
     if n == 3:
         return body + "SELECT e.* FROM t JOIN edges AS e ON t.id = e.id"
     return body + "SELECT * FROM t"
+
+
+def weighted_listing(workload: str, *, root: int = 0, depth: int = 10,
+                     weight_col: str = "w") -> str:
+    """The weighted-workload query shapes (docs/workloads.md): SSSP spells
+    the accumulator as a generalized depth counter (``t.depth + e.w``);
+    the aggregations carry an explicit ``value`` column seeded with the
+    ⊗-identity ``1`` and folded by ``AGG(t.value * e.w)``."""
+    if workload == "shortest_path":
+        return (f'WITH RECURSIVE t ("to", depth) AS (\n'
+                f'  SELECT "to", 0 FROM edges WHERE "from" = {root}\n'
+                f'  UNION\n'
+                f'  SELECT e."to", t.depth + e.{weight_col}\n'
+                f'  FROM edges AS e JOIN t ON e."from" = t."to"\n'
+                f'  WHERE t.depth < {depth}\n'
+                f')\nSELECT * FROM t')
+    if workload.startswith("aggregate_"):
+        fn = workload[len("aggregate_"):].upper()
+        if workload not in ("aggregate_sum", "aggregate_min",
+                            "aggregate_max", "aggregate_mul"):
+            raise ValueError(f"no weighted listing for {workload!r}")
+        return (f'WITH RECURSIVE t ("to", value, depth) AS (\n'
+                f'  SELECT "to", 1, 0 FROM edges WHERE "from" = {root}\n'
+                f'  UNION ALL\n'
+                f'  SELECT e."to", {fn}(t.value * e.{weight_col}), '
+                f't.depth + 1\n'
+                f'  FROM edges AS e JOIN t ON e."from" = t."to"\n'
+                f'  WHERE t.depth < {depth}\n'
+                f')\nSELECT * FROM t')
+    raise ValueError(f"no weighted listing for {workload!r}")

@@ -64,22 +64,25 @@ def stats_digest(stats: GraphStats) -> str:
 
 def plan_signature(label: str, direction: str, caps, digest: str,
                    lanes: int = 1, shape: Tuple = (),
-                   mix: Tuple = ()) -> Tuple:
+                   mix: Tuple = (), workload: str = "reach") -> Tuple:
     """The calibration key of one served plan: engine label (kernel
     included), direction, the bucket's caps, the graph-stats digest, the
     dispatched lane count, the query-shape axes (max_depth, payloads,
-    dedup, ...), and — for direction-optimizing plans — the predicted
-    per-level push/pull ``mix``.  Lanes and shape matter: a 1-lane and an
-    8-lane dispatch of the same pipeline do different amounts of work, and
-    two query shapes clamped to the same caps must not pool their
-    latencies under one signature.  The mix matters for the same reason:
-    a push-heavy and a pull-heavy execution of the SAME diropt pipeline
-    move very different bytes, and pooling them would corrupt the
-    per-signature means the refit validator trusts.  Shape and mix are
-    canonicalized to strings so signatures stay flat primitives and
-    round-trip JSON (the plan store) exactly."""
+    dedup, ...), the semiring ``workload``, and — for
+    direction-optimizing plans — the predicted per-level push/pull
+    ``mix``.  Lanes and shape matter: a 1-lane and an 8-lane dispatch of
+    the same pipeline do different amounts of work, and two query shapes
+    clamped to the same caps must not pool their latencies under one
+    signature.  The mix matters for the same reason: a push-heavy and a
+    pull-heavy execution of the SAME diropt pipeline move very different
+    bytes, and pooling them would corrupt the per-signature means the
+    refit validator trusts.  So does the workload: a weighted traversal
+    of the same engine moves the value plane's extra bytes and can run
+    extra correction levels, so it must not pool with boolean reach.
+    Shape and mix are canonicalized to strings so signatures stay flat
+    primitives and round-trip JSON (the plan store) exactly."""
     return (label, direction, int(caps.frontier), int(caps.result), digest,
-            int(lanes), repr(tuple(shape)), repr(tuple(mix)))
+            int(lanes), repr(tuple(shape)), repr(tuple(mix)), str(workload))
 
 
 class Observation(NamedTuple):
@@ -138,7 +141,7 @@ _MEASURE_E = 1024
 _MEASURE_CAP = 512
 _MEASURE_REPEAT = 5
 
-KERNEL_NAMES = ("frontier_expand", "frontier_pull")
+KERNEL_NAMES = ("frontier_expand", "frontier_pull", "spmm_segment")
 
 
 def set_measured_kernel_factor(value: Optional[float], *,
@@ -233,6 +236,34 @@ def _measure_pull_factor() -> float:
     return float(np.clip(t_kern / t_plain, 1e-3, 1e6))
 
 
+def _measure_spmm_factor() -> float:
+    """Time the Pallas ``spmm_segment`` dense ⊕-combine against the plain
+    XLA (sum, ×) scatter it replaces inside ``WeightedDenseStep``."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(0, _MEASURE_V, _MEASURE_E), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, _MEASURE_V, _MEASURE_E), jnp.int32)
+    w = jnp.asarray(rng.random(_MEASURE_E), jnp.float32)
+    fval = jnp.asarray(rng.random(_MEASURE_V), jnp.float32)
+    interpret = _backend() != "tpu"
+
+    from repro.kernels.spmm_segment import spmm_segment
+
+    def plain(v):
+        return jnp.zeros((_MEASURE_V,), jnp.float32).at[dst].add(
+            v[src] * w, mode="drop")
+
+    def kern(v):
+        return spmm_segment(v[:, None], src, dst, w, _MEASURE_V,
+                            use_pallas=True, interpret=interpret)[:, 0]
+
+    t_plain = max(_median_us(jax.jit(plain), fval), 1e-3)
+    t_kern = max(_median_us(jax.jit(kern), fval), 1e-3)
+    return float(np.clip(t_kern / t_plain, 1e-3, 1e6))
+
+
 def measured_kernel_factor(*, kernel: str = "frontier_expand",
                            refresh: bool = False) -> float:
     """MEASURE the relative cost of a Pallas kernel vs its XLA counterpart
@@ -243,7 +274,9 @@ def measured_kernel_factor(*, kernel: str = "frontier_expand",
 
     ``frontier_expand`` times the VMEM-tiled expansion vs the XLA
     two-phase expansion; ``frontier_pull`` times the bottom-up
-    membership-test kernel vs the XLA reverse-CSR pull.  This replaces the
+    membership-test kernel vs the XLA reverse-CSR pull; ``spmm_segment``
+    times the Pallas dense ⊕-combine vs the plain (sum, ×) scatter the
+    weighted dense step otherwise runs.  This replaces the
     old static 0.7x-on-TPU / 200x-elsewhere constant: on a real TPU the
     measurement reflects the fused kernel, on CPU it reflects interpret
     mode (large, correctly steering the planner away off-TPU)."""
@@ -253,8 +286,9 @@ def measured_kernel_factor(*, kernel: str = "frontier_expand",
     key = (_backend(), kernel)
     if key in _MEASURED_KERNEL_FACTORS and not refresh:
         return _MEASURED_KERNEL_FACTORS[key]
-    factor = (_measure_expand_factor() if kernel == "frontier_expand"
-              else _measure_pull_factor())
+    factor = {"frontier_expand": _measure_expand_factor,
+              "frontier_pull": _measure_pull_factor,
+              "spmm_segment": _measure_spmm_factor}[kernel]()
     _MEASURED_KERNEL_FACTORS[key] = factor
     return factor
 

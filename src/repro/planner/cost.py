@@ -216,9 +216,11 @@ def pipeline_cost(pipeline: Pipeline, stats: GraphStats, *, row_bytes: int,
                        col_bytes=col_bytes, kernel_factor=1.0)
     result_rows = stats.total_edges(pipeline.max_depth)
     all_ops = (pipeline.seed, *pipeline.ops, pipeline.finisher)
-    # only a plugged expansion kernel makes byte estimates factor-
-    # sensitive; everything else is priced in one walk
+    # only a plugged expansion kernel (or the dense ⊕-combine routed
+    # through spmm_segment) makes byte estimates factor-sensitive;
+    # everything else is priced in one walk
     has_kernel = any(getattr(op, "expand_fn", None) is not None
+                     or getattr(op, "use_kernel", False)
                      for op in all_ops)
 
     def total_env(rows):

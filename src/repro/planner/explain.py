@@ -37,8 +37,14 @@ the actual per-level edge counts are histogrammed from ``row_depths``
 substituted into the same :func:`~repro.planner.cost.pipeline_cost`
 walk the optimizer priced with — predicted and actual columns are the
 one cost model evaluated at predicted vs. measured cardinalities.
-v1..v3 documents still load through
-:func:`repro.planner.plan_store.migrate_plan_doc`.
+Schema version 5 records the semiring value plane: the logical section
+carries ``workload`` (the semiring name, ``reach`` for boolean BFS) and
+``weight_col`` (the edge-weight column of a weighted traversal), and every
+candidate records the ``semiring`` its pipeline runs under — so a plan
+store keyed on query shape can never serve a boolean plan to a weighted
+query or vice versa.  v1..v4 documents still load through
+:func:`repro.planner.plan_store.migrate_plan_doc` (they default to
+``workload='reach'``).
 """
 from __future__ import annotations
 
@@ -58,7 +64,7 @@ from .stats import _bfs_profile
 __all__ = ["analyze_result", "explain", "explain_analyze", "explain_json",
            "render_analyze", "render_report", "to_json"]
 
-PLAN_SCHEMA_VERSION = 4
+PLAN_SCHEMA_VERSION = 5
 
 
 def _fmt_bytes(b: float) -> str:
@@ -135,6 +141,8 @@ def _choice_json(c: PhysicalChoice, chosen: bool) -> dict:
         "label": c.label,
         "engine": c.engine,
         "use_kernel": c.use_kernel,
+        # v5: the semiring the candidate's pipeline runs under
+        "semiring": getattr(c.pipeline, "semiring", "reach"),
         "chosen": chosen,
         "caps": {"frontier": c.query.caps.frontier,
                  "result": c.query.caps.result},
@@ -175,6 +183,9 @@ def to_json(report: PlannerReport,
             "want_cols": list(lg.want_cols),
             "want_depth": lg.want_depth,
             "union_all": lg.union_all,
+            # v5: the semiring value plane axes
+            "workload": getattr(lg, "workload", "reach"),
+            "weight_col": getattr(lg, "weight_col", None),
         },
         "stats": {
             "direction": st.direction,

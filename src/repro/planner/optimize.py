@@ -27,8 +27,9 @@ from typing import Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.engine import (ENGINE_NAMES, Dataset, PLAN_BUILDERS,
-                               RecursiveQuery, run_query, run_query_batch,
-                               run_query_buckets)
+                               RecursiveQuery, WEIGHTED_ENGINE_NAMES,
+                               build_plan, query_context, run_query,
+                               run_query_batch, run_query_buckets)
 from repro.core.operators import (BFSResult, EngineCaps, Pipeline, execute,
                                   execute_batch)
 from repro.core.recursive import precursive_plan
@@ -88,7 +89,29 @@ class PhysicalChoice:
                            f"(produced {sorted(r.values)})")
         if self.logical.want_depth:
             values["depth"] = r.row_depths
+        if (getattr(self.logical, "workload", "reach") != "reach"
+                and r.vertex_values is not None):
+            values["value"] = self._row_values(r)
         return r._replace(values=values)
+
+    def _row_values(self, r: BFSResult):
+        """The per-row ``value`` output column: each emitted row reports its
+        TARGET vertex's converged accumulator (gathered from the value
+        plane after the fixed point, the weighted analogue of late
+        materialization).  The fused bidirectional view has no single
+        target column, so ``both`` exposes the value plane only through
+        ``vertex_values``."""
+        import jax.numpy as jnp
+
+        tgt_col = {"outbound": "to", "inbound": "from"}.get(
+            self.logical.direction)
+        if tgt_col is None or tgt_col not in r.values:
+            return None
+        nv = r.vertex_values.shape[-1]
+        tgt = jnp.clip(r.values[tgt_col].astype(jnp.int32), 0, nv - 1)
+        if r.vertex_values.ndim == 2:          # vmap-batched lanes
+            return jnp.take_along_axis(r.vertex_values, tgt, axis=1)
+        return r.vertex_values[tgt]
 
     def _resolve_roots(self, roots):
         """Default to the query's literal root and coerce to int32 — the
@@ -325,6 +348,16 @@ def bucket_roots(ds: Dataset, roots, *, direction: str, max_depth: int,
 
 
 def _illegal_reason(engine: str, logical: LogicalQuery) -> Optional[str]:
+    if getattr(logical, "workload", "reach") != "reach":
+        if engine not in WEIGHTED_ENGINE_NAMES:
+            return ("no value plane: weighted workloads run on the "
+                    f"semiring engines {WEIGHTED_ENGINE_NAMES}")
+        if engine == "bitmap" and logical.direction == "both":
+            return ("the dense weighted step is single-direction; the "
+                    "fused bidirectional view expands positionally")
+        # the boolean-dedup legality axes below do not apply: weighted
+        # pipelines have no VisitedDedup (the ⊕-combine subsumes it)
+        return None
     if logical.direction != "outbound" and engine.startswith("rowstore"):
         return ("outbound-only: the row-store emulation models the "
                 "PostgreSQL baseline")
@@ -385,12 +418,19 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
     if caps is None:
         caps = default_caps(stats, logical)
 
+    workload = getattr(logical, "workload", "reach")
+    weight_col = getattr(logical, "weight_col", None)
     candidates, skipped = [], []
     if include_kernel and logical.direction == "both":
         skipped.append((KERNEL_LABEL,
                         "the Pallas expand kernel walks one direction CSR; "
                         "the fused bidirectional view expands through "
                         "expand_frontier_both"))
+        include_kernel = False
+    if include_kernel and workload != "reach":
+        skipped.append((KERNEL_LABEL,
+                        "the expand kernel is boolean-only; the weighted "
+                        "dense combine has its own spmm_segment routing"))
         include_kernel = False
     consts = resolve_constants(constants, need_kernel=include_kernel)
 
@@ -404,9 +444,9 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
         q = RecursiveQuery(engine=engine, max_depth=logical.max_depth,
                            payload_cols=logical.payload_cols, caps=caps,
                            dedup=logical.dedup,
-                           direction=logical.direction)
-        pipeline = _stamp_switch_thresholds(PLAN_BUILDERS[engine](q),
-                                            consts)
+                           direction=logical.direction,
+                           workload=workload, weight_col=weight_col)
+        pipeline = _stamp_switch_thresholds(build_plan(q), consts)
         cost = pipeline_cost(pipeline, stats, row_bytes=row_bytes,
                              col_bytes=col_bytes, constants=consts)
         candidates.append(PhysicalChoice(engine=engine, query=q,

@@ -42,7 +42,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.engine import Dataset, PLAN_BUILDERS, RecursiveQuery
+from repro.core.engine import Dataset, RecursiveQuery, build_plan
 from repro.core.operators import EngineCaps
 from repro.core.recursive import precursive_plan
 
@@ -87,10 +87,13 @@ def logical_to_json(lg: LogicalQuery) -> dict:
         "want_cols": list(lg.want_cols),
         "want_depth": lg.want_depth,
         "union_all": lg.union_all,
+        "workload": getattr(lg, "workload", "reach"),
+        "weight_col": getattr(lg, "weight_col", None),
     }
 
 
 def logical_from_json(doc: dict) -> LogicalQuery:
+    wc = doc.get("weight_col")
     return LogicalQuery(
         root=(None if doc["root"] is None else int(doc["root"])),
         max_depth=int(doc["max_depth"]),
@@ -99,7 +102,9 @@ def logical_from_json(doc: dict) -> LogicalQuery:
         direction=str(doc["direction"]),
         want_cols=tuple(str(c) for c in doc["want_cols"]),
         want_depth=bool(doc["want_depth"]),
-        union_all=bool(doc["union_all"]))
+        union_all=bool(doc["union_all"]),
+        workload=str(doc.get("workload", "reach")),
+        weight_col=(None if wc is None else str(wc)))
 
 
 def stats_to_json(st: GraphStats) -> dict:
@@ -155,8 +160,8 @@ def stats_from_json(doc: dict) -> GraphStats:
 # ---------------------------------------------------------------------------
 
 def migrate_plan_doc(doc: dict) -> dict:
-    """Upgrade one machine-readable plan document to ``schema_version`` 4
-    (a copy; the input is not mutated).  v4 documents pass through.
+    """Upgrade one machine-readable plan document to ``schema_version`` 5
+    (a copy; the input is not mutated).  v5 documents pass through.
 
     v1 -> v2: fill the rehydration-only stats fields and fold the v1
     writer's statically-factored kernel bytes into ``plain_bytes``.
@@ -165,11 +170,14 @@ def migrate_plan_doc(doc: dict) -> dict:
     the cost constants gain the default ``pull_alpha``/``pull_beta``
     thresholds (:meth:`CostConstants.from_json` defaults them).
     v3 -> v4: the document gains the top-level ``analyze`` section
-    (``null`` — an older writer never reconciled predicted vs. actual)."""
+    (``null`` — an older writer never reconciled predicted vs. actual).
+    v4 -> v5: the logical section gains ``workload='reach'`` /
+    ``weight_col=null`` and every candidate gains ``semiring='reach'`` —
+    an older writer only ever planned boolean BFS."""
     v = doc.get("schema_version")
     if v == PLAN_SCHEMA_VERSION:
         return doc
-    if v not in (1, 2, 3):
+    if v not in (1, 2, 3, 4):
         raise ValueError(f"unsupported plan schema_version {v!r} "
                          f"(this reader handles 1..{PLAN_SCHEMA_VERSION})")
     out = copy.deepcopy(doc)
@@ -184,6 +192,9 @@ def migrate_plan_doc(doc: dict) -> dict:
         st.setdefault("root_profiles", [])
         st.setdefault("level_walk_edges", [])
     out.setdefault("cost_constants", DEFAULT_CONSTANTS.to_json())
+    lg = out.get("logical", {})
+    lg.setdefault("workload", "reach")           # v<=4: boolean BFS only
+    lg.setdefault("weight_col", None)
     for c in out.get("candidates", []):
         cost = c.get("cost", {})
         # a v1 writer folded any (static) kernel factor into total_bytes;
@@ -191,6 +202,7 @@ def migrate_plan_doc(doc: dict) -> dict:
         cost.setdefault("plain_bytes", cost.get("total_bytes", 0.0))
         cost.setdefault("kernel_bytes", 0.0)
         cost.setdefault("level_dirs", [])        # v<=2: push-only plans
+        c.setdefault("semiring", "reach")        # v<=4: no value plane
     out.setdefault("analyze", None)              # v<=3: never analyzed
     return out
 
@@ -209,12 +221,16 @@ def _choice_from_json(cj: dict, logical: LogicalQuery) -> PhysicalChoice:
     use_kernel = bool(cj.get("use_kernel", False))
     q = RecursiveQuery(engine=engine, max_depth=logical.max_depth,
                        payload_cols=logical.payload_cols, caps=caps,
-                       dedup=logical.dedup, direction=logical.direction)
+                       dedup=logical.dedup, direction=logical.direction,
+                       workload=getattr(logical, "workload", "reach"),
+                       weight_col=getattr(logical, "weight_col", None))
     if use_kernel:
         pipeline = precursive_plan(caps, q.max_depth, q.out_cols, q.dedup,
                                    q.direction, expand_fn=kernel_expand_fn())
     else:
-        pipeline = PLAN_BUILDERS[engine](q)
+        # build_plan routes weighted workloads to the semiring pipelines
+        # and reach through the same PLAN_BUILDERS registry as before
+        pipeline = build_plan(q)
     cost = cj["cost"]
     plan_cost = PlanCost(
         total_bytes=float(cost["total_bytes"]),
@@ -267,6 +283,7 @@ def _choice_json(c: PhysicalChoice) -> dict:
         "label": c.label,
         "engine": c.engine,
         "use_kernel": c.use_kernel,
+        "semiring": getattr(c.pipeline, "semiring", "reach"),
         "caps": {"frontier": c.query.caps.frontier,
                  "result": c.query.caps.result},
         "cost": {"est_us": c.cost.est_us,
@@ -333,7 +350,7 @@ def load_store(path: str) -> dict:
         raise ValueError(f"{path} is not a plan store "
                          f"(kind={doc.get('kind')!r})")
     v = doc.get("schema_version")
-    if v not in (1, 2, 3, PLAN_SCHEMA_VERSION):
+    if v not in (1, 2, 3, 4, PLAN_SCHEMA_VERSION):
         raise ValueError(f"unsupported plan-store schema_version {v!r}")
     doc = dict(doc)
     doc["schema_version"] = PLAN_SCHEMA_VERSION

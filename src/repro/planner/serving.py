@@ -77,7 +77,8 @@ def shape_key(logical: LogicalQuery) -> ShapeKey:
     requests that differ only in their root batch share one planning pass."""
     return (logical.max_depth, logical.payload_cols, logical.dedup,
             logical.direction, logical.want_cols, logical.want_depth,
-            logical.union_all)
+            logical.union_all, getattr(logical, "workload", "reach"),
+            getattr(logical, "weight_col", None))
 
 
 @dataclasses.dataclass
@@ -289,6 +290,7 @@ class ServingSession:
         work)."""
         digest = stats_digest(entry.report.stats)
         shape = shape_key(entry.report.logical)
+        workload = getattr(entry.report.logical, "workload", "reach")
 
         def _observe(t):
             self._m_bucket.observe(t.elapsed_us)
@@ -315,7 +317,7 @@ class ServingSession:
             self.calibrator.observe(
                 plan_signature(c.label, c.query.direction, t.caps, digest,
                                lanes=lanes, shape=shape,
-                               mix=c.cost.level_dirs),
+                               mix=c.cost.level_dirs, workload=workload),
                 levels=c.cost.levels,
                 plain_bytes=lanes * c.cost.plain_bytes,
                 kernel_bytes=lanes * c.cost.kernel_bytes,

@@ -20,6 +20,15 @@ RELATIONS that must hold between traversals regardless of the graph:
   end, i.e. its edges are the depth-0 rows).
 * **planner parity** — the planner-chosen plan is row-for-row (edge id +
   depth multiset) equal to EVERY forced engine.
+* **weight scaling** — multiplying every edge weight by ``c > 0`` scales
+  every (min, +) shortest-path distance by exactly ``c`` (the semiring
+  value plane is homogeneous in the weights);
+* **unit weights degenerate to BFS** — with all weights 1, shortest-path
+  distances equal first-discovery BFS depths (+1: the root's out-edges
+  are depth-0 rows but 1-hop paths), for every weighted engine;
+* **DAG aggregation** — on an acyclic graph, ``aggregate_sum`` equals the
+  per-path ⊕-fold of ⊗-products computed by a python reference (⊗
+  distributes over ⊕, so the per-level combine must not change the answer).
 
 The deterministic seeded slice always runs; the hypothesis property (real
 package or the vendored fallback engine) extends the seed set.
@@ -28,8 +37,8 @@ import numpy as np
 import pytest
 
 from repro.core import EngineCaps
-from repro.core.engine import (ENGINE_NAMES, Dataset, RecursiveQuery,
-                               run_query)
+from repro.core.engine import (ENGINE_NAMES, WEIGHTED_ENGINE_NAMES, Dataset,
+                               RecursiveQuery, run_query)
 from repro.core.table import ColumnTable
 from repro.planner import plan
 
@@ -40,13 +49,15 @@ def _legal(engine, direction):
     return direction == "outbound" or not engine.startswith("rowstore")
 
 
-def _edge_dataset(src, dst, num_vertices):
+def _edge_dataset(src, dst, num_vertices, w=None):
     e = len(src)
     cols = {
         "id": np.arange(e, dtype=np.int32),
         "from": np.asarray(src, np.int32),
         "to": np.asarray(dst, np.int32),
         "name": np.zeros((e, 4), np.float32)}
+    if w is not None:
+        cols["w"] = np.asarray(w, np.float32)
     return Dataset.prepare(ColumnTable.from_numpy(cols), num_vertices)
 
 
@@ -261,6 +272,135 @@ def test_planner_matches_forced_engines_seeded(seed):
 
 
 # ---------------------------------------------------------------------------
+# 5. weighted value-plane properties (the semiring refactor's contract)
+# ---------------------------------------------------------------------------
+
+def _random_weighted_graph(seed):
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(6, 30))
+    e = int(rng.integers(4, 3 * v))
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    w = rng.uniform(0.25, 4.0, e)
+    depth = int(rng.integers(2, 6))
+    root = int(rng.integers(0, v))
+    return src, dst, w, v, root, depth
+
+
+def _sssp_query(engine, max_depth, caps):
+    return RecursiveQuery(engine=engine, max_depth=max_depth,
+                          payload_cols=0, caps=caps, dedup=True,
+                          workload="shortest_path", weight_col="w")
+
+
+def _check_weight_scaling(seed):
+    """dist(c * w) == c * dist(w): the (min, +) plane is homogeneous."""
+    src, dst, w, v, root, depth = _random_weighted_graph(seed)
+    c = 0.5 + (seed % 7)
+    caps = EngineCaps(frontier=len(src) + 16, result=8 * len(src) + 32)
+    for eng in WEIGHTED_ENGINE_NAMES:
+        base = run_query(_sssp_query(eng, depth, caps),
+                         _edge_dataset(src, dst, v, w=w), root)
+        scaled = run_query(_sssp_query(eng, depth, caps),
+                           _edge_dataset(src, dst, v, w=c * w), root)
+        a = np.asarray(base.vertex_values)
+        b = np.asarray(scaled.vertex_values)
+        fa, fb = np.isfinite(a), np.isfinite(b)
+        assert (fa == fb).all(), (eng, seed)
+        np.testing.assert_allclose(b[fb], c * a[fa], rtol=1e-5,
+                                   err_msg=f"{eng} seed={seed}")
+
+
+def _check_unit_weights_are_bfs(seed):
+    """All-ones weights: shortest-path distance == BFS hop count, i.e.
+    first-discovery row depth + 1, for every weighted engine."""
+    src, dst, v, root, depth = _random_graph(seed)
+    e = len(src)
+    ds = _edge_dataset(src, dst, v, w=np.ones(e))
+    caps = EngineCaps(frontier=e + 16, result=8 * e + 32)
+    levels = _bfs_edge_levels(src, dst, root, depth, v)
+    disc = {root: -1}
+    for i, d in levels.items():
+        t = int(dst[i])
+        if d < disc.get(t, depth + 1):
+            disc[t] = d
+    for eng in WEIGHTED_ENGINE_NAMES:
+        vv = np.asarray(run_query(_sssp_query(eng, depth, caps),
+                                  ds, root).vertex_values)
+        for vertex in range(v):
+            if vertex in disc:
+                assert vv[vertex] == disc[vertex] + 1, (eng, seed, vertex)
+            else:
+                assert not np.isfinite(vv[vertex]), (eng, seed, vertex)
+
+
+def _dag_path_fold(src, dst, w, root, max_depth):
+    """Reference per-path UNION ALL fold on a DAG: for every vertex, the
+    sum over root-paths of at most ``max_depth + 1`` edges of the product
+    of edge weights (the answer ⊗-distributivity promises the per-level
+    combine reproduces)."""
+    adj = {}
+    for i, (s, d) in enumerate(zip(src, dst)):
+        adj.setdefault(int(s), []).append((int(d), float(w[i])))
+    total = {root: 1.0}
+
+    def rec(u, prod, used):
+        if used > max_depth:
+            return
+        for t, wt in adj.get(u, ()):
+            total[t] = total.get(t, 0.0) + prod * wt
+            rec(t, prod * wt, used + 1)
+
+    rec(root, 1.0, 0)
+    return total
+
+
+def _check_dag_aggregation(seed):
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(6, 24))
+    e = int(rng.integers(4, 3 * v))
+    a = rng.integers(0, v, e)
+    b = rng.integers(0, v, e)
+    keep = a != b
+    src = np.minimum(a, b)[keep].astype(np.int32)   # edges point up: a DAG
+    dst = np.maximum(a, b)[keep].astype(np.int32)
+    if len(src) == 0:
+        return
+    w = rng.uniform(0.25, 2.0, len(src))
+    depth = int(rng.integers(2, 5))
+    root = int(src[0])
+    want = _dag_path_fold(src, dst, w, root, depth)
+    ds = _edge_dataset(src, dst, v, w=w)
+    caps = EngineCaps(frontier=len(src) + 16, result=16 * len(src) + 64)
+    for eng in WEIGHTED_ENGINE_NAMES:
+        q = RecursiveQuery(engine=eng, max_depth=depth, payload_cols=0,
+                           caps=caps, dedup=False,
+                           workload="aggregate_sum", weight_col="w")
+        r = run_query(q, ds, root)
+        assert not bool(r.overflow), (eng, seed)
+        vv = np.asarray(r.vertex_values)
+        for vertex, val in want.items():
+            np.testing.assert_allclose(vv[vertex], val, rtol=1e-5,
+                                       err_msg=f"{eng} seed={seed} "
+                                               f"vertex={vertex}")
+
+
+@pytest.mark.parametrize("seed", [8, 11])
+def test_weight_scaling_seeded(seed):
+    _check_weight_scaling(seed)
+
+
+@pytest.mark.parametrize("seed", [9, 13])
+def test_unit_weights_are_bfs_seeded(seed):
+    _check_unit_weights_are_bfs(seed)
+
+
+@pytest.mark.parametrize("seed", [10, 14])
+def test_dag_aggregation_seeded(seed):
+    _check_dag_aggregation(seed)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis extension (real package, or the vendored fallback engine)
 # ---------------------------------------------------------------------------
 
@@ -288,3 +428,18 @@ else:
     @given(st.integers(0, 2**31 - 1))
     def test_planner_matches_forced_engines_random(seed):
         _check_planner_parity(seed)
+
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_weight_scaling_random(seed):
+        _check_weight_scaling(seed)
+
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_unit_weights_are_bfs_random(seed):
+        _check_unit_weights_are_bfs(seed)
+
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_dag_aggregation_random(seed):
+        _check_dag_aggregation(seed)

@@ -251,7 +251,7 @@ def test_v3_plan_doc_and_store_load_under_v4_reader(tmp_path):
     del v3["analyze"]
 
     migrated = migrate_plan_doc(v3)
-    assert migrated["schema_version"] == PLAN_SCHEMA_VERSION == 4
+    assert migrated["schema_version"] == PLAN_SCHEMA_VERSION == 5
     assert migrated["analyze"] is None
     # everything else survives untouched (the v4 writer added one slot)
     assert {k: v for k, v in migrated.items()

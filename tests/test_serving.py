@@ -410,7 +410,7 @@ def test_plan_json_schema_and_roundtrip(tree_ds):
     doc = session.plan_json(sql, [0, 1, 2])
     text = json.dumps(doc)                     # strict-JSON serializable
     doc2 = json.loads(text)
-    assert doc2["schema_version"] == 4
+    assert doc2["schema_version"] == 5
     assert doc2["analyze"] is None      # v4: filled by explain_analyze only
     assert doc2["chosen"] in [c["label"] for c in doc2["candidates"]]
     assert sum(c["chosen"] for c in doc2["candidates"]) == 1
