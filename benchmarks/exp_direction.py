@@ -16,9 +16,13 @@ Cells:
   interleaved) so shared-host noise cancels.  The cell also reports the
   push/pull crossover level read from ``BFSResult.level_dirs`` — the
   measured counterpart of the plan's predicted ``level_dirs``.
-* ``exp_direction/diropt_crossover/dD`` — the switch decisions on the
-  quick TREE graph (in-degree 1: the predicate correctly never pulls
-  until the frontier out-weighs the unvisited remainder).
+* ``exp_direction/diropt_crossover/dD`` — the measured push->pull switch
+  decisions on a SMALL dense graph whose frontier occupancy actually
+  crosses the pull threshold.  (An earlier revision ran this cell on the
+  quick tree graph, whose in-degree-1 frontiers never out-weigh the
+  unvisited remainder — the cell dutifully reported ``crossover_level=-1,
+  pull_levels=0`` forever, gating nothing.)  The cell now RAISES if no
+  pull level executes: a dead crossover cell is a bench bug, not a datum.
 """
 from __future__ import annotations
 
@@ -30,8 +34,7 @@ from repro.core import EngineCaps
 from repro.core.engine import Dataset, RecursiveQuery, run_query
 from repro.core.table import ColumnTable
 
-from .bench_util import emit, level_caps, time_call, time_ratio, \
-    tree_dataset
+from .bench_util import emit, time_call, time_ratio, tree_dataset
 
 PUSH_ENGINES = ("precursive", "bitmap", "hybrid")
 
@@ -65,7 +68,6 @@ def _dirs_summary(dirs: np.ndarray) -> tuple[int, int, int]:
 def run(num_vertices: int = 200_000, height: int = 60, depth: int = 8,
         repeat: int = 5, edge_factor: int = 5) -> dict:
     ds = tree_dataset(num_vertices, height, payload_cols=0)
-    caps = level_caps(num_vertices, height)
     out = {}
 
     # --- fused both-view memory ------------------------------------------
@@ -109,12 +111,25 @@ def run(num_vertices: int = 200_000, height: int = 60, depth: int = 8,
          f"crossover_level={crossover},pull_levels={pulls},"
          f"executed_levels={executed}")
 
-    # --- switch decisions on the quick tree ------------------------------
+    # --- the measured push->pull crossover --------------------------------
+    # a small dense graph (E = 8V) whose frontier occupancy crosses the
+    # pull threshold within a few levels; the tree graph the cell used to
+    # run on never crosses (in-degree 1), which left the cell dead
+    xv = max(num_vertices // 8, 4096)
+    xds = dense_dataset(xv, 8 * xv, seed=9)
+    xcaps = EngineCaps(frontier=xds.table.num_rows + 8,
+                       result=xds.table.num_rows + 8)
     q = RecursiveQuery(engine="diropt", max_depth=depth, payload_cols=0,
-                       caps=caps)
-    us = time_call(run_query, q, ds, 0, repeat=repeat)
+                       caps=xcaps)
+    us = time_call(run_query, q, xds, 0, repeat=repeat)
     crossover, pulls, executed = _dirs_summary(
-        np.asarray(run_query(q, ds, 0).level_dirs))
+        np.asarray(run_query(q, xds, 0).level_dirs))
+    if pulls == 0 or crossover < 0:
+        raise RuntimeError(
+            f"diropt_crossover measured no pull levels (crossover_level="
+            f"{crossover}, executed_levels={executed}) — the cell's graph "
+            f"no longer crosses the push->pull threshold and the cell is "
+            f"dead; regenerate it on a denser graph")
     out["crossover"] = crossover
     emit(f"exp_direction/diropt_crossover/d{depth}", us,
          f"crossover_level={crossover},pull_levels={pulls},"

@@ -27,6 +27,13 @@ Five cells:
   installed on the session, as a paired ratio (``time_ratio``).  The
   disabled path must be free (gate: ratio >= 0.95), or tracing cannot be
   left wired into production serving.
+* ``exp_serving/multiquery_throughput`` — the bit-parallel coalescing gate:
+  32 single-root requests enqueued and flushed as ONE coalesced dispatch
+  (whose multi-lane buckets plan the ``multiquery`` engine — up to 32
+  roots as bits of one packed uint32 frontier word) against the
+  reach-bucketed one-root-per-vmap-lane path on the same roots and bucket
+  layout.  Row sets must match; the PAIRED ``multiquery_vs_bucketed``
+  ratio is gated >= 4.0 in scripts/perf_gate.
 """
 from __future__ import annotations
 
@@ -146,6 +153,46 @@ def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
          f"chose={cal_report.best.label},best_forced={best_forced},"
          f"calibrated_vs_best_forced={regret:.2f},"
          f"observations={cal.count},refits={cal.refits}")
+
+    # -- bit-parallel coalescing gate: 32 lanes of one frontier word ------
+    # the coalesced side answers MQ_BATCH single-root requests with one
+    # flush (its multi-lane buckets plan multiquery: one word sweep per
+    # level for every lane, at the buckets' right-sized caps); the
+    # baseline is the same roots and bucket layout through the
+    # one-root-per-vmap-lane bucketed executor with the shape-level
+    # chosen engine
+    from repro.core.engine import WORD_LANES, run_query_buckets
+
+    mq_roots = list(range(WORD_LANES))
+    mq_entry = session.plan_for(sql, mq_roots)
+
+    def _coalesced():
+        tickets = [session.enqueue(sql, r) for r in mq_roots]
+        session.flush()
+        return [t.result() for t in tickets]
+
+    def _bucketed_vmap():
+        return run_query_buckets(choice.query, ds, mq_entry.buckets)
+
+    mq_res = _coalesced()         # also compiles the coalesced dispatches
+    seq_res = _bucketed_vmap()
+    mq_match = all(_row_set(a) == _row_set(b)
+                   for a, b in zip(mq_res, seq_res))
+    if not mq_match:
+        raise RuntimeError(
+            "multiquery_throughput: the coalesced bit-parallel results "
+            "diverged from the bucketed per-root baseline — the ratio "
+            "below would compare different answers")
+    us_mq = time_call(_coalesced, repeat=repeat)
+    mq_ratio = time_ratio(_bucketed_vmap, _coalesced,
+                          repeat=max(repeat, 7))
+    mq_engines = ",".join(sorted({c.label
+                                  for c in mq_entry.bucket_choices}))
+    out["multiquery_ratio"] = mq_ratio
+    emit(f"exp_serving/multiquery_throughput/d{depth}",
+         us_mq / WORD_LANES,
+         f"multiquery_vs_bucketed={mq_ratio:.2f},batch={WORD_LANES},"
+         f"rows_match={int(mq_match)},engines={mq_engines}")
 
     # -- plan-store gate: rehydrated serving must match cold results ------
     cold_res = session.submit(sql, roots)

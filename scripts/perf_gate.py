@@ -36,6 +36,13 @@ Fails (exit 1) when the perf trajectory regresses past the ROADMAP bars:
   batched dispatch at the global caps (paired ratio; the bucketing
   machinery is shared with reach serving, so a regression here means the
   value plane broke the bucket path's economics).
+* the bit-parallel coalescing gate: any cell reporting
+  ``multiquery_vs_bucketed`` below 4.0 — 32 coalesced single-root
+  requests answered through the packed-word multiquery engine
+  (``exp_serving/multiquery_throughput``: one uint32 frontier word, one
+  MS-BFS sweep per level for all 32 lanes) must beat the
+  one-root-per-vmap-lane bucketed path by at least 4x (paired ratio; the
+  cell itself verifies row-set parity before timing).
 
 The lockstep reference cell deliberately reports its ratio under a
 different key (``lockstep_vs_sequential``) so the gate does not fire on the
@@ -64,12 +71,14 @@ REHYDRATED_RE = re.compile(r"(?:^|,)rehydrated_match=(\d+)")
 DIROPT_RE = re.compile(r"(?:^|,)diropt_vs_push_only=([\d.]+)")
 TRACER_RE = re.compile(r"(?:^|,)disabled_tracer_ratio=([\d.]+)")
 SSSP_RE = re.compile(r"(?:^|,)sssp_bucketed_vs_lockstep=([\d.]+)")
+MULTIQUERY_RE = re.compile(r"(?:^|,)multiquery_vs_bucketed=([\d.]+)")
 
 MIN_PER_ROOT_SPEEDUP = 1.0
 MAX_PLANNER_REGRET = 1.2
 MIN_DIROPT_SPEEDUP = 1.0
 MIN_TRACER_RATIO = 0.95
 MIN_SSSP_SPEEDUP = 1.0
+MIN_MULTIQUERY_SPEEDUP = 4.0
 
 # drift-report knobs (non-gating): compare against the median of the last
 # HISTORY_WINDOW runs, flag cells that moved more than DRIFT_FLAG x
@@ -77,7 +86,7 @@ HISTORY_WINDOW = 5
 DRIFT_FLAG = 1.5
 
 GATES = (SPEEDUP_RE, REGRET_RE, CAL_REGRET_RE, REHYDRATED_RE, DIROPT_RE,
-         TRACER_RE, SSSP_RE)
+         TRACER_RE, SSSP_RE, MULTIQUERY_RE)
 
 
 def bench_rows(doc: dict) -> dict:
@@ -131,6 +140,12 @@ def check(rows: dict) -> list[str]:
                 f"{name}: sssp_bucketed_vs_lockstep={m.group(1)} < "
                 f"{MIN_SSSP_SPEEDUP} (bucketed weighted dispatch must "
                 "not lose to one lockstep batch)")
+        m = MULTIQUERY_RE.search(derived)
+        if m and float(m.group(1)) < MIN_MULTIQUERY_SPEEDUP:
+            failures.append(
+                f"{name}: multiquery_vs_bucketed={m.group(1)} < "
+                f"{MIN_MULTIQUERY_SPEEDUP} (the packed-word coalesced "
+                "dispatch must amortize its one sweep over 32 lanes)")
     return failures
 
 

@@ -36,10 +36,10 @@ import numpy as np
 from repro.obs import trace as _trace
 
 from .bitmap import (bitmap_plan, diropt_hybrid_plan, diropt_plan,
-                     hybrid_plan, weighted_bitmap_plan)
+                     hybrid_plan, multiquery_plan, weighted_bitmap_plan)
 from .csr import CSRIndex, build_csr, merged_indptr
-from .operators import BFSResult, Context, EngineCaps, Pipeline, execute, \
-    execute_batch
+from .operators import WORD_LANES, BFSResult, Context, EngineCaps, \
+    Pipeline, execute, execute_batch, execute_multiquery
 from .recursive import (DIRECTIONS, precursive_plan, rowstore_plan,
                         rowstore_rewrite_plan, trecursive_plan,
                         trecursive_rewrite_plan, weighted_precursive_plan)
@@ -49,12 +49,19 @@ from .table import ColumnTable, RowTable, payload_names
 EngineName = Literal["precursive", "trecursive", "rowstore", "rowstore_index",
                      "bitmap", "hybrid", "trecursive_rewrite",
                      "rowstore_rewrite", "rowstore_index_rewrite",
-                     "diropt", "diropt_hybrid"]
+                     "diropt", "diropt_hybrid", "multiquery"]
 
 ENGINE_NAMES: tuple[str, ...] = (
     "precursive", "trecursive", "rowstore", "rowstore_index", "bitmap",
     "hybrid", "trecursive_rewrite", "rowstore_rewrite",
     "rowstore_index_rewrite", "diropt", "diropt_hybrid")
+
+# the bit-parallel MS-BFS engine is a BATCH engine: one dispatch answers up
+# to 32 roots, so it is priced per coalesced batch and only becomes a
+# candidate when the planner is handed a lane count (> 1).  It deliberately
+# stays OUT of ENGINE_NAMES — the single-root enumeration suites, parity
+# loops and EXPLAIN listings iterate that tuple.
+MULTIQUERY_ENGINE = "multiquery"
 
 # the direction-optimizing engines (per-level push/pull switch) and their
 # push-only counterparts — parity suites assert row-for-row equality along
@@ -78,6 +85,10 @@ class RecursiveQuery:
     direction: Direction = "outbound"
     workload: str = "reach"           # semiring name ('reach' = boolean BFS)
     weight_col: Optional[str] = None  # edge-weight column (weighted only)
+    lanes: int = 1                    # coalesced roots per dispatch
+    #   (> 1 only for the bit-parallel `multiquery` engine: the planner
+    #   prices that engine per coalesced batch, and the serving layer packs
+    #   up to WORD_LANES in-flight roots into one word-sweep dispatch)
 
     @property
     def out_cols(self) -> tuple[str, ...]:
@@ -121,6 +132,9 @@ PLAN_BUILDERS: Dict[str, Callable[[RecursiveQuery], Pipeline]] = {
         q.caps, q.max_depth, q.out_cols, q.direction),
     "diropt_hybrid": lambda q: diropt_hybrid_plan(
         q.caps, q.max_depth, q.out_cols, direction=q.direction),
+    "multiquery": lambda q: multiquery_plan(
+        q.caps, q.max_depth, q.out_cols, q.direction,
+        lanes=max(getattr(q, "lanes", 1), 1)),
 }
 
 
@@ -328,6 +342,38 @@ def run_query_batch(q: RecursiveQuery, ds: Dataset, roots) -> BFSResult:
     return r
 
 
+def run_query_multi(q: RecursiveQuery, ds: Dataset, roots,
+                    lane_limits=None) -> BFSResult:
+    """Execute one query for up to :data:`WORD_LANES` roots in a single
+    BIT-PARALLEL dispatch: every root is a bit lane of one packed dense
+    frontier word, and one MS-BFS sweep per level advances all of them
+    (``q.engine`` must be ``'multiquery'``).  The returned ``BFSResult``
+    carries a leading ``len(roots)`` lane dimension; lane i is row-for-row
+    identical to ``run_query`` on ``roots[i]`` through a deferred-emission
+    engine.  ``lane_limits`` (optional, per-lane depth caps from the reach
+    buckets) must never be below a lane's natural convergence depth —
+    callers pass estimates only when they are exact."""
+    if len(roots) > WORD_LANES:
+        raise ValueError(f"multiquery packs at most {WORD_LANES} roots "
+                         f"per dispatch, got {len(roots)}")
+    mq = q if q.engine == "multiquery" and q.lanes == len(roots) else \
+        dataclasses.replace(q, engine="multiquery", lanes=len(roots))
+    plan = build_plan(mq)
+    ds.ensure_reverse()          # the word sweep gathers dst-grouped edges
+    ds.ensure_direction(mq.direction)
+    t = _trace.current_tracer()
+    if t is None:
+        return execute_multiquery(plan, query_context(mq, ds), roots,
+                                  ds.num_vertices, lane_limits)
+    with t.span("dispatch", engine="multiquery", direction=mq.direction,
+                lanes=int(len(roots))):
+        r = execute_multiquery(plan, query_context(mq, ds), roots,
+                               ds.num_vertices, lane_limits)
+        jax.block_until_ready(r)
+    _trace.emit_level_events(t, r, engine="multiquery")
+    return r
+
+
 def result_lane(r: BFSResult, lane: int) -> BFSResult:
     """Slice one lane out of a batched BFSResult."""
     return jax.tree_util.tree_map(lambda a: a[lane], r)
@@ -356,6 +402,11 @@ class BucketTiming:
     #   True these are the caps that overflowed (the measured dispatch ran
     #   at ``caps`` == the fallback), making the silent 2x-dispatch cliff
     #   visible to observers instead of only to the retry branch
+    evicted_lanes: int = 0
+    #   lanes evicted to SOLO fallback-caps re-dispatches because only they
+    #   overflowed the bucket caps — the rest of the bucket kept its caps
+    #   (with coalesced lanes, one pathological root must not force the
+    #   whole 32-lane word onto fallback caps)
 
 
 # process-wide visibility for the overflow-retry path: every retry is a
@@ -364,12 +415,18 @@ class BucketTiming:
 # surfaced on the BucketTiming, traced, and warned about once per process
 # (serving sessions additionally warn once per session and count it in
 # their metrics registry)
-_overflow_state = {"retries": 0, "warned": False}
+_overflow_state = {"retries": 0, "warned": False, "lane_evictions": 0}
 
 
 def overflow_retry_count() -> int:
     """Process-wide count of fallback-caps overflow retries."""
     return _overflow_state["retries"]
+
+
+def lane_eviction_count() -> int:
+    """Process-wide count of lanes evicted to solo fallback re-dispatches
+    (per-lane overflow handling — the rest of the bucket kept its caps)."""
+    return _overflow_state["lane_evictions"]
 
 
 def _note_overflow_retry(index: int, predicted: EngineCaps,
@@ -392,6 +449,33 @@ def _note_overflow_retry(index: int, predicted: EngineCaps,
             "counts)", RuntimeWarning, stacklevel=3)
 
 
+def _note_lane_eviction(index: int, lanes: Sequence[int],
+                        predicted: EngineCaps, fallback: EngineCaps,
+                        tracer) -> None:
+    _overflow_state["lane_evictions"] += len(lanes)
+    if tracer is not None:
+        tracer.event("overflow_lane_eviction", bucket=index,
+                     lanes=list(lanes),
+                     predicted_caps=[predicted.frontier, predicted.result],
+                     fallback_caps=[fallback.frontier, fallback.result])
+
+
+def _evict_bucket(b, lane: int, caps: EngineCaps):
+    """A single-lane bucket for one evicted root, dispatched solo at the
+    fallback caps (the original bucket keeps its caps for every other
+    lane)."""
+    indices = (b.indices[lane],)
+    roots = (b.roots[lane],)
+    if dataclasses.is_dataclass(b):
+        try:
+            return dataclasses.replace(b, indices=indices, roots=roots,
+                                       caps=caps)
+        except TypeError:
+            pass
+    import types
+    return types.SimpleNamespace(indices=indices, roots=roots, caps=caps)
+
+
 def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
                      fallback_caps: EngineCaps,
                      finish: Optional[Callable] = None,
@@ -409,10 +493,14 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
 
     * launches EVERY bucket before touching any result — dispatches are
       async, and the host-side overflow check must not serialize them;
-    * retries a bucket once with ``fallback_caps`` when its predicted caps
-      overflowed (bucket caps are predictions; bucketing must never turn a
-      valid query into a truncated result — at worst it costs one extra
-      dispatch);
+    * retries on overflow with ``fallback_caps`` (bucket caps are
+      predictions; bucketing must never turn a valid query into a
+      truncated result).  When overflow is PER LANE and only some real
+      lanes overflowed, just those lanes are EVICTED to solo fallback
+      re-dispatches and the rest of the bucket keeps its result at bucket
+      caps — with coalesced lanes one pathological root must not force
+      the whole word onto worst-case caps.  Only a full-bucket (or
+      scalar) overflow still re-dispatches the whole bucket;
     * applies the optional ``finish(index, bucket, result)`` hook to the
       batched result (the serving layer dresses per-bucket results here);
     * scatters lanes back to the ORIGINAL root order via each bucket's
@@ -440,13 +528,32 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
         timings = []
         for i, b, t0, r in launched:
             retried = False
-            if (b.caps != fallback_caps
-                    and bool(np.any(np.asarray(r.overflow)))):
-                r = dispatch(i, b, fallback_caps)
-                retried = True
-                _note_overflow_retry(i, b.caps, fallback_caps, tracer)
+            evicted: dict = {}
+            if b.caps != fallback_caps:
+                ov = np.asarray(r.overflow).reshape(-1)
+                n_real = len(b.indices)
+                real_ov = ov[:n_real] if ov.size >= n_real else \
+                    np.broadcast_to(ov, (n_real,))
+                if real_ov.any():
+                    if n_real == 1 or real_ov.all():
+                        r = dispatch(i, b, fallback_caps)
+                        retried = True
+                        _note_overflow_retry(i, b.caps, fallback_caps,
+                                             tracer)
+                    else:
+                        # per-lane eviction: solo fallback re-dispatch for
+                        # just the overflowing lanes
+                        hit = np.nonzero(real_ov)[0].tolist()
+                        for lane in hit:
+                            sb = _evict_bucket(b, lane, fallback_caps)
+                            evicted[lane] = (sb, dispatch(i, sb,
+                                                          fallback_caps))
+                        _note_lane_eviction(i, hit, b.caps, fallback_caps,
+                                            tracer)
             if finish is not None:
                 r = finish(i, b, r)
+                evicted = {lane: (sb, finish(i, sb, rr))
+                           for lane, (sb, rr) in evicted.items()}
             if to_host:
                 # one device->host transfer per bucket (also synchronizes)
                 if tracer is not None:
@@ -455,19 +562,28 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
                         r = jax.tree_util.tree_map(np.asarray, r)
                 else:
                     r = jax.tree_util.tree_map(np.asarray, r)
+                evicted = {lane: (sb, jax.tree_util.tree_map(np.asarray,
+                                                             rr))
+                           for lane, (sb, rr) in evicted.items()}
             elif observer is not None or tracer is not None:
                 jax.block_until_ready(r)  # timing needs a real completion
+                for _, rr in evicted.values():
+                    jax.block_until_ready(rr)
             t_done = time.perf_counter()
             for lane, idx in enumerate(b.indices):
-                out[idx] = jax.tree_util.tree_map(
-                    lambda a, lane=lane: a[lane], r)
+                if lane in evicted:
+                    out[idx] = jax.tree_util.tree_map(
+                        lambda a: a[0], evicted[lane][1])
+                else:
+                    out[idx] = jax.tree_util.tree_map(
+                        lambda a, lane=lane: a[lane], r)
             timing = BucketTiming(
                 index=i, lanes=len(b.indices), padded_lanes=len(b.roots),
                 caps=(fallback_caps if retried else b.caps),
                 retried=retried,
                 elapsed_us=(t_done - (t0 if prev_done is None
                                       else max(t0, prev_done))) * 1e6,
-                predicted_caps=b.caps)
+                predicted_caps=b.caps, evicted_lanes=len(evicted))
             if observer is not None:
                 observer(timing)
             timings.append((timing, r))

@@ -89,6 +89,8 @@ __all__ = [
     "Pipeline", "fixed_point", "fixed_point_batch", "execute",
     "execute_batch", "dedup_targets", "bitmap_level",
     "Semiring", "or_combine", "WeightedExpand", "WeightedDenseStep",
+    "MultiQuerySeed", "MultiQueryWordSweep", "MultiQueryEmit",
+    "execute_multiquery", "WORD_LANES",
 ]
 
 
@@ -1174,12 +1176,24 @@ class HybridPullStep(Operator):
         return "PullStep[bottom-up over reverse CSR -> edge block]"
 
     def estimate(self, env):
+        # Only the bottom-up gather shrinks with the unvisited fraction.
+        # Everything else is paid IN FULL every pull level: the positional
+        # frontier keeps no vertex set between levels, so this step rebuilds
+        # the previous-vertex set from scratch (a (V,) plane + a
+        # frontier_cap scatter — the same per-row scatter factor as the
+        # sparse positional branch), then runs the full-edge hit mask and
+        # compaction exactly like the dense push.  The old estimate omitted
+        # the rebuild and half the hit/compact work, pricing pull levels
+        # ~2.5x under the push branch they replace — which kept
+        # diropt_hybrid a near-tied candidate while the paired bench
+        # measured it at 0.33-0.37x of its push-only counterpart.
         unvis = max(float(env.num_vertices) - env.visited_rows, 0.0)
         frac = unvis / max(float(env.num_vertices), 1.0)
         return OpCost(env.emitted_rows,
                       frac * float(env.num_edges) * 8.0
-                      + float(env.num_edges) * 4.0       # hit + compact
-                      + float(env.num_vertices) * 4.0
+                      + env.frontier_cap * 36.0          # prev-set rebuild
+                      + float(env.num_edges) * 10.0      # hit + compact
+                      + float(env.num_vertices) * 6.0
                       + env.frontier_cap * 5.0)
 
 
@@ -1754,3 +1768,320 @@ def execute_batch(pipeline: Pipeline, ctx: Context, roots,
     dimension."""
     roots = jnp.asarray(roots, jnp.int32)
     return _batch_impl(pipeline, ctx, roots, num_vertices)
+
+
+# ---------------------------------------------------------------------------
+# bit-parallel multi-query traversal (MS-BFS)
+# ---------------------------------------------------------------------------
+
+# The dense engines carry (V,)-sized boolean planes; the multiquery engine
+# widens the ELEMENT TYPE instead of vmapping — one uint32 word per vertex
+# packs up to 32 concurrent roots, and a single dense sweep advances every
+# lane at once (Then et al., "The More the Merrier").  jnp is x32 by
+# default, so the word is uint32; enable x64 before asking for wider words.
+_WORD_DTYPE = jnp.uint32
+WORD_LANES = 32
+
+
+class MultiQueryState(NamedTuple):
+    """The word-sweep loop carry.  No (lanes, V) plane lives in the loop:
+    per-lane vertex depths are reconstructed AFTER the fixed point from the
+    per-level new-bits snapshots (``level_words[d]`` holds the word of
+    lanes that discovered each vertex at depth ``d`` — bits are set at most
+    once per (lane, vertex), so the first set level IS the BFS depth)."""
+
+    frontier_word: jax.Array   # (V,) uint32: lane bits in the frontier
+    visited_word: jax.Array    # (V,) uint32: lane bits ever discovered
+    level_words: jax.Array     # (max_levels, V) uint32: new bits per level
+    lane_depth: jax.Array      # (lanes,) int32: levels executed per lane
+    active: jax.Array          # () uint32: lanes still traversing
+    depth: jax.Array           # () int32: levels executed (max over lanes)
+
+
+def _segment_or(words: jax.Array, indptr: jax.Array,
+                num_seg: int) -> jax.Array:
+    """Per-segment bitwise OR of ``words`` (grouped by segment, boundaries
+    in ``indptr``).  JAX scatters have no OR mode, so the dst-grouped
+    reduce runs as ONE log-depth segmented associative scan over
+    (segment-start flag, word) pairs — the classic segmented-scan combine:
+    a start flag on the right operand resets the accumulation."""
+    e = words.shape[0]
+    if e == 0:
+        return jnp.zeros((num_seg,), words.dtype)
+    starts = indptr[:-1]
+    # a start at position e (empty trailing segments) must not flag e-1
+    flags = jnp.zeros((e,), bool).at[
+        jnp.where(starts < e, starts, e)].set(True, mode="drop")
+
+    def comb(a, b):
+        af, av = a
+        bf, bv = b
+        return af | bf, jnp.where(bf, bv, av | bv)
+
+    _, acc = jax.lax.associative_scan(comb, (flags, words))
+    seg = acc[jnp.clip(indptr[1:] - 1, 0, e - 1)]
+    return jnp.where(indptr[1:] > indptr[:-1], seg,
+                     jnp.zeros((), words.dtype))
+
+
+def _word_gather(ctx: Context, frontier_word: jax.Array, nv: int
+                 ) -> jax.Array:
+    """One packed-word level: for every vertex, the OR of its in-neighbors'
+    frontier words (the MS-BFS analogue of :func:`_dense_pull`'s membership
+    test, over all 32 lanes at once).  Needs dst-grouped edge orders:
+    ``ctx.rcsr`` groups the join edges by ``join_dst`` in every direction
+    view; the fused bidirectional view adds the backward orientation
+    (grouped by ``join_src``) through ``ctx.csr``."""
+    src = jnp.clip(ctx.join_src, 0, nv - 1)
+    dst = jnp.clip(ctx.join_dst, 0, nv - 1)
+    if ctx.bidir:
+        fwd = _segment_or(frontier_word[src[ctx.rcsr.perm]],
+                          ctx.rcsr.indptr, nv)
+        bwd = _segment_or(frontier_word[dst[ctx.csr.perm]],
+                          ctx.csr.indptr, nv)
+        return fwd | bwd
+    if ctx.rcsr is None:
+        raise ValueError(
+            "the multiquery word sweep needs dst-grouped edges (the "
+            "reverse CSR); call Dataset.ensure_reverse() before dispatch")
+    return _segment_or(frontier_word[src[ctx.rcsr.perm]],
+                       ctx.rcsr.indptr, nv)
+
+
+def _or_reduce(words: jax.Array) -> jax.Array:
+    return jnp.bitwise_or.reduce(words)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiQuerySeed(Operator):
+    """Scatter each root's lane bit into the packed frontier/visited words
+    (lane bits are distinct, so a scatter-ADD of colliding roots IS the
+    OR).  ``kind='dense'`` so the cost model prices levels with the dense
+    engines' vertex-frontier accounting."""
+
+    lanes: int = WORD_LANES
+    kind: str = "dense"
+
+    def describe(self):
+        return f"MultiQuerySeed[{self.lanes} lane bits -> (V,) word]"
+
+    def estimate(self, env):
+        # two (V,) word planes + the snapshot row + the lane-bit scatter
+        return OpCost(float(self.lanes),
+                      float(env.num_vertices) * 12.0 + self.lanes * 8.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiQueryWordSweep(Operator):
+    """One bit-parallel level: gather every in-neighbor's frontier word,
+    segment-OR by destination, mask by ``~visited`` and the active-lane
+    word.  Per-level cost is lane-count-INDEPENDENT (that is the whole
+    point): E word gathers + the log-depth segmented scan + three (V,)
+    word-plane updates, where the vmapped alternative pays its full
+    per-level cost once per lane."""
+
+    lanes: int = WORD_LANES
+
+    def describe(self):
+        return (f"MultiQueryWordSweep[{self.lanes} lanes/word: "
+                "segment-OR pull, per-lane freeze]")
+
+    def estimate(self, env):
+        # (E,) word gather + segmented-scan passes (log-depth, priced as a
+        # small linear factor) + frontier/visited/snapshot word planes
+        return OpCost(env.emitted_rows,
+                      float(env.num_edges) * 16.0
+                      + float(env.num_vertices) * 16.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiQueryEmit:
+    """Per-lane deferred emission: reconstruct each lane's (V,) vertex
+    depths from the level snapshots, then derive/compact/materialize the
+    emitted edge set exactly like :class:`DeferredEmit` — lane ``l`` of the
+    result is row-for-row identical (rows, order, ``row_depths``) to the
+    sequential deferred-emission engines on ``roots[l]``."""
+
+    cols: Tuple[str, ...]
+    lanes: int = WORD_LANES
+
+    def finish(self, ctx, pipeline, state):
+        raise NotImplementedError(
+            "multiquery pipelines run through execute_multiquery, not the "
+            "scalar fixed_point driver")
+
+    def describe(self):
+        return (f"Materialize[{', '.join(self.cols)}]"
+                f"(Compact(lane depths -> emitted)) x{self.lanes} lanes")
+
+    def estimate(self, env):
+        # per lane: the level->depth reconstruction, one (EJ,) depth
+        # gather + mask + compact, and the late materialize
+        per_lane = (float(env.num_edges) * 3.0
+                    + float(env.num_vertices) * 2.0
+                    + env.result_cap * (_cols_bytes(env, self.cols) + 4.0))
+        return OpCost(env.frontier_rows, self.lanes * per_lane)
+
+
+def _multiquery_finish(ctx: Context, pipeline: Pipeline,
+                       state: "MultiQueryState", lane_ids: jax.Array,
+                       nv: int) -> BFSResult:
+    """All-lanes deferred emission in ONE batched pass.
+
+    The emitted-edge test stays bit-parallel: per level, mask the new-bits
+    snapshot by the word of lanes whose executed depth exceeds that level,
+    OR the levels together into one (V,) emit word, and gather it through
+    the join sources — ``emitted_word[j]``'s bits are exactly the lanes
+    for which :class:`DeferredEmit` would emit edge ``j``.
+
+    Compaction is the part that cannot stay packed (each lane compacts to
+    its own slots).  A vmapped :func:`compact_mask` lowers to per-lane
+    ``nonzero`` scatters that dominate the whole dispatch on CPU, so
+    instead: one (EJ, lanes) prefix-count cumsum, then the i-th set
+    position per lane is recovered by a shared binary search over the
+    prefix column — all gathers, no scatters.  Positions come out
+    ascending per lane with the join-space sentinel in padding slots, the
+    exact :func:`compact_mask` layout."""
+    ej = _num_join(ctx)
+    cap_r = pipeline.caps.result
+    lanes = lane_ids.shape[0]
+    n_levels = state.level_words.shape[0]
+    # word of lanes for which a vertex discovered at level d is a frontier
+    # vertex (d < that lane's executed depth)
+    lane_bits = jnp.left_shift(_WORD_DTYPE(1), lane_ids)
+    level_mask = jnp.sum(
+        jnp.where(jnp.arange(n_levels, dtype=jnp.int32)[:, None]
+                  < state.lane_depth[None, :],
+                  lane_bits[None, :], 0),
+        axis=1, dtype=_WORD_DTYPE)                           # (NL,)
+    emit_v = jnp.bitwise_or.reduce(
+        state.level_words & level_mask[:, None], axis=0)     # (V,)
+    src = jnp.clip(ctx.join_src, 0, nv - 1)
+    if ctx.bidir:
+        join_v = jnp.concatenate(
+            [src, jnp.clip(ctx.join_dst, 0, nv - 1)])        # (EJ,)
+    else:
+        join_v = src
+    emitted_word = emit_v[join_v]                            # (EJ,)
+    # per-lane prefix counts, lanes as the vector axis
+    bits = ((emitted_word[:, None] >> lane_ids[None, :])
+            & _WORD_DTYPE(1)).astype(jnp.int32)              # (EJ, lanes)
+    prefix = jnp.cumsum(bits, axis=0)                        # (EJ, lanes)
+    total = prefix[-1]                                       # (lanes,)
+    count = jnp.minimum(total, cap_r)
+    overflow = total > cap_r
+    # i-th emitted position per lane = first j with prefix[j] == i+1:
+    # one vectorized binary search over the (cap_r, lanes) grid
+    want = jnp.arange(1, cap_r + 1, dtype=jnp.int32)[:, None]
+    lane_cols = jnp.arange(lanes, dtype=jnp.int32)[None, :]
+    lo = jnp.zeros((cap_r, lanes), jnp.int32)
+    hi = jnp.full((cap_r, lanes), ej, jnp.int32)
+    for _ in range(max(ej, 1).bit_length()):
+        mid = (lo + hi) // 2
+        val = jnp.where(mid < ej,
+                        prefix[jnp.minimum(mid, ej - 1), lane_cols],
+                        jnp.int32(1 << 30))
+        ge = val >= want
+        lo = jnp.where(ge, lo, mid + 1)
+        hi = jnp.where(ge, mid, hi)
+    positions = lo.T                                         # (lanes, cap_r)
+    pos_real = _to_real(ctx, positions)
+    values = ctx.table.take(pos_real, pipeline.finisher.cols)
+    valid = (jnp.arange(cap_r, dtype=jnp.int32)[None, :] < count[:, None])
+    # row depth = the source vertex's per-lane BFS level; recover it from
+    # the level snapshots at just the compacted positions (each (lane,
+    # vertex) bit is set in at most ONE level, so the overwrite is exact)
+    v_at = join_v[jnp.minimum(positions, ej - 1)]            # (lanes, cap_r)
+    row_depths = jnp.full((lanes, cap_r), -1, jnp.int32)
+    for d in range(n_levels):
+        hit = ((state.level_words[d][v_at] >> lane_ids[:, None])
+               & _WORD_DTYPE(1)).astype(bool)
+        row_depths = jnp.where(hit, jnp.int32(d), row_depths)
+    row_depths = jnp.where(valid, row_depths, -1)
+    return BFSResult(values, pos_real, count, state.lane_depth, overflow,
+                     row_depths)
+
+
+def multiquery_fixed_point(pipeline: Pipeline, ctx: Context,
+                           roots: jax.Array, num_vertices: int,
+                           lane_limits: jax.Array) -> BFSResult:
+    """The MS-BFS driver: ONE ``jax.lax.while_loop`` advances up to 32
+    packed lanes per level.
+
+    Per-lane convergence freezing and depth caps live in the ``active``
+    word: a lane leaves it when its frontier bits die or its depth cap
+    binds, its bits stop propagating, and its executed-level counter
+    freezes — so lane ``l`` of the result is row-identical to the scalar
+    driver on ``roots[l]`` with ``max_depth=lane_limits[l]``.
+    ``lane_limits`` come from the serving layer's reach buckets (clamped
+    to the query's ``max_depth``; estimates never bind below a lane's
+    natural convergence depth, so capping is semantics-preserving)."""
+    nv = num_vertices
+    lanes = roots.shape[0]
+    if lanes > WORD_LANES:
+        raise ValueError(f"multiquery packs at most {WORD_LANES} roots per "
+                         f"{_WORD_DTYPE.dtype.name} word, got {lanes}")
+    roots = jnp.clip(jnp.asarray(roots, jnp.int32), 0, nv - 1)
+    lane_ids = jnp.arange(lanes, dtype=_WORD_DTYPE)
+    lane_bits = jnp.left_shift(_WORD_DTYPE(1), lane_ids)
+    # distinct bits per lane: scatter-ADD of colliding roots == OR
+    root_word = jnp.zeros((nv,), _WORD_DTYPE).at[roots].add(lane_bits)
+    limit = pipeline.max_depth + (1 if pipeline.inclusive else 0)
+    bonus = 1 if pipeline.inclusive else 0
+    lane_limit = (jnp.minimum(jnp.asarray(lane_limits, jnp.int32),
+                              pipeline.max_depth) + bonus)
+    n_levels = limit + 1                      # snapshot rows: seed + levels
+    level_words = jnp.zeros((n_levels, nv), _WORD_DTYPE).at[0].set(root_word)
+    active0 = jnp.sum(jnp.where(lane_limit > 0, lane_bits, 0),
+                      dtype=_WORD_DTYPE)
+    state = MultiQueryState(
+        frontier_word=root_word, visited_word=root_word,
+        level_words=level_words,
+        lane_depth=jnp.zeros((lanes,), jnp.int32),
+        active=active0, depth=jnp.zeros((), jnp.int32))
+
+    def cond(s):
+        return (s.active != 0) & (s.depth < limit)
+
+    def body(s):
+        gathered = _word_gather(ctx, s.frontier_word, nv)
+        new = gathered & ~s.visited_word & s.active
+        visited = s.visited_word | new
+        depth = s.depth + 1
+        # lanes in the active word executed this level
+        ran = ((s.active >> lane_ids) & _WORD_DTYPE(1)).astype(jnp.int32)
+        lane_depth = s.lane_depth + ran
+        # freeze: frontier died (no new bits anywhere) or depth cap bound
+        alive = _or_reduce(new)
+        within = jnp.sum(jnp.where(lane_depth < lane_limit, lane_bits, 0),
+                         dtype=_WORD_DTYPE)
+        return MultiQueryState(
+            frontier_word=new, visited_word=visited,
+            level_words=s.level_words.at[depth].set(new),
+            lane_depth=lane_depth, active=s.active & alive & within,
+            depth=depth)
+
+    state = jax.lax.while_loop(cond, body, state)
+    return _multiquery_finish(ctx, pipeline, state, lane_ids, nv)
+
+
+_multiquery_impl = jax.jit(multiquery_fixed_point,
+                           static_argnames=("pipeline", "num_vertices"))
+
+
+def execute_multiquery(pipeline: Pipeline, ctx: Context, roots,
+                       num_vertices: int,
+                       lane_limits=None) -> BFSResult:
+    """Jitted bit-parallel multi-root execution: ONE dense word sweep
+    answers up to 32 roots.  Returns a BFSResult with a leading
+    ``len(roots)`` lane dimension, row-for-row equal per lane to the
+    sequential deferred-emission engines.  ``lane_limits`` (optional,
+    (lanes,) int32) caps each lane's executed depth — the serving layer
+    passes per-lane reach-bucket depth estimates; ``None`` means every
+    lane runs to the query's ``max_depth``."""
+    roots = jnp.asarray(roots, jnp.int32)
+    if lane_limits is None:
+        lane_limits = jnp.full((roots.shape[0],), pipeline.max_depth,
+                               jnp.int32)
+    return _multiquery_impl(pipeline, ctx, roots, num_vertices,
+                            jnp.asarray(lane_limits, jnp.int32))

@@ -73,7 +73,11 @@ def plan_signature(label: str, direction: str, caps, digest: str,
     ``mix``.  Lanes and shape matter: a 1-lane and an 8-lane dispatch of
     the same pipeline do different amounts of work, and two query shapes
     clamped to the same caps must not pool their latencies under one
-    signature.  The mix matters for the same reason: a push-heavy and a
+    signature.  (For the bit-parallel ``multiquery`` engine the lane count
+    is doubly load-bearing: one signature covers one coalesced word width,
+    and its byte predictors arrive UNSCALED — the plan already prices the
+    whole batch — where vmap-batched engines are scaled by the lane
+    count.)  The mix matters for the same reason: a push-heavy and a
     pull-heavy execution of the SAME diropt pipeline move very different
     bytes, and pooling them would corrupt the per-signature means the
     refit validator trusts.  So does the workload: a weighted traversal

@@ -144,6 +144,9 @@ def _choice_json(c: PhysicalChoice, chosen: bool) -> dict:
         # v5: the semiring the candidate's pipeline runs under
         "semiring": getattr(c.pipeline, "semiring", "reach"),
         "chosen": chosen,
+        # the coalesced lane count a batch engine was priced for (1 for
+        # the one-root-at-a-time engines)
+        "lanes": getattr(c.query, "lanes", 1),
         "caps": {"frontier": c.query.caps.frontier,
                  "result": c.query.caps.result},
         "cost": {"est_us": c.cost.est_us,

@@ -28,8 +28,9 @@ import numpy as np
 
 from repro.core.engine import (ENGINE_NAMES, Dataset, PLAN_BUILDERS,
                                RecursiveQuery, WEIGHTED_ENGINE_NAMES,
-                               build_plan, query_context, run_query,
-                               run_query_batch, run_query_buckets)
+                               WORD_LANES, build_plan, query_context,
+                               run_query, run_query_batch,
+                               run_query_buckets, run_query_multi)
 from repro.core.operators import (BFSResult, EngineCaps, Pipeline, execute,
                                   execute_batch)
 from repro.core.recursive import precursive_plan
@@ -142,6 +143,17 @@ class PhysicalChoice:
             r = (execute_batch(self.pipeline, ctx, roots, ds.num_vertices)
                  if batched
                  else execute(self.pipeline, ctx, roots, ds.num_vertices))
+        elif self.engine == "multiquery":
+            # the bit-parallel engine always dispatches a lane vector; a
+            # scalar root rides in lane 0 of a one-lane word
+            import jax.numpy as jnp
+
+            from repro.core.engine import result_lane
+
+            lane_roots = roots if batched else jnp.reshape(roots, (1,))
+            r = run_query_multi(self.query, ds, lane_roots)
+            if not batched:
+                r = result_lane(r, 0)
         else:
             r = (run_query_batch(self.query, ds, roots) if batched
                  else run_query(self.query, ds, roots))
@@ -194,6 +206,19 @@ class PhysicalChoice:
             def _dispatch(i, b, caps):
                 return execute_batch(self._kernel_pipeline(caps), ctx,
                                      np.asarray(b.roots), ds.num_vertices)
+
+            results = dispatch_buckets(buckets, _dispatch,
+                                       fallback_caps=fallback_caps)
+        elif self.engine == "multiquery":
+            # one bit-parallel word sweep per bucket: the bucket's lanes
+            # pack into one frontier word, dispatched at the bucket's caps
+            from repro.core.engine import dispatch_buckets
+
+            def _dispatch(i, b, caps):
+                qb = dataclasses.replace(self.query, caps=caps,
+                                         lanes=len(b.roots))
+                return run_query_multi(qb, ds, np.asarray(b.roots,
+                                                          np.int32))
 
             results = dispatch_buckets(buckets, _dispatch,
                                        fallback_caps=fallback_caps)
@@ -393,18 +418,54 @@ def _stamp_switch_thresholds(pipeline: Pipeline,
     return dataclasses.replace(pipeline, ops=tuple(ops))
 
 
+def _multiquery_reason(logical: LogicalQuery, lanes: int) -> Optional[str]:
+    """Why the bit-parallel multiquery engine is not a candidate (None when
+    it is).  It is a BATCH engine: without a coalesced lane count there is
+    nothing to amortize the word sweep over."""
+    if lanes <= 1:
+        return ("bit-parallel MS-BFS amortizes one word sweep over a "
+                "coalesced batch; single-root planning has no lanes "
+                "(pass lanes=N)")
+    if lanes > WORD_LANES:
+        return (f"packs at most {WORD_LANES} lanes per frontier word; "
+                "split the batch across dispatches")
+    if getattr(logical, "workload", "reach") != "reach":
+        return ("no value plane: the packed word carries one reach bit "
+                "per lane")
+    if not logical.dedup:
+        return ("needs BFS dedup: raw UNION ALL on a non-forest graph "
+                "differs from the dense visited-bitmap semantics")
+    return None
+
+
+def _rank_key(c: PhysicalChoice):
+    """Ranking is per ROOT: a batch engine's whole-dispatch estimate is
+    amortized over its coalesced lanes before comparing against the
+    one-root-at-a-time engines."""
+    lanes = max(getattr(c.query, "lanes", 1), 1)
+    return (c.cost.est_us / lanes, c.label)
+
+
 def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
          root: Optional[int] = None, caps: Optional[EngineCaps] = None,
          include_kernel: bool = False,
          default_max_depth: Optional[int] = None,
-         constants: Optional[CostConstants] = None) -> PlannerReport:
+         constants: Optional[CostConstants] = None,
+         lanes: int = 1) -> PlannerReport:
     """One full planning pass: parse/normalize as needed, price every legal
     candidate, rank.
 
     ``constants`` are the cost-model time constants to price with — the
     hand-calibrated prior by default, a :class:`~repro.planner.calibrate.
     Calibrator`'s refit values when the serving feedback loop supplies
-    them.  An unresolved ``kernel_factor`` is measured on first use."""
+    them.  An unresolved ``kernel_factor`` is measured on first use.
+
+    ``lanes`` is the coalesced batch size this plan will serve (the
+    serving layer passes its bucket's lane count).  With ``lanes > 1`` the
+    bit-parallel ``multiquery`` engine joins the candidate set, priced per
+    coalesced batch; ranking compares PER-ROOT amortized cost, so one
+    word-sweep dispatch answering N roots competes fairly with N scalar
+    dispatches."""
     if isinstance(query, str):
         query = parse(query)
     if isinstance(query, RecursiveCTE):
@@ -452,6 +513,26 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
         candidates.append(PhysicalChoice(engine=engine, query=q,
                                          logical=logical, pipeline=pipeline,
                                          cost=cost))
+    mq_reason = _multiquery_reason(logical, lanes)
+    if mq_reason is not None:
+        # single-root planning (lanes <= 1) never asked for the batch
+        # engine — recording "no lanes" on every plain plan() would be
+        # noise in EXPLAIN and the golden plan documents; a skip entry
+        # only means a REQUESTED coalesced batch was inadmissible
+        if lanes > 1:
+            skipped.append(("multiquery", mq_reason))
+    else:
+        q = RecursiveQuery(engine="multiquery", max_depth=logical.max_depth,
+                           payload_cols=logical.payload_cols, caps=caps,
+                           dedup=logical.dedup, direction=logical.direction,
+                           workload=workload, weight_col=weight_col,
+                           lanes=int(lanes))
+        pipeline = build_plan(q)
+        cost = pipeline_cost(pipeline, stats, row_bytes=row_bytes,
+                             col_bytes=col_bytes, constants=consts)
+        candidates.append(PhysicalChoice(engine="multiquery", query=q,
+                                         logical=logical, pipeline=pipeline,
+                                         cost=cost))
     if include_kernel and _illegal_reason("precursive", logical) is None:
         q = RecursiveQuery(engine="precursive", max_depth=logical.max_depth,
                            payload_cols=logical.payload_cols, caps=caps,
@@ -467,7 +548,7 @@ def plan(query: Union[str, RecursiveCTE, LogicalQuery], ds: Dataset, *,
     if not candidates:
         raise ValueError("no legal physical plan for this query "
                          f"(skipped: {skipped!r})")
-    candidates.sort(key=lambda c: (c.cost.est_us, c.label))
+    candidates.sort(key=_rank_key)
     return PlannerReport(logical=logical, stats=stats,
                          ranked=tuple(candidates), skipped=tuple(skipped),
                          constants=consts)

@@ -223,7 +223,8 @@ def _choice_from_json(cj: dict, logical: LogicalQuery) -> PhysicalChoice:
                        payload_cols=logical.payload_cols, caps=caps,
                        dedup=logical.dedup, direction=logical.direction,
                        workload=getattr(logical, "workload", "reach"),
-                       weight_col=getattr(logical, "weight_col", None))
+                       weight_col=getattr(logical, "weight_col", None),
+                       lanes=int(cj.get("lanes", 1)))
     if use_kernel:
         pipeline = precursive_plan(caps, q.max_depth, q.out_cols, q.dedup,
                                    q.direction, expand_fn=kernel_expand_fn())
@@ -284,6 +285,7 @@ def _choice_json(c: PhysicalChoice) -> dict:
         "engine": c.engine,
         "use_kernel": c.use_kernel,
         "semiring": getattr(c.pipeline, "semiring", "reach"),
+        "lanes": getattr(c.query, "lanes", 1),
         "caps": {"frontier": c.query.caps.frontier,
                  "result": c.query.caps.result},
         "cost": {"est_us": c.cost.est_us,
@@ -437,7 +439,7 @@ def rehydrate_into(session: ServingSession, path: str) -> None:
         session._requests[(shape_key(logical), entry.roots)] = key
         for b, c in zip(buckets, choices):
             session._bucket_plans.setdefault(
-                (shape_key(logical), b.caps), c)
+                (shape_key(logical), b.caps, len(b.roots)), c)
 
 
 def rehydrate_session(ds: Dataset, path: str,

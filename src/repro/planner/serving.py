@@ -42,6 +42,15 @@ Two feedback mechanisms close the loop:
   JSON (:mod:`repro.planner.plan_store`); ``ServingSession(ds,
   plan_store=path)`` rehydrates them, so a warm process answers its first
   request with ZERO parse/stats/cost calls (see ``session.counters``).
+
+**Request coalescing** (``enqueue``/``flush``): single-root requests that
+arrive together are grouped by (graph, query shape, direction) and each
+group is answered by ONE batched dispatch — inside the bucketed path every
+multi-lane bucket is planned with its lane count, which admits the
+bit-parallel ``multiquery`` engine (up to 32 roots as bits of one packed
+uint32 frontier word, one MS-BFS sweep per level for all of them).  The
+per-root results scatter back to the callers' :class:`PendingResult`
+tickets in enqueue order.
 """
 from __future__ import annotations
 
@@ -53,7 +62,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.engine import (Dataset, dispatch_buckets, run_query_batch)
+from repro.core.engine import (Dataset, dispatch_buckets, run_query_batch,
+                               run_query_multi)
 from repro.core.operators import BFSResult, EngineCaps, execute_batch
 from repro.obs import trace as _trace
 from repro.obs.metrics import MetricsRegistry
@@ -63,9 +73,9 @@ from .calibrate import Calibrator, plan_signature, stats_digest
 from .explain import analyze_result, to_json
 from .optimize import (PhysicalChoice, PlannerReport, RootBucket,
                        bucket_roots, plan)
-from .stats import compute_stats
+from .stats import compute_stats, root_estimates
 
-__all__ = ["PlanEntry", "ServingSession", "shape_key"]
+__all__ = ["PendingResult", "PlanEntry", "ServingSession", "shape_key"]
 
 
 ShapeKey = Tuple
@@ -79,6 +89,33 @@ def shape_key(logical: LogicalQuery) -> ShapeKey:
             logical.direction, logical.want_cols, logical.want_depth,
             logical.union_all, getattr(logical, "workload", "reach"),
             getattr(logical, "weight_col", None))
+
+
+class PendingResult:
+    """The ticket for ONE enqueued root: :meth:`ServingSession.enqueue`
+    returns it immediately, :meth:`ServingSession.flush` fills it.  Reading
+    :meth:`result` before the flush raises — the whole point of enqueueing
+    is that nothing executes until the batch is coalesced."""
+
+    __slots__ = ("_value", "_done")
+
+    def __init__(self):
+        self._done = False
+        self._value = None
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> BFSResult:
+        if not self._done:
+            raise RuntimeError("request not yet dispatched: call "
+                               "ServingSession.flush() first")
+        return self._value
+
+    def _fill(self, value: BFSResult) -> None:
+        self._value = value
+        self._done = True
 
 
 @dataclasses.dataclass
@@ -167,6 +204,17 @@ class ServingSession:
         self._m_retries = self._metrics.counter(
             "repro_overflow_retries_total",
             "bucket dispatches re-run at fallback caps after overflow")
+        self._m_lane_evictions = self._metrics.counter(
+            "repro_overflow_lane_evictions_total",
+            "lanes evicted to solo fallback-caps re-dispatches (the rest "
+            "of their bucket kept its right-sized caps)")
+        self._m_coalesced = self._metrics.counter(
+            "repro_coalesced_dispatches_total",
+            "flush() request groups answered by one coalesced dispatch")
+        self._m_coalesced_roots = self._metrics.counter(
+            "repro_coalesced_roots_total",
+            "enqueued roots answered through coalesced dispatches")
+        self._pending: Dict[ShapeKey, list] = {}
         self._warned_overflow = False
         if plan_store is not None and os.path.exists(plan_store):
             from .plan_store import rehydrate_into
@@ -196,18 +244,23 @@ class ServingSession:
 
     def _bucket_choice(self, logical: LogicalQuery,
                        bucket: RootBucket) -> PhysicalChoice:
-        """Re-cost the candidate engines WITH THE BUCKET'S CAPS and pick
-        per bucket: the capacity-aware cost model makes small blocks favor
-        positional pipelines even when the whole-batch plan favors a dense
-        O(E) engine — this is where a leaf bucket stops paying bitmap
-        scans.  Memoized per (shape, caps)."""
-        key = (shape_key(logical), bucket.caps)
+        """Re-cost the candidate engines WITH THE BUCKET'S CAPS AND LANE
+        COUNT and pick per bucket: the capacity-aware cost model makes
+        small blocks favor positional pipelines even when the whole-batch
+        plan favors a dense O(E) engine — this is where a leaf bucket stops
+        paying bitmap scans.  The padded lane count goes to the planner as
+        ``lanes``, which admits the bit-parallel ``multiquery`` engine
+        (ranked per-root amortized) for multi-lane buckets.  Memoized per
+        (shape, caps, lanes) — the lane count changes both the candidate
+        set and the amortized ranking."""
+        key = (shape_key(logical), bucket.caps, len(bucket.roots))
         if key not in self._bucket_plans:
             self.counters["cost_calls"] += 1
             self._bucket_plans[key] = plan(
                 logical, self.ds, caps=bucket.caps,
                 include_kernel=self.include_kernel,
-                constants=self.calibrator.constants).best
+                constants=self.calibrator.constants,
+                lanes=len(bucket.roots)).best
         return self._bucket_plans[key]
 
     def _plan_doc(self, report: PlannerReport, buckets, choices) -> dict:
@@ -294,6 +347,8 @@ class ServingSession:
 
         def _observe(t):
             self._m_bucket.observe(t.elapsed_us)
+            if t.evicted_lanes:
+                self._m_lane_evictions.inc(t.evicted_lanes)
             if t.retried:
                 self._m_retries.inc()
                 if not self._warned_overflow:
@@ -314,16 +369,36 @@ class ServingSession:
                 return
             c = entry.bucket_choices[t.index]
             lanes = max(t.padded_lanes, 1)
+            # the bit-parallel engine's plan already prices the WHOLE
+            # coalesced batch (its emit term carries the lane factor), so
+            # its predictors are fed unscaled; a vmap-batched engine's
+            # plan prices ONE lane and is scaled by the dispatched count
+            scale = 1 if c.engine == "multiquery" else lanes
             self.calibrator.observe(
                 plan_signature(c.label, c.query.direction, t.caps, digest,
                                lanes=lanes, shape=shape,
                                mix=c.cost.level_dirs, workload=workload),
                 levels=c.cost.levels,
-                plain_bytes=lanes * c.cost.plain_bytes,
-                kernel_bytes=lanes * c.cost.kernel_bytes,
+                plain_bytes=scale * c.cost.plain_bytes,
+                kernel_bytes=scale * c.cost.kernel_bytes,
                 measured_us=t.elapsed_us)
 
         return _observe
+
+    def _lane_limits(self, q, bucket: RootBucket):
+        """Per-lane depth caps for one coalesced multiquery bucket: a lane
+        whose root has an EXACT (sampled) reach profile is frozen at its
+        known convergence depth instead of riding along for the full
+        ``max_depth`` sweeps.  Degree-conditioned estimates can undershoot
+        and a short cap silently truncates the lane's rows, so unsampled
+        roots keep the uncapped depth.  Returns None when no lane can be
+        capped (the dispatch is then identical to the uncapped one)."""
+        ests = root_estimates(self.ds, q.direction, bucket.roots,
+                              q.max_depth)
+        caps = np.asarray(
+            [min(e.depth, q.max_depth) if e.exact else q.max_depth
+             for e in ests], np.int32)
+        return caps if bool(np.any(caps < q.max_depth)) else None
 
     def _execute(self, entry: PlanEntry, check_overflow: bool,
                  observe: bool = False) -> list[BFSResult]:
@@ -344,6 +419,15 @@ class ServingSession:
                 return execute_batch(c._kernel_pipeline(caps), ctx,
                                      np.asarray(b.roots, np.int32),
                                      self.ds.num_vertices)
+            if c.engine == "multiquery":
+                # one bit-parallel dispatch for the whole bucket: its lanes
+                # pack into one frontier word, each lane depth-capped by
+                # its root's (exact-only) predicted convergence depth
+                q = dataclasses.replace(c.query, caps=caps,
+                                        lanes=len(b.roots))
+                return run_query_multi(q, self.ds,
+                                       np.asarray(b.roots, np.int32),
+                                       self._lane_limits(c.query, b))
             q = (c.query if caps == c.query.caps
                  else dataclasses.replace(c.query, caps=caps))
             return run_query_batch(q, self.ds, list(b.roots))
@@ -415,6 +499,44 @@ class ServingSession:
             self._last_refit_count = self.calibrator.count
         return out
 
+    # -- request coalescing -------------------------------------------------
+    def enqueue(self, sql: str, root: int) -> PendingResult:
+        """Queue ONE single-root request for coalesced dispatch and return
+        its ticket immediately (nothing executes).  Requests on the same
+        (graph, query shape, direction) — the session is one graph; the
+        shape key carries the direction — are grouped, and the next
+        :meth:`flush` answers each group with ONE batched dispatch instead
+        of one dispatch per request; the per-root results scatter back to
+        the tickets in enqueue order.  Because the grouped batch flows
+        through the reach-bucketed path with per-bucket lane counts, its
+        multi-lane buckets plan (and almost always pick) the bit-parallel
+        ``multiquery`` engine: up to :data:`~repro.core.engine.WORD_LANES`
+        queued roots ride the bits of one frontier word."""
+        logical = self._logical_for(sql)
+        ticket = PendingResult()
+        self._pending.setdefault(shape_key(logical), []).append(
+            (sql, int(root), ticket))
+        return ticket
+
+    def flush(self, *, check_overflow: bool = True) -> int:
+        """Dispatch every pending shape group as one coalesced batched
+        request and fill the tickets; returns the number of dispatches
+        (groups).  A group's requests may come from textually different SQL
+        (only the shape matters — any member's text plans identically), and
+        duplicate roots are fine: each ticket gets its own lane's result."""
+        pending, self._pending = self._pending, {}
+        dispatches = 0
+        for _, items in sorted(pending.items(), key=lambda kv: repr(kv[0])):
+            sql = items[0][0]
+            roots = [r for _, r, _ in items]
+            out = self.submit(sql, roots, check_overflow=check_overflow)
+            for (_, _, ticket), r in zip(items, out):
+                ticket._fill(r)
+            dispatches += 1
+            self._m_coalesced.inc()
+            self._m_coalesced_roots.inc(len(items))
+        return dispatches
+
     def plan_for(self, sql: str, roots: Sequence[int]) -> PlanEntry:
         """The cached plan entry this session would serve ``roots`` with
         (plans/caches on first use; does not execute)."""
@@ -468,6 +590,11 @@ class ServingSession:
             "latency_us_p95": lat["p95"],
             "latency_us_p99": lat["p99"],
             "overflow_retries": int(self._m_retries.value),
+            "overflow_lane_evictions": int(self._m_lane_evictions.value),
+            "coalesced_dispatches": int(self._m_coalesced.value),
+            "coalesced_roots": int(self._m_coalesced_roots.value),
+            "pending_requests": sum(len(v)
+                                    for v in self._pending.values()),
             "parse_calls": self.counters["parse_calls"],
             "stats_calls": self.counters["stats_calls"],
             "cost_calls": self.counters["cost_calls"],

@@ -283,6 +283,64 @@ def test_deferred_emit_overflow_flag():
 
 
 # ---------------------------------------------------------------------------
+# 5. the diropt_hybrid mispricing regression
+# ---------------------------------------------------------------------------
+# HybridPullStep.estimate used to omit the per-level previous-vertex-set
+# rebuild (a positional frontier keeps no vertex set between levels) and
+# half the hit/compact work, pricing a pull level ~2.5x UNDER the dense
+# push it replaces.  That kept diropt_hybrid a near-tied planner candidate
+# while the paired bench measured it at 0.33-0.37x of plain hybrid on the
+# bench tree profile.
+
+def test_hybrid_pull_estimate_prices_prev_set_rebuild():
+    from repro.core.operators import CostEnv, HybridPullStep, HybridStep
+
+    def env(frontier_cap, visited_rows=0.0):
+        return CostEnv(frontier_rows=5_000, unique_rows=5_000,
+                       emitted_rows=25_000, num_vertices=20_000,
+                       num_edges=100_000, frontier_cap=frontier_cap,
+                       result_cap=100_008, row_bytes=28, col_bytes={},
+                       visited_rows=visited_rows)
+
+    # the rebuild term scales with the frontier cap (>= 36 B per slot,
+    # the same per-row scatter factor as the sparse positional branch)
+    lo = HybridPullStep().estimate(env(1_000)).bytes
+    hi = HybridPullStep().estimate(env(101_000)).bytes
+    assert hi - lo >= 100_000 * 36.0
+
+    # a pull level is never priced below the dense push it replaces —
+    # even at the pull-friendliest extreme (everything already visited,
+    # so the bottom-up gather is free); the old estimate inverted this
+    for visited in (0.0, 10_000.0, 20_000.0):
+        e = env(100_008, visited_rows=visited)
+        assert (HybridPullStep().estimate(e).bytes
+                >= HybridStep().estimate(e).bytes), visited
+
+
+def test_planner_never_picks_diropt_hybrid_on_the_tree_profile(
+        tree_dataset):
+    """The bench-tree profile (scaled): the paired exp1 bench measures
+    diropt_hybrid at ~0.35x of its push-only counterpart there, so a
+    planner that ranks it FIRST is mispricing the pull branch."""
+    from repro.planner import plan
+
+    _, ds, _ = tree_dataset
+    for depth in (4, 8):
+        sql = f"""
+            WITH RECURSIVE t (id, "from", "to", depth) AS (
+              SELECT id, "from", "to", 0 FROM edges WHERE "from" = 0
+              UNION
+              SELECT e.id, e."from", e."to", t.depth + 1
+              FROM edges e JOIN t ON e."from" = t."to"
+              WHERE t.depth < {depth}
+            ) SELECT * FROM t"""
+        report = plan(sql, ds, caps=EngineCaps(frontier=2048, result=4096))
+        assert report.best.label != "diropt_hybrid", depth
+        # and the candidate is still ranked (the fix reprices, not bans)
+        assert any(c.label == "diropt_hybrid" for c in report.ranked)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis extension (real package, or the vendored fallback engine)
 # ---------------------------------------------------------------------------
 

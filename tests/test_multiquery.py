@@ -1,0 +1,346 @@
+"""Bit-parallel multi-query traversal (MS-BFS): lane-exact parity and the
+serving-side coalescing built on it.
+
+The multiquery engine packs up to 32 roots into the BITS of one (V,)
+uint32 frontier/visited word and advances every lane with ONE segment-OR
+sweep per level.  Its contract is strict: lane i of a coalesced dispatch
+is ROW-FOR-ROW identical (rows, row_depths, order — the deferred-emission
+compact layout, sentinel padding included) to a sequential deferred-emit
+BFS on that root alone.  The tests here hold that contract across:
+
+* every legal direction (outbound / inbound / both),
+* partial words (5 roots in a 32-lane word) and full words,
+* mixed convergence (a leaf lane frozen at depth 0 next to a hub lane
+  still sweeping) — per-lane freezing must not bleed between bits,
+* per-lane depth caps (a capped lane equals a sequential run at that
+  ``max_depth``),
+* per-lane overflow flags, and the bucket executor's per-lane EVICTION
+  (only the overflowing lane re-dispatches solo at fallback caps),
+* the planner registration (``lanes > 1`` admits the candidate, ranked
+  per-root amortized; an over-wide batch records a skip reason), and
+* the serving session's enqueue/flush coalescing (grouped by query
+  shape, scattered back to tickets in enqueue order).
+
+The deterministic seeded slice always runs; the hypothesis property (real
+package or the vendored fallback engine) extends the seed set.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import EngineCaps
+from repro.core.engine import (ENGINE_NAMES, MULTIQUERY_ENGINE,
+                               PLAN_BUILDERS, WORD_LANES, Dataset,
+                               RecursiveQuery, dispatch_buckets,
+                               lane_eviction_count, result_lane, run_query,
+                               run_query_multi)
+from repro.core.table import ColumnTable
+from repro.planner import plan
+from repro.planner.optimize import RootBucket
+from repro.planner.serving import ServingSession
+
+DIRECTIONS = ("outbound", "inbound", "both")
+
+
+def _edge_dataset(src, dst, num_vertices):
+    e = len(src)
+    cols = {
+        "id": np.arange(e, dtype=np.int32),
+        "from": np.asarray(src, np.int32),
+        "to": np.asarray(dst, np.int32),
+        "name": np.zeros((e, 4), np.float32)}
+    return Dataset.prepare(ColumnTable.from_numpy(cols), num_vertices)
+
+
+def _random_case(seed):
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(6, 40))
+    e = int(rng.integers(2, 3 * v))
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    depth = int(rng.integers(1, 5))
+    n_roots = int(rng.integers(1, 9))
+    roots = rng.integers(0, v, n_roots).astype(np.int32)
+    return _edge_dataset(src, dst, v), roots, depth, e
+
+
+def _exact_rows(r):
+    """The FULL compact layout of one result: count, positions (sentinel
+    padding included), per-row depths and the id column — order-sensitive,
+    the row-for-row contract, not just a row multiset."""
+    n = int(r.count)
+    return (n,
+            np.asarray(r.positions).tolist(),
+            np.asarray(r.row_depths)[:n].tolist(),
+            np.asarray(r.values["id"])[:n].tolist())
+
+
+def _mq_query(depth, caps, direction):
+    return RecursiveQuery(engine="multiquery", max_depth=depth,
+                          payload_cols=0, caps=caps, direction=direction)
+
+
+def _seq_query(depth, caps, direction):
+    # diropt is the sequential deferred-emission engine the multiquery
+    # finish shares its exact compact layout with
+    return RecursiveQuery(engine="diropt", max_depth=depth, payload_cols=0,
+                          caps=caps, direction=direction)
+
+
+def _check_lane_parity(seed):
+    ds, roots, depth, e = _random_case(seed)
+    caps = EngineCaps(frontier=e + 16, result=e + 16)
+    for direction in DIRECTIONS:
+        r = run_query_multi(_mq_query(depth, caps, direction), ds, roots)
+        for lane, root in enumerate(roots):
+            got = _exact_rows(result_lane(r, lane))
+            want = _exact_rows(
+                run_query(_seq_query(depth, caps, direction), ds,
+                          int(root)))
+            assert got == want, (
+                f"lane {lane} (root {int(root)}, {direction}, seed {seed}) "
+                f"diverged from the sequential deferred-emit BFS")
+
+
+@pytest.mark.parametrize("seed", [3, 7, 21, 48])
+def test_multiquery_lane_parity_seeded(seed):
+    _check_lane_parity(seed)
+
+
+def test_partial_word_and_mixed_convergence(tree_dataset):
+    """5 roots in a 32-lane word, deliberately mixing a deep lane (the
+    tree root) with leaf lanes that converge at depth 0 — per-lane
+    freezing must not disturb the still-active lanes' bits."""
+    _, ds, levels = tree_dataset
+    e = ds.table.num_rows
+    caps = EngineCaps(frontier=e + 8, result=e + 8)
+    dst = np.asarray(ds.table.column("to"))
+    # levels are per-level EDGE position sets; the deepest level's targets
+    # are leaf vertices (height-limited: no out-edges, converge at once)
+    deepest = [lv for lv in levels if lv][-1]
+    leaves = sorted({int(dst[i]) for i in deepest})[:3]
+    mid = int(dst[min(levels[1])])               # a depth-2 vertex
+    roots = np.asarray([0, *leaves, mid], np.int32)
+    assert len(roots) == 5 < WORD_LANES
+    depth = 6
+    r = run_query_multi(_mq_query(depth, caps, "outbound"), ds, roots)
+    assert int(np.asarray(r.count).shape[0]) == 5      # no padding lanes
+    for lane, root in enumerate(roots):
+        got = _exact_rows(result_lane(r, lane))
+        want = _exact_rows(
+            run_query(_seq_query(depth, caps, "outbound"), ds, int(root)))
+        assert got == want
+    # the leaf lanes really did converge immediately while lane 0 ran deep
+    counts = np.asarray(r.count)
+    assert counts[0] > 0 and all(int(counts[1 + i]) == 0
+                                 for i in range(len(leaves)))
+
+
+def test_per_lane_depth_caps(tree_dataset):
+    """A lane capped at depth d is row-for-row a sequential run with
+    ``max_depth=d``; uncapped lanes are unaffected by their neighbor's
+    cap."""
+    _, ds, _ = tree_dataset
+    e = ds.table.num_rows
+    caps = EngineCaps(frontier=e + 8, result=e + 8)
+    roots = np.asarray([0, 0, 1], np.int32)
+    lane_limits = np.asarray([2, 5, 5], np.int32)
+    r = run_query_multi(_mq_query(5, caps, "outbound"), ds, roots,
+                        lane_limits)
+    for lane, cap in enumerate(lane_limits):
+        want = _exact_rows(
+            run_query(_seq_query(int(cap), caps, "outbound"), ds,
+                      int(roots[lane])))
+        assert _exact_rows(result_lane(r, lane)) == want
+
+
+def test_per_lane_overflow_flags(tree_dataset):
+    """Overflow is PER LANE: a tiny result cap truncates the hub lane and
+    flags exactly it, leaving converged-early lanes clean."""
+    _, ds, levels = tree_dataset
+    e = ds.table.num_rows
+    dst = np.asarray(ds.table.column("to"))
+    leaf = int(dst[min([lv for lv in levels if lv][-1])])
+    tiny = EngineCaps(frontier=e + 8, result=4)
+    r = run_query_multi(_mq_query(5, tiny, "outbound"), ds,
+                        np.asarray([0, leaf], np.int32))
+    ovf = np.asarray(r.overflow)
+    assert bool(ovf[0]) and not bool(ovf[1])
+
+
+def test_bucket_executor_evicts_only_overflowing_lanes(tree_dataset):
+    """The shared bucket executor's per-lane overflow handling: when one
+    lane of a coalesced bucket overflows the bucket caps, ONLY that lane
+    is evicted to a solo fallback-caps re-dispatch — the other lanes keep
+    their bucket-caps results, and the timing reports the eviction."""
+    _, ds, levels = tree_dataset
+    e = ds.table.num_rows
+    dst = np.asarray(ds.table.column("to"))
+    leaves = sorted({int(dst[i])
+                     for i in [lv for lv in levels if lv][-1]})[:3]
+    bucket = RootBucket(indices=(0, 1, 2, 3),
+                        roots=(0, *leaves),
+                        caps=EngineCaps(frontier=e + 8, result=4),
+                        predicted_reach=4.0, predicted_depth=5)
+    fallback = EngineCaps(frontier=e + 8, result=e + 8)
+    base = _mq_query(5, bucket.caps, "outbound")
+
+    def _dispatch(i, b, caps):
+        qb = dataclasses.replace(base, caps=caps, lanes=len(b.roots))
+        return run_query_multi(qb, ds, np.asarray(b.roots, np.int32))
+
+    before = lane_eviction_count()
+    timings = []
+    out = dispatch_buckets([bucket], _dispatch, fallback_caps=fallback,
+                           observer=timings.append)
+    assert lane_eviction_count() == before + 1
+    assert timings[0].evicted_lanes == 1 and not timings[0].retried
+    # the evicted hub lane matches a solo run at the FALLBACK caps...
+    assert _exact_rows(out[0]) == _exact_rows(
+        run_query(_seq_query(5, fallback, "outbound"), ds, 0))
+    # ...and the leaf lanes kept their bucket-caps results
+    for i, leaf in enumerate(leaves):
+        assert _exact_rows(out[1 + i]) == _exact_rows(
+            run_query(_seq_query(5, bucket.caps, "outbound"), ds,
+                      int(leaf)))
+
+
+# ---------------------------------------------------------------------------
+# planner registration
+# ---------------------------------------------------------------------------
+
+SQL = """
+    WITH RECURSIVE t (id, "from", "to", depth) AS (
+      SELECT id, "from", "to", 0 FROM edges WHERE "from" = 0
+      UNION
+      SELECT e.id, e."from", e."to", t.depth + 1
+      FROM edges e JOIN t ON e."from" = t."to" WHERE t.depth < 4
+    ) SELECT id, depth FROM t"""
+
+
+def test_multiquery_is_a_builder_not_an_engine_name():
+    """The bit-parallel engine is a first-class PLAN_BUILDERS citizen but
+    stays OUT of ENGINE_NAMES: every all-engines enumeration (tests,
+    benches, forced-engine sweeps) iterates one-root-at-a-time engines,
+    and multiquery only makes sense with a coalesced lane count."""
+    assert MULTIQUERY_ENGINE == "multiquery"
+    assert MULTIQUERY_ENGINE in PLAN_BUILDERS
+    assert MULTIQUERY_ENGINE not in ENGINE_NAMES
+
+
+def test_plan_lanes_axis(tree_dataset):
+    """Single-root planning neither ranks multiquery nor clutters the
+    skip list with it (nothing was requested); ``lanes=8`` admits it,
+    prices the WHOLE coalesced batch, and ranks per-root amortized (on
+    this profile one word sweep answering 8 roots wins)."""
+    _, ds, _ = tree_dataset
+    caps = EngineCaps(2048, 4096)
+    single = plan(SQL, ds, caps=caps)
+    assert all(c.engine != "multiquery" for c in single.ranked)
+    assert all(e != "multiquery" for e, _ in single.skipped)
+
+    batched = plan(SQL, ds, caps=caps, lanes=8)
+    mq = next(c for c in batched.ranked if c.engine == "multiquery")
+    assert mq.query.lanes == 8
+    # amortized ranking: the batch estimate is compared per root
+    best_solo = min(c.cost.est_us for c in batched.ranked
+                    if c.engine != "multiquery")
+    assert mq.cost.est_us / 8 < best_solo
+    assert batched.best.engine == "multiquery"
+    # and the chosen plan executes: lane parity against the solo engines
+    r = batched.best.run(ds, list(range(8)))
+    solo = plan(SQL, ds, caps=caps).best
+    for lane in range(8):
+        got = result_lane(r, lane)
+        want = solo.run(ds, lane)
+        n = int(got.count)
+        assert n == int(want.count)
+        assert (sorted(np.asarray(got.values["id"])[:n].tolist())
+                == sorted(np.asarray(want.values["id"])[:n].tolist()))
+
+
+def test_plan_lanes_over_word_width_is_skipped(tree_dataset):
+    _, ds, _ = tree_dataset
+    report = plan(SQL, ds, caps=EngineCaps(2048, 4096),
+                  lanes=WORD_LANES + 1)
+    assert all(c.engine != "multiquery" for c in report.ranked)
+    reason = dict(report.skipped)["multiquery"]
+    assert str(WORD_LANES) in reason
+
+
+# ---------------------------------------------------------------------------
+# serving-side coalescing
+# ---------------------------------------------------------------------------
+
+def _row_set(r):
+    n = int(r.count)
+    return sorted(zip(np.asarray(r.values["id"])[:n].tolist(),
+                      np.asarray(r.values["depth"])[:n].tolist()))
+
+
+def test_serving_coalesces_and_scatters_back(tree_dataset):
+    """enqueue/flush: requests on one query shape coalesce into ONE
+    batched dispatch whose multi-lane buckets plan the multiquery engine;
+    every ticket's result matches an uncoalesced single-root submit."""
+    _, ds, _ = tree_dataset
+    session = ServingSession(ds, caps=EngineCaps(2048, 4096))
+    roots = list(range(10))
+    tickets = [session.enqueue(SQL, r) for r in roots]
+    assert session.stats["pending_requests"] == len(roots)
+    assert not tickets[0].done
+    with pytest.raises(RuntimeError):
+        tickets[0].result()
+
+    assert session.flush() == 1          # one shape -> one dispatch
+    assert all(t.done for t in tickets)
+    st = session.stats
+    assert st["coalesced_dispatches"] == 1
+    assert st["coalesced_roots"] == len(roots)
+    assert st["pending_requests"] == 0
+
+    # the coalesced batch's multi-lane buckets picked the word engine
+    entry = session.plan_for(SQL, roots)
+    multi = [c for b, c in zip(entry.buckets, entry.bucket_choices)
+             if len(b.roots) > 1]
+    assert multi and all(c.engine == "multiquery" for c in multi)
+    assert all(c.query.lanes == len(b.roots)
+               for b, c in zip(entry.buckets, entry.bucket_choices)
+               if c.engine == "multiquery")
+
+    ref = ServingSession(ds, caps=EngineCaps(2048, 4096))
+    for root, t in zip(roots, tickets):
+        assert _row_set(t.result()) == _row_set(ref.submit(SQL, [root])[0])
+
+
+def test_coalescing_groups_by_shape(tree_dataset):
+    """Two different query shapes pending at once flush as TWO dispatches;
+    textually different SQL of the SAME shape coalesces into one."""
+    _, ds, _ = tree_dataset
+    session = ServingSession(ds, caps=EngineCaps(2048, 4096))
+    same_shape = SQL.replace("SELECT id, depth", "SELECT  id,  depth")
+    other = SQL.replace("t.depth < 4", "t.depth < 3")
+    t1 = session.enqueue(SQL, 0)
+    t2 = session.enqueue(same_shape, 1)
+    t3 = session.enqueue(other, 0)
+    assert session.flush() == 2
+    assert t1.done and t2.done and t3.done
+    ref = ServingSession(ds, caps=EngineCaps(2048, 4096))
+    assert _row_set(t1.result()) == _row_set(ref.submit(SQL, [0])[0])
+    assert _row_set(t2.result()) == _row_set(ref.submit(SQL, [1])[0])
+    assert _row_set(t3.result()) == _row_set(ref.submit(other, [0])[0])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis extension (real package, or the vendored fallback engine)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                       # pragma: no cover
+    pass
+else:
+    @settings(max_examples=2, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_multiquery_lane_parity_random(seed):
+        _check_lane_parity(seed)

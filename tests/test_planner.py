@@ -500,10 +500,13 @@ def test_explain_covers_every_engine(golden_dataset):
 # ---------------------------------------------------------------------------
 
 def test_plan_builders_are_typed_callables():
-    assert set(PLAN_BUILDERS) == set(ENGINE_NAMES)
+    # multiquery is a first-class plan builder but NOT an engine users can
+    # force by name: it only makes sense per coalesced batch (lanes > 1)
+    assert set(PLAN_BUILDERS) == set(ENGINE_NAMES) | {"multiquery"}
     for name, builder in PLAN_BUILDERS.items():
         assert callable(builder), name
-        p = builder(RecursiveQuery(name, 3, 2, CAPS))
+        lanes = 8 if name == "multiquery" else 1
+        p = builder(RecursiveQuery(name, 3, 2, CAPS, lanes=lanes))
         assert isinstance(p, Pipeline), name
 
 

@@ -388,9 +388,11 @@ def test_serving_permuted_roots_keep_request_order(tree_ds):
 
 
 def test_serving_per_bucket_engine_choice(tree_ds):
-    """Buckets are re-costed with their own caps: the cached plan records
-    one engine per bucket, and every per-bucket engine is a legal
-    candidate of the shape-level report."""
+    """Buckets are re-costed with their own caps AND lane counts: the
+    cached plan records one engine per bucket, and every per-bucket
+    engine is a legal candidate of the shape-level report — or the
+    batch-only bit-parallel ``multiquery`` engine, which only a
+    multi-lane bucket can admit (``lanes == len(bucket.roots) > 1``)."""
     sql = paper_listing(1, root=0, depth=4)
     session = ServingSession(tree_ds, caps=CAPS)
     roots = [0, 1, 2, 3]
@@ -398,10 +400,13 @@ def test_serving_per_bucket_engine_choice(tree_ds):
     entry = session.plan_for(sql, roots)
     assert len(entry.bucket_choices) == len(entry.buckets)
     legal = {c.label for c in entry.report.ranked}
-    for c in entry.bucket_choices:
-        assert c.label in legal
-    for b in entry.plan_json["buckets"]:
-        assert b["engine"] in legal
+    for c, b in zip(entry.bucket_choices, entry.buckets):
+        if c.label == "multiquery":
+            assert c.query.lanes == len(b.roots) > 1
+        else:
+            assert c.label in legal
+    for bj, c in zip(entry.plan_json["buckets"], entry.bucket_choices):
+        assert bj["engine"] == c.label
 
 
 def test_plan_json_schema_and_roundtrip(tree_ds):
