@@ -1,7 +1,7 @@
 """Serving experiment: cached-plan dispatch latency for the traversal
 serving layer (beyond-paper; the ROADMAP's many-users north star).
 
-Five cells:
+The cells:
 
 * ``exp_serving/cold_plan`` — the FIRST request for a query shape: parse +
   statistics + costing + bucket layout + jit compiles.  Paid once per
@@ -27,6 +27,15 @@ Five cells:
   installed on the session, as a paired ratio (``time_ratio``).  The
   disabled path must be free (gate: ratio >= 0.95), or tracing cannot be
   left wired into production serving.
+* ``exp_serving/admission_overhead_ratio`` — the admission gate: warm
+  dispatch latency with guards OFF vs. the default guarded front door, as
+  a paired ratio on all-admitted traffic.  The ladder is one O(1) degree
+  lookup + a few float ops per root, so it must be ~free (gate: ratio >=
+  0.95), or it cannot be left on by default.
+* ``exp_serving/guarded_p99_vs_unguarded`` — the admission payoff
+  (informational, ungated): with the degrade budget tightened so the hub
+  root depth-clamps, per-request p99 over the mixed hub+leaf batch vs.
+  the unguarded session answering the same traffic.
 * ``exp_serving/multiquery_throughput`` — the bit-parallel coalescing gate:
   32 single-root requests enqueued and flushed as ONE coalesced dispatch
   (whose multi-lane buckets plan the ``multiquery`` engine — up to 32
@@ -127,6 +136,55 @@ def run(num_vertices: int = 200_000, height: int = 60, depth: int = 5,
     emit(f"exp_serving/disabled_tracer_ratio/d{depth}",
          us_warm / BATCH_ROOTS,
          f"disabled_tracer_ratio={tracer_ratio:.3f}")
+
+    # -- admission gate: the guard ladder must be ~free on admitted traffic
+    # paired ratio (guards off) / (guards on) over all-traverse traffic:
+    # the ladder is one O(1) degree lookup + a few float ops per root, so
+    # this must sit at ~1.0 (gated >= 0.95 in scripts/perf_gate)
+    unguarded = ServingSession(ds, guards=False)
+    unguarded.submit(sql, roots)    # warm its plan cache + jit
+
+    def _submit_unguarded():
+        return unguarded.submit(sql, roots)
+
+    admission_ratio = time_ratio(_submit_unguarded, _submit,
+                                 repeat=max(repeat, 7))
+    out["admission_overhead_ratio"] = admission_ratio
+    emit(f"exp_serving/admission_overhead_ratio/d{depth}",
+         us_warm / BATCH_ROOTS,
+         f"admission_overhead_ratio={admission_ratio:.3f},"
+         f"admitted={session.stats['admission_traverse']}")
+
+    # -- admission payoff (informational, ungated): degrading the hub ----
+    # tighten the degrade budget so the HUB root depth-clamps while the
+    # leaf-ish roots still traverse; per-request p99 over the mixed batch
+    # should drop vs. the unguarded session answering the same traffic
+    from repro.planner.calibrate import Calibrator
+    from repro.planner.guards import admit_roots, guard_cost_us
+
+    hub = admit_roots(ds, "outbound", roots, depth,
+                      session.calibrator.constants)[0]
+    lo = guard_cost_us(hub.estimate, session.calibrator.constants, depth=1)
+    tight = session.calibrator.constants._replace(
+        guard_degrade_us=(lo + hub.est_us) / 2.0)
+    guarded = ServingSession(ds, calibrator=Calibrator(prior=tight))
+    guarded.submit(sql, roots)      # warm (root 0 degrades here)
+    degraded = [r for r, _ in guarded.last_report.degraded_roots]
+
+    def _p99(s):
+        ts = []
+        for _ in range(max(repeat * 4, 20)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                [r.count for r in s.submit(sql, roots)])
+            ts.append((time.perf_counter() - t0) * 1e6)
+        return float(np.percentile(ts, 99))
+
+    p99_g, p99_u = _p99(guarded), _p99(unguarded)
+    out["guarded_p99_ratio"] = p99_g / max(p99_u, 1e-9)
+    emit(f"exp_serving/guarded_p99_vs_unguarded/d{depth}", p99_g,
+         f"guarded_p99_vs_unguarded={p99_g / max(p99_u, 1e-9):.2f},"
+         f"unguarded_p99_us={p99_u:.1f},degraded_roots={len(degraded)}")
 
     # -- calibration gate: refit constants must not worsen selection ------
     cal = session.calibrator

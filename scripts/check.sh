@@ -8,11 +8,16 @@
 # if the quick benchmark run cannot complete, if the perf gate trips (the
 # batched serving cell must report per_root_speedup_vs_sequential >= 1.0,
 # every planner cell must keep its selection regret vs_best_forced <= 1.2,
-# and serving with a DISABLED tracer must stay within 5% of no tracer at
-# all — see scripts/perf_gate.py), or if the trace smoke produces an
+# serving with a DISABLED tracer must stay within 5% of no tracer at
+# all, and the admission guard ladder must stay within 5% of guards-off
+# serving — see scripts/perf_gate.py), if the trace smoke produces an
 # invalid trace (a tiny traversal-serving run with --trace on, validated
 # by scripts/check_trace.py: header, span fields, id/parent forest, time
-# nesting).  Writes BENCH_bfs.json (with a _meta provenance stamp) and
+# nesting), or if the chaos smoke fails (one injected fault per class
+# through the serving front door — scripts/check_chaos.py; every fault
+# must end in a classified degraded answer or a typed error, never a
+# crash or silently-wrong rows).  Writes BENCH_bfs.json (with a _meta
+# provenance stamp) and
 # appends one line to BENCH_history.jsonl so the perf trajectory can be
 # compared across PRs; the perf gate prints a NON-GATING drift report
 # against that history.
@@ -60,3 +65,6 @@ trap 'rm -f "$TRACE_TMP"' EXIT
 python -m repro.launch.serve --traversal --vertices 2000 --height 8 \
   --batch 4 --requests 3 --depth 4 --trace "$TRACE_TMP" > /dev/null
 python scripts/check_trace.py "$TRACE_TMP" --min-spans 5
+
+echo "== chaos smoke =="
+python scripts/check_chaos.py

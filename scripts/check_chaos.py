@@ -1,0 +1,151 @@
+"""CI chaos smoke: one injected fault per class through the serving front
+door, on a small graph, in one process.
+
+This is NOT the full chaos suite (``tests/test_chaos.py`` is tier-1); it
+is the fast end-to-end sanity pass ``scripts/check.sh`` runs after the
+benchmarks: arm each :mod:`repro.obs.faultinject` point once (plus the two
+no-seam fault classes: garbage roots and an over-budget root), drive a
+request through it, and print one PASS/FAIL line per class.  Exit 1 if
+any class fails — a fault must end in a classified degraded answer or a
+typed error, never a crash, a hang, or silently-wrong rows.
+
+Usage: PYTHONPATH=src python scripts/check_chaos.py
+"""
+from __future__ import annotations
+
+import sys
+import warnings
+
+sys.path.insert(0, "src")
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.core.engine import Dataset
+    from repro.data.treegen import TreeSpec, make_edge_table
+    from repro.obs import faultinject
+    from repro.planner import ServingSession, paper_listing
+    from repro.planner.calibrate import Calibrator
+    from repro.planner.cost import DEFAULT_CONSTANTS
+    from repro.planner.guards import AdmissionError, InvalidRequestError
+    from repro.planner.plan_store import save_session
+
+    spec = TreeSpec(num_vertices=2000, height=8, payload_cols=0, seed=7)
+    ds = Dataset.prepare(make_edge_table(spec), spec.num_vertices)
+    sql = paper_listing(1, root=0, depth=4)
+    roots = [0, 1, 7, 500]
+
+    baseline_session = ServingSession(ds)
+    baseline = baseline_session.submit(sql, roots)
+    base_ids = [sorted(np.asarray(r.values["id"])[:int(r.count)].tolist())
+                for r in baseline]
+
+    def parity(out, skip=()):
+        for r, got, want in zip(roots, out, base_ids):
+            if r in skip:
+                continue
+            ids = sorted(
+                np.asarray(got.values["id"])[:int(got.count)].tolist())
+            if ids != want:
+                return False
+        return True
+
+    results = []
+
+    def check(name, fn):
+        try:
+            ok, detail = fn()
+        except Exception as e:                     # a crash IS the failure
+            ok, detail = False, f"crashed: {type(e).__name__}: {e}"
+        results.append((name, ok, detail))
+        print(f"{'PASS' if ok else 'FAIL'} chaos/{name}: {detail}")
+
+    def overflow():
+        s = ServingSession(ds)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with faultinject.injected("bucket_overflow"):
+                out = s.submit(sql, roots)
+        rep = s.last_report
+        return (rep.retries >= 1 and parity(out),
+                f"retries={rep.retries}, rows match baseline")
+
+    def straggler():
+        s = ServingSession(ds)
+        s.submit(sql, roots)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with faultinject.injected("straggler_sleep", 0.05, times=None):
+                out = s.submit(sql, roots, deadline_us=20_000.0)
+        rep = s.last_report
+        return (rep.truncated and parity(out, skip=set(rep.skipped_roots)),
+                f"truncated, skipped_roots={rep.skipped_roots}")
+
+    def corrupt_store(tmpdir=[]):
+        import os
+        import tempfile
+        d = tempfile.mkdtemp(prefix="chaos_store.")
+        path = os.path.join(d, "store.json")
+        save_session(baseline_session, path)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            with faultinject.injected("plan_store_corrupt"):
+                s = ServingSession(ds, plan_store=path)
+        warned = any("cold-start" in str(x.message) for x in w)
+        out = s.submit(sql, roots)
+        return (warned and parity(out),
+                "warned + cold-started + serves row-parity answers")
+
+    def poison():
+        import math
+        s = ServingSession(ds, calibrate_every=4)
+        s.submit(sql, roots)         # cold: plan + compile, no observation
+        with faultinject.injected("calibrator_poison", float("nan"),
+                                  times=None):
+            out = s.submit(sql, roots)
+        c = s.calibrator.constants
+        finite = all(v is None or math.isfinite(v)
+                     for v in (c.base_us, c.level_us, c.bytes_per_us,
+                               c.kernel_factor))
+        return (s.calibrator.discarded > 0 and finite and parity(out),
+                f"discarded={s.calibrator.discarded}, constants finite")
+
+    def garbage():
+        s = ServingSession(ds)
+        typed = 0
+        for bad in ([-1], [ds.num_vertices + 5], [0.25]):
+            try:
+                s.submit(sql, bad)
+            except InvalidRequestError:
+                typed += 1
+        tight = DEFAULT_CONSTANTS._replace(guard_degrade_us=1e-6,
+                                           guard_reject_us=1e-3)
+        s2 = ServingSession(ds, calibrator=Calibrator(prior=tight))
+        try:
+            s2.submit(sql, [0])
+        except AdmissionError:
+            typed += 1
+        out = s.submit(sql, roots)                 # the session survives
+        return (typed == 4 and parity(out),
+                f"{typed}/4 typed errors, session still serves")
+
+    check("bucket_overflow", overflow)
+    check("straggler_deadline", straggler)
+    check("plan_store_corrupt", corrupt_store)
+    check("calibrator_poison", poison)
+    check("garbage_requests", garbage)
+
+    if faultinject.armed():
+        print("FAIL chaos/seam: a fault is still armed after the sweep")
+        return 1
+    failed = [n for n, ok, _ in results if not ok]
+    if failed:
+        print(f"CHAOS SMOKE FAILED: {failed}")
+        return 1
+    print(f"chaos smoke OK: {len(results)} fault class(es)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """Regenerate ``tests/golden/plan_weighted.json``.
 
-The snapshot freezes the schema-v5 machine-readable plan document for the
+The snapshot freezes the schema-v6 machine-readable plan document for the
 canonical weighted shortest-path query on the seeded random graph used
 throughout ``tests/test_semiring.py``: candidate ranking (the two weighted
 engines), per-engine skip reasons, per-operator byte/row estimates priced

@@ -43,6 +43,12 @@ Fails (exit 1) when the perf trajectory regresses past the ROADMAP bars:
   MS-BFS sweep per level for all 32 lanes) must beat the
   one-root-per-vmap-lane bucketed path by at least 4x (paired ratio; the
   cell itself verifies row-set parity before timing).
+* the admission gate: any cell reporting ``admission_overhead_ratio``
+  below 0.95 — the guard ladder (``exp_serving/admission_overhead_ratio``:
+  guards off vs. the default guarded front door, paired, on all-admitted
+  traffic) must be ~free, or admission control cannot be left on by
+  default.  The payoff cell (``guarded_p99_vs_unguarded``) is
+  informational and ungated.
 
 The lockstep reference cell deliberately reports its ratio under a
 different key (``lockstep_vs_sequential``) so the gate does not fire on the
@@ -72,6 +78,7 @@ DIROPT_RE = re.compile(r"(?:^|,)diropt_vs_push_only=([\d.]+)")
 TRACER_RE = re.compile(r"(?:^|,)disabled_tracer_ratio=([\d.]+)")
 SSSP_RE = re.compile(r"(?:^|,)sssp_bucketed_vs_lockstep=([\d.]+)")
 MULTIQUERY_RE = re.compile(r"(?:^|,)multiquery_vs_bucketed=([\d.]+)")
+ADMISSION_RE = re.compile(r"(?:^|,)admission_overhead_ratio=([\d.]+)")
 
 MIN_PER_ROOT_SPEEDUP = 1.0
 MAX_PLANNER_REGRET = 1.2
@@ -79,6 +86,7 @@ MIN_DIROPT_SPEEDUP = 1.0
 MIN_TRACER_RATIO = 0.95
 MIN_SSSP_SPEEDUP = 1.0
 MIN_MULTIQUERY_SPEEDUP = 4.0
+MIN_ADMISSION_RATIO = 0.95
 
 # drift-report knobs (non-gating): compare against the median of the last
 # HISTORY_WINDOW runs, flag cells that moved more than DRIFT_FLAG x
@@ -86,7 +94,7 @@ HISTORY_WINDOW = 5
 DRIFT_FLAG = 1.5
 
 GATES = (SPEEDUP_RE, REGRET_RE, CAL_REGRET_RE, REHYDRATED_RE, DIROPT_RE,
-         TRACER_RE, SSSP_RE, MULTIQUERY_RE)
+         TRACER_RE, SSSP_RE, MULTIQUERY_RE, ADMISSION_RE)
 
 
 def bench_rows(doc: dict) -> dict:
@@ -146,6 +154,12 @@ def check(rows: dict) -> list[str]:
                 f"{name}: multiquery_vs_bucketed={m.group(1)} < "
                 f"{MIN_MULTIQUERY_SPEEDUP} (the packed-word coalesced "
                 "dispatch must amortize its one sweep over 32 lanes)")
+        m = ADMISSION_RE.search(derived)
+        if m and float(m.group(1)) < MIN_ADMISSION_RATIO:
+            failures.append(
+                f"{name}: admission_overhead_ratio={m.group(1)} < "
+                f"{MIN_ADMISSION_RATIO} (the guard ladder must be ~free "
+                "on admitted traffic)")
     return failures
 
 

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import faultinject as _fault
 from repro.obs import trace as _trace
 
 from .bitmap import (bitmap_plan, diropt_hybrid_plan, diropt_plan,
@@ -476,11 +477,91 @@ def _evict_bucket(b, lane: int, caps: EngineCaps):
     return types.SimpleNamespace(indices=indices, roots=roots, caps=caps)
 
 
+class _SkippedLane:
+    """Sentinel filling a lane whose bucket was skipped by the deadline
+    budget — callers that passed ``deadline_us`` replace it with a
+    classified degraded answer; callers that didn't never see it."""
+
+    def __repr__(self) -> str:           # pragma: no cover - debug aid
+        return "<skipped lane>"
+
+
+SKIPPED = _SkippedLane()
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """THE retry policy: full-bucket overflow retries, per-lane evictions,
+    and guard-degraded re-dispatches all spend from this one bounded
+    budget, replacing the former ad-hoc one-retry branches.
+
+    ``max_attempts`` counts dispatches per bucket (initial + retries);
+    ``growth`` grows caps geometrically toward the fallback on each retry
+    (``None`` jumps straight to fallback caps — the historical behavior);
+    ``budget`` bounds TOTAL retries across the policy's lifetime (a
+    serving session shares one policy across requests).  When the budget
+    is exhausted the executor stops re-dispatching and reports the bucket
+    in :attr:`DispatchReport.denied_buckets` — the serving layer then
+    degrades that answer (truncated rows, flagged) instead of raising
+    mid-request."""
+
+    max_attempts: int = 2
+    growth: Optional[float] = None
+    budget: Optional[int] = None
+    spent: int = 0
+
+    def spend(self) -> bool:
+        """Consume one retry if the budget allows it."""
+        if self.budget is not None and self.spent >= self.budget:
+            return False
+        self.spent += 1
+        return True
+
+    def next_caps(self, attempt: int, current: EngineCaps,
+                  fallback: EngineCaps) -> EngineCaps:
+        """Caps for retry number ``attempt`` (1-based): geometric growth
+        toward the fallback, or straight to it when ``growth`` is None or
+        this is the last allowed attempt."""
+        if self.growth is None or attempt + 1 >= self.max_attempts:
+            return fallback
+        return EngineCaps(
+            frontier=min(int(current.frontier * self.growth),
+                         fallback.frontier),
+            result=min(int(current.result * self.growth), fallback.result))
+
+
+@dataclasses.dataclass
+class DispatchReport:
+    """What :func:`dispatch_buckets` did beyond returning rows: which
+    buckets were skipped (deadline), straggled, or were denied a retry —
+    the explicit flags that replace silent blocking/truncation."""
+
+    skipped_buckets: list = dataclasses.field(default_factory=list)
+    skipped_lanes: list = dataclasses.field(default_factory=list)
+    #   ORIGINAL root-vector indices whose bucket was never launched
+    straggler_buckets: list = dataclasses.field(default_factory=list)
+    denied_buckets: list = dataclasses.field(default_factory=list)
+    #   overflowed buckets the retry budget refused to re-dispatch: their
+    #   rows are TRUNCATED at bucket caps (callers must not overflow-check)
+    denied_lanes: list = dataclasses.field(default_factory=list)
+    retries: int = 0
+    evictions: int = 0
+
+    @property
+    def truncated(self) -> bool:
+        """True iff any lane's answer is incomplete (skipped or denied)."""
+        return bool(self.skipped_buckets or self.denied_buckets)
+
+
 def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
                      fallback_caps: EngineCaps,
                      finish: Optional[Callable] = None,
                      observer: Optional[Callable] = None,
-                     to_host: bool = False) -> list:
+                     to_host: bool = False,
+                     retry: Optional[RetryPolicy] = None,
+                     deadline_us: Optional[float] = None,
+                     straggler=None,
+                     report: Optional[DispatchReport] = None) -> list:
     """THE bucket-dispatch executor: every reach-bucketed execution path
     (:func:`run_query_buckets`, ``PhysicalChoice.run_bucketed``'s kernel
     branch, ``ServingSession._execute``) delegates here, so the shared
@@ -492,27 +573,45 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
     lane dimension).  The executor:
 
     * launches EVERY bucket before touching any result — dispatches are
-      async, and the host-side overflow check must not serialize them;
-    * retries on overflow with ``fallback_caps`` (bucket caps are
-      predictions; bucketing must never turn a valid query into a
+      async, and the host-side overflow check must not serialize them.
+      EXCEPT under a ``deadline_us`` budget: then buckets launch lazily,
+      one at a time, and a bucket is SKIPPED (its lanes filled with the
+      :data:`SKIPPED` sentinel, recorded on the ``report``) when the
+      budget is already exhausted or the straggler monitor's predicted
+      wall time (``straggler.expected``) no longer fits the remainder —
+      skip-vs-launch is decided BEFORE paying the dispatch cost.  The
+      first bucket always launches: a request makes progress, the budget
+      only stops FURTHER work;
+    * retries on overflow through the :class:`RetryPolicy` (bucket caps
+      are predictions; bucketing must never turn a valid query into a
       truncated result).  When overflow is PER LANE and only some real
       lanes overflowed, just those lanes are EVICTED to solo fallback
       re-dispatches and the rest of the bucket keeps its result at bucket
       caps — with coalesced lanes one pathological root must not force
       the whole word onto worst-case caps.  Only a full-bucket (or
-      scalar) overflow still re-dispatches the whole bucket;
+      scalar) overflow still re-dispatches the whole bucket.  A policy
+      whose budget is exhausted DENIES the retry: the bucket is recorded
+      in ``report.denied_buckets`` and its truncated-at-caps rows stand
+      (callers degrade the answer instead of raising mid-request);
     * applies the optional ``finish(index, bucket, result)`` hook to the
-      batched result (the serving layer dresses per-bucket results here);
+      batched result (the serving layer dresses per-bucket results here;
+      the report is filled for bucket ``i`` before ``finish(i, ...)``
+      runs, so the hook can consult it);
     * scatters lanes back to the ORIGINAL root order via each bucket's
       ``indices`` (``to_host=True`` converts each bucket's result to host
       numpy first — one transfer per bucket, lanes become free views);
     * measures per-bucket wall-clock ONCE, consistently, and reports it to
       ``observer(timing)`` as a :class:`BucketTiming` — this is the single
-      measurement point the cost-model calibrator trusts.
+      measurement point the cost-model calibrator trusts.  When a
+      ``straggler`` monitor is passed, every measured bucket feeds its
+      EMA and buckets exceeding the straggler deadline are recorded in
+      ``report.straggler_buckets``.
     """
     buckets = tuple(buckets)
     total = sum(len(b.indices) for b in buckets)
     out: list = [None] * total
+    policy = retry if retry is not None else RetryPolicy()
+    rep = report if report is not None else DispatchReport()
     # the executor owns bucket-granular tracing: suppress the global
     # tracer around nested dispatches so per-root instrumentation inside
     # run_query_batch cannot serialize the async launch loop, and emit
@@ -520,13 +619,41 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
     tracer = _trace.current_tracer()
     prev_tracer = _trace.set_tracer(None) if tracer is not None else None
     try:
+        lazy = deadline_us is not None
+        t_start = time.perf_counter()
         launched = []
-        for i, b in enumerate(buckets):
-            t0 = time.perf_counter()
-            launched.append((i, b, t0, dispatch(i, b, b.caps)))
+        if not lazy:
+            for i, b in enumerate(buckets):
+                t0 = time.perf_counter()
+                launched.append((i, b, t0, dispatch(i, b, b.caps)))
         prev_done = None
         timings = []
-        for i, b, t0, r in launched:
+        for k in range(len(buckets)):
+            if lazy:
+                i, b = k, buckets[k]
+                elapsed_us = (time.perf_counter() - t_start) * 1e6
+                predicted_us = (straggler.expected
+                                if straggler is not None else 0.0)
+                if timings and elapsed_us + predicted_us >= deadline_us:
+                    rep.skipped_buckets.append(i)
+                    if tracer is not None:
+                        tracer.event("deadline_skip", bucket=i,
+                                     lanes=len(b.indices),
+                                     elapsed_us=elapsed_us,
+                                     predicted_us=predicted_us,
+                                     deadline_us=deadline_us)
+                    for idx in b.indices:
+                        rep.skipped_lanes.append(idx)
+                        out[idx] = SKIPPED
+                    continue
+                t0 = time.perf_counter()
+                r = dispatch(i, b, b.caps)
+            else:
+                i, b, t0, r = launched[k]
+            if _fault._ACTIVE:
+                d = _fault.consume("straggler_sleep")
+                if d:
+                    time.sleep(float(d))
             retried = False
             evicted: dict = {}
             if b.caps != fallback_caps:
@@ -534,22 +661,51 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
                 n_real = len(b.indices)
                 real_ov = ov[:n_real] if ov.size >= n_real else \
                     np.broadcast_to(ov, (n_real,))
+                if _fault._ACTIVE and _fault.consume("bucket_overflow"):
+                    real_ov = np.ones(n_real, dtype=bool)
                 if real_ov.any():
                     if n_real == 1 or real_ov.all():
-                        r = dispatch(i, b, fallback_caps)
-                        retried = True
-                        _note_overflow_retry(i, b.caps, fallback_caps,
-                                             tracer)
+                        caps_now = b.caps
+                        attempt = 1
+                        while attempt < policy.max_attempts:
+                            if not policy.spend():
+                                break
+                            caps_now = policy.next_caps(
+                                attempt, caps_now, fallback_caps)
+                            r = dispatch(i, b, caps_now)
+                            retried = True
+                            rep.retries += 1
+                            _note_overflow_retry(i, b.caps, caps_now,
+                                                 tracer)
+                            ov = np.asarray(r.overflow).reshape(-1)
+                            real_ov = ov[:n_real] if ov.size >= n_real \
+                                else np.broadcast_to(ov, (n_real,))
+                            attempt += 1
+                            if not real_ov.any() \
+                                    or caps_now == fallback_caps:
+                                break
+                        if real_ov.any() and not retried:
+                            rep.denied_buckets.append(i)
+                            rep.denied_lanes.extend(b.indices)
                     else:
                         # per-lane eviction: solo fallback re-dispatch for
                         # just the overflowing lanes
                         hit = np.nonzero(real_ov)[0].tolist()
+                        done = []
                         for lane in hit:
+                            if not policy.spend():
+                                rep.denied_lanes.append(b.indices[lane])
+                                continue
                             sb = _evict_bucket(b, lane, fallback_caps)
                             evicted[lane] = (sb, dispatch(i, sb,
                                                           fallback_caps))
-                        _note_lane_eviction(i, hit, b.caps, fallback_caps,
-                                            tracer)
+                            done.append(lane)
+                            rep.evictions += 1
+                        if done:
+                            _note_lane_eviction(i, done, b.caps,
+                                                fallback_caps, tracer)
+                        if len(done) < len(hit):
+                            rep.denied_buckets.append(i)
             if finish is not None:
                 r = finish(i, b, r)
                 evicted = {lane: (sb, finish(i, sb, rr))
@@ -584,6 +740,12 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
                 elapsed_us=(t_done - (t0 if prev_done is None
                                       else max(t0, prev_done))) * 1e6,
                 predicted_caps=b.caps, evicted_lanes=len(evicted))
+            if straggler is not None and straggler.record(timing.elapsed_us):
+                rep.straggler_buckets.append(i)
+                if tracer is not None:
+                    tracer.event("straggler", bucket=i,
+                                 elapsed_us=timing.elapsed_us,
+                                 expected_us=straggler.expected)
             if observer is not None:
                 observer(timing)
             timings.append((timing, r))
@@ -604,7 +766,7 @@ def dispatch_buckets(buckets: Sequence, dispatch: Callable, *,
     if any(x is None for x in out):
         raise ValueError("buckets do not cover lanes 0..%d exactly"
                          % (total - 1))
-    return out
+    return out  # deadline-skipped lanes hold the SKIPPED sentinel
 
 
 def run_query_buckets(q: RecursiveQuery, ds: Dataset, buckets

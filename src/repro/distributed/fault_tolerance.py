@@ -48,6 +48,18 @@ class StragglerMonitor:
         return self.deadline_factor * self._ema if self._count else float(
             "inf")
 
+    @property
+    def expected(self) -> float:
+        """EMA-predicted next step time (0.0 until warm-up completes).
+
+        The serving executor's deadline budgeting reads this to decide
+        skip-vs-launch BEFORE paying a bucket's dispatch cost: if the
+        predicted wall time does not fit the request's remaining budget,
+        the bucket is skipped instead of silently blocking past the
+        deadline.  Returning 0.0 while cold means a cold monitor never
+        vetoes a launch — only the hard budget does."""
+        return self._ema if self._count >= self.warmup_steps else 0.0
+
 
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:

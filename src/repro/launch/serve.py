@@ -87,7 +87,8 @@ def serve_traversals(args) -> dict:
                               "requests": args.requests})
     rehydrated = (args.plan_store is not None
                   and os.path.exists(args.plan_store))
-    session = ServingSession(ds, plan_store=args.plan_store, tracer=tracer)
+    session = ServingSession(ds, plan_store=args.plan_store, tracer=tracer,
+                             guards=not args.no_guards)
     if rehydrated:
         print(f"(rehydrated) plan store {args.plan_store}: "
               f"{len(session._plans)} plan(s), "
@@ -100,7 +101,8 @@ def serve_traversals(args) -> dict:
         roots = [0] + rng.randint(0, args.vertices,
                                   size=args.batch - 1).tolist()
         t0 = time.perf_counter()
-        results = session.submit(sql, roots)
+        results = session.submit(sql, roots,
+                                 deadline_us=args.deadline_us)
         jax.block_until_ready([r.count for r in results])
         dt = time.perf_counter() - t0
         if i == 0:
@@ -126,6 +128,11 @@ def serve_traversals(args) -> dict:
           f"p99={stats['latency_us_p99'] / 1e3:.2f}ms  "
           f"hit rate {stats['plan_hit_rate']:.2f}, "
           f"{stats['overflow_retries']} overflow retr(ies)")
+    print(f"front door: admission {stats['admission_traverse']} traverse / "
+          f"{stats['admission_degrade']} degrade / "
+          f"{stats['admission_reject']} reject; "
+          f"{stats['deadline_skipped_buckets']} deadline-skipped "
+          f"bucket(s), {stats['retry_denied']} retry-denied lane(s)")
     if args.plan_store is not None:
         session.save_plan_store()
         print(f"plan store saved to {args.plan_store}")
@@ -170,6 +177,16 @@ def main(argv=None):
     ap.add_argument("--trace-chrome", default=None, metavar="PATH",
                     help="write the trace as a Chrome/Perfetto-loadable "
                          "JSON file at PATH")
+    ap.add_argument("--deadline-us", type=float, default=None,
+                    metavar="US",
+                    help="per-request deadline budget in microseconds: "
+                         "buckets predicted to blow the budget are "
+                         "skipped and the answer is explicitly truncated "
+                         "(session.last_report names the skipped roots)")
+    ap.add_argument("--no-guards", action="store_true",
+                    help="disable the admission guard ladder (default: "
+                         "every root is priced against the guard budgets "
+                         "before dispatch; see docs/robustness.md)")
     args = ap.parse_args(argv)
 
     if args.traversal:

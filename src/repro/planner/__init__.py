@@ -18,6 +18,9 @@ The layers (one module each):
   per-operator rows/bytes and per-level push/pull directions);
 * :mod:`repro.planner.serving`  — the plan-cached, reach-bucketed serving
   session (one graph, many root batches);
+* :mod:`repro.planner.guards`   — the admission guard ladder pricing every
+  root's predicted cost before dispatch (traverse / degrade / reject; see
+  docs/robustness.md);
 * :mod:`repro.planner.calibrate` — the feedback loop: measured per-bucket
   serving latencies refit the :class:`CostConstants` (and the kernel
   factor is MEASURED, not guessed);
@@ -42,7 +45,10 @@ from .optimize import (KERNEL_LABEL, PhysicalChoice,           # noqa: F401
                        PlannerReport, RootBucket, bucket_roots,
                        choose, default_caps, kernel_expand_fn, plan,
                        plan_and_run)
-from .serving import PlanEntry, ServingSession, shape_key      # noqa: F401
+from .guards import (AdmissionError, GuardResult,              # noqa: F401
+                     InvalidRequestError, admit_roots, guard_cost_us)
+from .serving import (PlanEntry, RequestReport,                # noqa: F401
+                      ServingSession, shape_key)
 from .plan_store import (graph_digest, load_store,             # noqa: F401
                          migrate_plan_doc, rehydrate_session,
                          save_session)

@@ -372,6 +372,7 @@ class Calibrator:
         self.kernel_count = 0
         self.refits = 0
         self.rejected_refits = 0
+        self.discarded = 0
         self.log: list[Observation] = []
 
     # -- recording --------------------------------------------------------
@@ -379,7 +380,16 @@ class Calibrator:
                 kernel_bytes: float, measured_us: float) -> None:
         """Record one measured dispatch.  ``plain_bytes``/``kernel_bytes``
         are the plan's factor-independent byte split
-        (:attr:`~repro.planner.cost.PlanCost.plain_bytes`)."""
+        (:attr:`~repro.planner.cost.PlanCost.plain_bytes`).
+
+        Non-finite or negative measurements are DISCARDED (counted in
+        ``discarded``): a single NaN entering the normal equations would
+        poison every later refit, and a clock can glitch — the calibrator
+        must never let one bad sample corrupt its state."""
+        m = float(measured_us)
+        if not np.isfinite(m) or m < 0.0:
+            self.discarded += 1
+            return
         x = np.array([1.0, float(levels), float(plain_bytes),
                       float(kernel_bytes)])
         self._xtx += np.outer(x, x)

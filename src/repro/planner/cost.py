@@ -57,6 +57,17 @@ PULL_ALPHA = 1.0
 PULL_BETA = 64.0
 
 
+# admission guard-ladder thresholds (microsecond budgets): a root whose
+# PRE-DISPATCH cost estimate (reach rows priced through estimate_us under
+# the session's CURRENT constants) exceeds guard_degrade_us is depth-clamped
+# to a bounded prefix; exceeding guard_reject_us raises a typed
+# AdmissionError before any dispatch.  The budgets are wall-time, so a
+# calibrator refit of bytes_per_us/level_us/base_us automatically
+# re-thresholds admission in ROWS — a machine measured slower admits less.
+GUARD_DEGRADE_US = 1e6    # one second of predicted traversal -> degrade
+GUARD_REJECT_US = 1e7     # ten seconds predicted -> reject outright
+
+
 class CostConstants(NamedTuple):
     """The cost model's time constants, refittable as one unit.
 
@@ -71,7 +82,15 @@ class CostConstants(NamedTuple):
     thresholds (:class:`repro.core.operators.DirectionSwitch`): the planner
     stamps them onto every diropt pipeline it prices, so a calibrator
     refit that updates the constants re-thresholds the executed switch —
-    the decision is priced and measured, not hard-coded."""
+    the decision is priced and measured, not hard-coded.
+
+    ``guard_degrade_us``/``guard_reject_us`` own the admission guard
+    ladder (:mod:`repro.planner.guards`): fixed microsecond budgets that a
+    root's pre-dispatch cost estimate is compared against.  Because the
+    estimate is priced through :func:`estimate_us` under the SAME constants
+    the calibrator refits, a refit re-thresholds admission in rows without
+    touching the budgets themselves (the refit preserves them via
+    ``_replace``, like the pull thresholds)."""
 
     bytes_per_us: float = BYTES_PER_US
     level_us: float = LEVEL_US
@@ -79,11 +98,15 @@ class CostConstants(NamedTuple):
     kernel_factor: Optional[float] = None
     pull_alpha: float = PULL_ALPHA
     pull_beta: float = PULL_BETA
+    guard_degrade_us: float = GUARD_DEGRADE_US
+    guard_reject_us: float = GUARD_REJECT_US
 
     def to_json(self) -> dict:
         return {"bytes_per_us": self.bytes_per_us, "level_us": self.level_us,
                 "base_us": self.base_us, "kernel_factor": self.kernel_factor,
-                "pull_alpha": self.pull_alpha, "pull_beta": self.pull_beta}
+                "pull_alpha": self.pull_alpha, "pull_beta": self.pull_beta,
+                "guard_degrade_us": self.guard_degrade_us,
+                "guard_reject_us": self.guard_reject_us}
 
     @classmethod
     def from_json(cls, doc: dict) -> "CostConstants":
@@ -93,7 +116,11 @@ class CostConstants(NamedTuple):
                    kernel_factor=(None if doc.get("kernel_factor") is None
                                   else float(doc["kernel_factor"])),
                    pull_alpha=float(doc.get("pull_alpha", PULL_ALPHA)),
-                   pull_beta=float(doc.get("pull_beta", PULL_BETA)))
+                   pull_beta=float(doc.get("pull_beta", PULL_BETA)),
+                   guard_degrade_us=float(doc.get("guard_degrade_us",
+                                                  GUARD_DEGRADE_US)),
+                   guard_reject_us=float(doc.get("guard_reject_us",
+                                                 GUARD_REJECT_US)))
 
 
 DEFAULT_CONSTANTS = CostConstants()

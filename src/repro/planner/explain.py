@@ -45,6 +45,15 @@ store keyed on query shape can never serve a boolean plan to a weighted
 query or vice versa.  v1..v4 documents still load through
 :func:`repro.planner.plan_store.migrate_plan_doc` (they default to
 ``workload='reach'``).
+
+Schema version 6 records the admission guard ladder: every plan document
+carries a top-level ``admission`` key (``null`` until a guarded serving
+session stamps it) holding the most recent request's per-root
+:class:`~repro.planner.guards.GuardResult` decisions and the
+``guard_degrade_us``/``guard_reject_us`` budgets they were made under
+(the ``cost_constants`` section also gained those two fields).  v1..v5
+documents migrate with ``admission: null`` — pre-guard writers never
+guarded anything.
 """
 from __future__ import annotations
 
@@ -64,7 +73,7 @@ from .stats import _bfs_profile
 __all__ = ["analyze_result", "explain", "explain_analyze", "explain_json",
            "render_analyze", "render_report", "to_json"]
 
-PLAN_SCHEMA_VERSION = 5
+PLAN_SCHEMA_VERSION = 6
 
 
 def _fmt_bytes(b: float) -> str:
@@ -218,6 +227,9 @@ def to_json(report: PlannerReport,
         # v4: the EXPLAIN ANALYZE section — null until an execution
         # reconciles predicted vs. actual (see explain_analyze)
         "analyze": analyze,
+        # v6: admission guard decisions — null until a guarded serving
+        # session stamps the most recent request's ladder outcome here
+        "admission": None,
     }
     if buckets is not None:
         doc["buckets"] = [{

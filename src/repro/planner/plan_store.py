@@ -45,6 +45,7 @@ import numpy as np
 from repro.core.engine import Dataset, RecursiveQuery, build_plan
 from repro.core.operators import EngineCaps
 from repro.core.recursive import precursive_plan
+from repro.obs import faultinject as _fault
 
 from . import calibrate as _calibrate
 from .ast import LogicalQuery
@@ -160,8 +161,8 @@ def stats_from_json(doc: dict) -> GraphStats:
 # ---------------------------------------------------------------------------
 
 def migrate_plan_doc(doc: dict) -> dict:
-    """Upgrade one machine-readable plan document to ``schema_version`` 5
-    (a copy; the input is not mutated).  v5 documents pass through.
+    """Upgrade one machine-readable plan document to ``schema_version`` 6
+    (a copy; the input is not mutated).  v6 documents pass through.
 
     v1 -> v2: fill the rehydration-only stats fields and fold the v1
     writer's statically-factored kernel bytes into ``plain_bytes``.
@@ -173,11 +174,15 @@ def migrate_plan_doc(doc: dict) -> dict:
     (``null`` — an older writer never reconciled predicted vs. actual).
     v4 -> v5: the logical section gains ``workload='reach'`` /
     ``weight_col=null`` and every candidate gains ``semiring='reach'`` —
-    an older writer only ever planned boolean BFS."""
+    an older writer only ever planned boolean BFS.
+    v5 -> v6: the document gains the top-level ``admission`` section
+    (``null`` — a pre-guard writer never guarded a request) and the cost
+    constants gain the default guard budgets
+    (:meth:`CostConstants.from_json` defaults them)."""
     v = doc.get("schema_version")
     if v == PLAN_SCHEMA_VERSION:
         return doc
-    if v not in (1, 2, 3, 4):
+    if v not in (1, 2, 3, 4, 5):
         raise ValueError(f"unsupported plan schema_version {v!r} "
                          f"(this reader handles 1..{PLAN_SCHEMA_VERSION})")
     out = copy.deepcopy(doc)
@@ -204,6 +209,7 @@ def migrate_plan_doc(doc: dict) -> dict:
         cost.setdefault("level_dirs", [])        # v<=2: push-only plans
         c.setdefault("semiring", "reach")        # v<=4: no value plane
     out.setdefault("analyze", None)              # v<=3: never analyzed
+    out.setdefault("admission", None)            # v<=5: never guarded
     return out
 
 
@@ -347,12 +353,17 @@ def save_session(session: ServingSession, path: str) -> str:
 def load_store(path: str) -> dict:
     """Read + schema-migrate a plan-store file."""
     with open(path) as f:
-        doc = json.load(f)
+        text = f.read()
+    if _fault._ACTIVE and _fault.consume("plan_store_corrupt"):
+        # chaos seam: serve the reader a truncated byte stream, as if the
+        # writer had died mid-write without the atomic-rename protection
+        text = text[:len(text) // 2]
+    doc = json.loads(text)
     if doc.get("kind") != STORE_KIND:
         raise ValueError(f"{path} is not a plan store "
                          f"(kind={doc.get('kind')!r})")
     v = doc.get("schema_version")
-    if v not in (1, 2, 3, 4, PLAN_SCHEMA_VERSION):
+    if v not in (1, 2, 3, 4, 5, PLAN_SCHEMA_VERSION):
         raise ValueError(f"unsupported plan-store schema_version {v!r}")
     doc = dict(doc)
     doc["schema_version"] = PLAN_SCHEMA_VERSION

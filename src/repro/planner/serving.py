@@ -58,24 +58,31 @@ import dataclasses
 import os
 import time
 import warnings
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import numpy as np
 
-from repro.core.engine import (Dataset, dispatch_buckets, run_query_batch,
+from repro.core.engine import (SKIPPED, Dataset, DispatchReport, RetryPolicy,
+                               WORD_LANES, dispatch_buckets, run_query_batch,
                                run_query_multi)
 from repro.core.operators import BFSResult, EngineCaps, execute_batch
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.obs import faultinject as _fault
 from repro.obs import trace as _trace
 from repro.obs.metrics import MetricsRegistry
 
 from .ast import LogicalQuery, normalize, parse
 from .calibrate import Calibrator, plan_signature, stats_digest
 from .explain import analyze_result, to_json
+from .guards import (AdmissionError, GuardResult, InvalidRequestError,
+                     admit_roots)
 from .optimize import (PhysicalChoice, PlannerReport, RootBucket,
                        bucket_roots, plan)
 from .stats import compute_stats, root_estimates
 
-__all__ = ["PendingResult", "PlanEntry", "ServingSession", "shape_key"]
+__all__ = ["PendingResult", "PlanEntry", "RequestReport", "ServingSession",
+           "shape_key"]
 
 
 ShapeKey = Tuple
@@ -138,6 +145,33 @@ class PlanEntry:
     last_latency_us: float = 0.0
 
 
+@dataclasses.dataclass
+class RequestReport:
+    """What the front door did to ONE request beyond returning rows —
+    the explicit classification of every degraded answer (readable as
+    ``session.last_report`` right after ``submit``).  A lane is either
+    served in full, or appears in exactly one of these lists."""
+
+    admission: Optional[List[GuardResult]] = None   # per-root decisions
+    degraded_roots: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)       # (root, clamped depth): prefix answers
+    skipped_roots: List[int] = dataclasses.field(default_factory=list)
+    #   roots whose bucket the deadline budget never launched (empty answer)
+    denied_roots: List[int] = dataclasses.field(default_factory=list)
+    #   roots whose overflow retry / degraded re-dispatch the RetryPolicy
+    #   refused (truncated or empty answer)
+    skipped_buckets: int = 0
+    straggler_buckets: int = 0
+    retries: int = 0
+    evictions: int = 0
+
+    @property
+    def truncated(self) -> bool:
+        """True iff ANY lane's answer is not the full traversal."""
+        return bool(self.degraded_roots or self.skipped_roots
+                    or self.denied_roots)
+
+
 class ServingSession:
     """One graph, many requests: plan once per query shape, serve every
     batch through the reach-bucketed path.
@@ -162,7 +196,9 @@ class ServingSession:
                  calibrator: Optional[Calibrator] = None,
                  calibrate_every: int = 32,
                  plan_store: Optional[str] = None,
-                 tracer: Optional[_trace.Tracer] = None):
+                 tracer: Optional[_trace.Tracer] = None,
+                 guards: bool = True,
+                 retry_policy: Optional[RetryPolicy] = None):
         self.ds = ds
         self.max_buckets = max_buckets
         self.caps = caps
@@ -172,6 +208,19 @@ class ServingSession:
         self.calibrate_every = int(calibrate_every)
         self.plan_store_path = plan_store
         self.tracer = tracer     # installed process-wide for each submit()
+        # the admission guard ladder (planner/guards.py): every submitted
+        # root's pre-dispatch reach estimate is priced against the
+        # CostConstants budgets; guards=False serves everything as planned
+        # (the admission_overhead_ratio perf gate compares the two)
+        self.guards = bool(guards)
+        # ONE bounded retry budget for the whole session: overflow retries,
+        # lane evictions and guard-degraded re-dispatches all spend from it
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else RetryPolicy()
+        # per-bucket wall-time EMA: fed by every measured dispatch, read by
+        # the executor's deadline budgeting to decide skip-vs-launch
+        self._straggler = StragglerMonitor()
+        self.last_report: Optional[RequestReport] = None
         self._logical: Dict[str, LogicalQuery] = {}
         self._choice: Dict[ShapeKey, PlannerReport] = {}
         self._bucket_plans: Dict[Tuple, PhysicalChoice] = {}
@@ -214,11 +263,48 @@ class ServingSession:
         self._m_coalesced_roots = self._metrics.counter(
             "repro_coalesced_roots_total",
             "enqueued roots answered through coalesced dispatches")
+        self._m_admit_traverse = self._metrics.counter(
+            "repro_admission_traverse_total",
+            "roots admitted to run as planned by the guard ladder")
+        self._m_admit_degrade = self._metrics.counter(
+            "repro_admission_degrade_total",
+            "roots depth-clamped to a bounded prefix by the guard ladder")
+        self._m_admit_reject = self._metrics.counter(
+            "repro_admission_reject_total",
+            "roots rejected at the front door (AdmissionError)")
+        self._m_deadline_skipped = self._metrics.counter(
+            "repro_deadline_skipped_buckets_total",
+            "buckets skipped by a deadline budget or exceeding their "
+            "straggler deadline")
+        self._m_retry_denied = self._metrics.counter(
+            "repro_retry_denied_total",
+            "re-dispatches refused by the exhausted RetryPolicy budget "
+            "(the answer degraded instead of retrying)")
         self._pending: Dict[ShapeKey, list] = {}
         self._warned_overflow = False
+        self._warned_deadline = False
         if plan_store is not None and os.path.exists(plan_store):
+            # front-door hardening: a truncated, corrupted, future-schema
+            # or wrong-graph store must not take serving down — warn, drop
+            # whatever the partial rehydrate touched, and cold-start (the
+            # next save_plan_store() rewrites the file atomically).  Direct
+            # rehydrate_session()/migrate_plan_doc() calls still raise.
             from .plan_store import rehydrate_into
-            rehydrate_into(self, plan_store)
+            try:
+                rehydrate_into(self, plan_store)
+            except Exception as e:
+                self._logical.clear()
+                self._choice.clear()
+                self._bucket_plans.clear()
+                self._plans.clear()
+                self._requests.clear()
+                if calibrator is None:
+                    self.calibrator = Calibrator()
+                warnings.warn(
+                    f"plan store {plan_store!r} could not be rehydrated "
+                    f"({type(e).__name__}: {e}); cold-starting the "
+                    "session — the next save_plan_store() rewrites it "
+                    "atomically", RuntimeWarning, stacklevel=2)
 
     # -- the three cache grains -------------------------------------------
     def _normalize_sql(self, sql: str) -> str:
@@ -374,6 +460,14 @@ class ServingSession:
             # its predictors are fed unscaled; a vmap-batched engine's
             # plan prices ONE lane and is scaled by the dispatched count
             scale = 1 if c.engine == "multiquery" else lanes
+            measured = t.elapsed_us
+            if _fault._ACTIVE:
+                # chaos seam: a poisoned measurement stands in for a host
+                # clock glitch / preempted timer — the calibrator's own
+                # guards (finite-check + validated refit) must absorb it
+                v = _fault.consume("calibrator_poison")
+                if v is not None and v is not True:
+                    measured = float(v)
             self.calibrator.observe(
                 plan_signature(c.label, c.query.direction, t.caps, digest,
                                lanes=lanes, shape=shape,
@@ -381,7 +475,7 @@ class ServingSession:
                 levels=c.cost.levels,
                 plain_bytes=scale * c.cost.plain_bytes,
                 kernel_bytes=scale * c.cost.kernel_bytes,
-                measured_us=t.elapsed_us)
+                measured_us=measured)
 
         return _observe
 
@@ -401,16 +495,23 @@ class ServingSession:
         return caps if bool(np.any(caps < q.max_depth)) else None
 
     def _execute(self, entry: PlanEntry, check_overflow: bool,
-                 observe: bool = False) -> list[BFSResult]:
+                 observe: bool = False,
+                 deadline_us: Optional[float] = None
+                 ) -> Tuple[list, DispatchReport]:
         """One batched dispatch per bucket, each with ITS chosen engine and
         caps, through THE shared bucket executor
         (:func:`repro.core.engine.dispatch_buckets`).  Only the dispatch
         callback (each bucket's own engine/pipeline) and the dressing hook
-        are serving-specific; launch ordering, the global-caps overflow
-        retry, the host transfer/scatter and the per-bucket timing live in
-        the executor, shared with every other bucketed path."""
+        are serving-specific; launch ordering, the retry-policy overflow
+        handling, deadline skipping, the host transfer/scatter and the
+        per-bucket timing live in the executor, shared with every other
+        bucketed path.  Returns ``(per-lane results, DispatchReport)`` —
+        deadline-skipped lanes hold the :data:`~repro.core.engine.SKIPPED`
+        sentinel; retry-denied buckets are dressed WITHOUT the overflow
+        check (their truncated rows stand, classified on the report)."""
         global_caps = entry.choice.query.caps
         choices = entry.bucket_choices
+        rep = DispatchReport()
 
         def _dispatch(i, b, caps):
             c = choices[i]
@@ -433,19 +534,169 @@ class ServingSession:
             return run_query_batch(q, self.ds, list(b.roots))
 
         def _finish(i, b, r):
-            return choices[i].dress(r, check_overflow=check_overflow,
+            # the executor fills the report for bucket i before finish(i):
+            # a retry-denied bucket's rows are truncated BY DESIGN — dress
+            # them without the overflow check (degraded, not an error)
+            co = check_overflow and i not in rep.denied_buckets
+            return choices[i].dress(r, check_overflow=co,
                                     caps=choices[i].query.caps)
 
-        return dispatch_buckets(
+        out = dispatch_buckets(
             entry.buckets, _dispatch, fallback_caps=global_caps,
             finish=_finish, observer=self._observer(entry, observe),
-            to_host=True)
+            to_host=True, retry=self.retry_policy,
+            deadline_us=deadline_us, straggler=self._straggler, report=rep)
+        return out, rep
+
+    # -- the failure-hardened front door ------------------------------------
+    def _validate_request(self, logical: LogicalQuery, roots,
+                          op: str = "submit") -> list[int]:
+        """Typed front-door validation, BEFORE tracing or JIT: bad roots
+        and non-positive depths raise :class:`InvalidRequestError` here
+        instead of surfacing as opaque shape errors deep in a dispatch."""
+        if logical.max_depth <= 0:
+            raise InvalidRequestError(
+                f"{op}: max_depth must be >= 1 (got {logical.max_depth})")
+        arr = np.asarray(roots).reshape(-1)
+        if arr.size == 0:
+            return []
+        if arr.dtype.kind not in "iu":
+            raise InvalidRequestError(
+                f"{op}: roots must be integers (got dtype {arr.dtype})")
+        v = self.ds.num_vertices
+        bad = arr[(arr < 0) | (arr >= v)]
+        if bad.size:
+            raise InvalidRequestError(
+                f"{op}: root(s) {bad[:8].tolist()} out of range for a "
+                f"graph with {v} vertices (valid: 0..{v - 1})")
+        return [int(r) for r in arr]
+
+    def _admit_request(self, logical: LogicalQuery, roots: Sequence[int]
+                       ) -> Optional[List[GuardResult]]:
+        """Run every root through the guard ladder; count + trace each
+        decision; raise :class:`AdmissionError` on the first reject (after
+        every decision is counted — the metrics see the whole batch)."""
+        if not self.guards or not roots:
+            return None
+        decisions = admit_roots(self.ds, logical.direction, roots,
+                                logical.max_depth,
+                                self.calibrator.constants)
+        reject = None
+        for g in decisions:
+            if g.decision == "traverse":
+                self._m_admit_traverse.inc()
+            elif g.decision == "degrade":
+                self._m_admit_degrade.inc()
+            else:
+                self._m_admit_reject.inc()
+                reject = reject if reject is not None else g
+            if g.decision != "traverse":
+                _trace.trace_event("admission", root=g.root,
+                                   decision=g.decision,
+                                   est_us=g.est_us,
+                                   threshold_us=g.threshold_us,
+                                   clamp_depth=g.clamp_depth)
+        if reject is not None:
+            raise AdmissionError(reject)
+        return decisions
+
+    @staticmethod
+    def _admission_groups(logical: LogicalQuery,
+                          decisions: Optional[List[GuardResult]],
+                          n_roots: int):
+        """Partition the request's lanes by admission outcome: one group
+        for the as-planned roots, plus one per distinct degrade clamp
+        depth (each with its OWN depth-clamped logical — a degraded answer
+        is the same traversal cut at a shallower bound, so its rows are a
+        prefix of the full answer)."""
+        if decisions is None or all(g.decision == "traverse"
+                                    for g in decisions):
+            return [(logical, list(range(n_roots)), None)]
+        groups = []
+        full = [i for i, g in enumerate(decisions)
+                if g.decision == "traverse"]
+        if full:
+            groups.append((logical, full, None))
+        by_clamp: Dict[int, list] = {}
+        for i, g in enumerate(decisions):
+            if g.decision == "degrade":
+                by_clamp.setdefault(int(g.clamp_depth), []).append(i)
+        for clamp in sorted(by_clamp):
+            groups.append((dataclasses.replace(logical, max_depth=clamp),
+                           by_clamp[clamp], clamp))
+        return groups
+
+    @staticmethod
+    def _degraded_result(template=None) -> BFSResult:
+        """A classified EMPTY answer for a lane the budget refused to
+        serve: zero rows, zero depth, no overflow.  Shaped like a sibling
+        lane's dressed result when one exists (same columns and dtypes),
+        otherwise a minimal zero-row result."""
+        if template is not None:
+            def cut(a):
+                a = np.asarray(a)
+                return a[:0] if a.ndim else np.zeros((), a.dtype)
+            return jax.tree_util.tree_map(cut, template)
+        z = np.zeros((), np.int32)
+        return BFSResult(values={}, positions=np.zeros(0, np.int32),
+                         count=z, depth=z,
+                         overflow=np.zeros((), bool),
+                         row_depths=np.zeros(0, np.int32))
+
+    def _note_dispatch_report(self, rep: DispatchReport,
+                              report: RequestReport, roots: Sequence[int],
+                              lanes: Sequence[int]) -> None:
+        """Fold one group dispatch's :class:`DispatchReport` into the
+        request-level report + metrics, with the once-per-session warning
+        that makes deadline degradation observable (satellite of the
+        silent-block hazard: a skipped or straggling bucket must never be
+        inferable only from the latency histogram)."""
+        report.retries += rep.retries
+        report.evictions += rep.evictions
+        report.skipped_buckets += len(rep.skipped_buckets)
+        report.straggler_buckets += len(rep.straggler_buckets)
+        for idx in rep.denied_lanes:
+            report.denied_roots.append(int(roots[lanes[idx]]))
+        if rep.denied_lanes:
+            self._m_retry_denied.inc(len(rep.denied_lanes))
+        n_skip = len(rep.skipped_buckets)
+        if n_skip:
+            self._m_deadline_skipped.inc(n_skip)
+        if (n_skip or rep.straggler_buckets) and not self._warned_deadline:
+            # the silent-block fix: a deadline that drops work or a bucket
+            # that straggles past its predicted wall time must be LOUD the
+            # first time, not just a counter nobody reads
+            self._warned_deadline = True
+            what = []
+            if n_skip:
+                what.append(f"{n_skip} bucket(s) skipped by the deadline "
+                            "budget (the affected answers are explicitly "
+                            "truncated)")
+            if rep.straggler_buckets:
+                what.append(f"{len(rep.straggler_buckets)} bucket(s) "
+                            "straggled past their predicted wall time")
+            warnings.warn(
+                "; ".join(what) + " — see session.last_report "
+                "(repro_deadline_skipped_buckets_total counts every "
+                "skip; warned once per session)",
+                RuntimeWarning, stacklevel=3)
 
     def submit(self, sql: str, roots: Sequence[int],
-               *, check_overflow: bool = True) -> list[BFSResult]:
+               *, check_overflow: bool = True,
+               deadline_us: Optional[float] = None) -> list[BFSResult]:
         """Answer one batched traversal request: per-root results in
         request order (one bucketed dispatch per reach class, each bucket
         running ITS OWN chosen engine with right-sized caps).
+
+        The front door validates first (typed errors before tracing/JIT),
+        then runs every root through the admission guard ladder: rejected
+        roots raise :class:`AdmissionError`; degraded roots are served a
+        depth-clamped PREFIX of their traversal (classified on
+        ``session.last_report``).  ``deadline_us`` bounds the request's
+        dispatch wall time: buckets that no longer fit the remaining
+        budget are skipped and their lanes answered with explicit empty
+        results — ``last_report.truncated`` says so, nothing blocks
+        silently.
 
         Warm requests (plan-cache hits: the dispatches are compiled) are
         timed per bucket and fed to the calibrator; every
@@ -455,43 +706,113 @@ class ServingSession:
         ``request`` > ``parse``/``plan``/``compile`` spans here,
         ``stats``/``dispatch``/``transfer`` spans and per-level events
         downstream."""
+        logical = self._logical_for(sql)
+        roots = self._validate_request(logical, roots)
         prev_tracer = (_trace.set_tracer(self.tracer)
                        if self.tracer is not None else None)
         try:
-            return self._submit_traced(sql, roots, check_overflow)
+            return self._submit_traced(sql, logical, roots, check_overflow,
+                                       deadline_us)
         finally:
             if self.tracer is not None:
                 _trace.set_tracer(prev_tracer)
 
-    def _submit_traced(self, sql: str, roots: Sequence[int],
-                       check_overflow: bool) -> list[BFSResult]:
+    def _submit_traced(self, sql: str, logical: LogicalQuery,
+                       roots: list[int], check_overflow: bool,
+                       deadline_us: Optional[float]) -> list[BFSResult]:
         self.requests += 1
         self._m_requests.inc()
         hits0, misses0 = self.plan_hits, self.plan_misses
+        report = RequestReport()
+        self.last_report = report
+        out: list = [None] * len(roots)
+        last_entry = None
         with _trace.trace_span("request", requests=self.requests) as rattrs:
             with _trace.trace_span("parse"):
                 logical = self._logical_for(sql)
-            with _trace.trace_span("plan"):
-                entry = self._entry_for(logical, roots)
-            warm = entry.served > 0  # dispatches compiled IN THIS process
-            rattrs["warm"] = warm
+            decisions = self._admit_request(logical, roots)
+            report.admission = decisions
+            groups = self._admission_groups(logical, decisions, len(roots))
             t0 = time.perf_counter()
-            if warm:
-                out = self._execute(entry, check_overflow, observe=True)
-            else:
-                # first serve of this entry in this process: the span makes
-                # jit compilation visible (it dominates cold latency)
-                with _trace.trace_span("compile", engine=entry.choice.label):
-                    out = self._execute(entry, check_overflow,
-                                        observe=False)
+            warm_all = True
+            progress = False        # at least one group actually dispatched
+            for glogical, lanes, clamp in groups:
+                sub_roots = [roots[i] for i in lanes]
+                with _trace.trace_span("plan"):
+                    entry = self._entry_for(glogical, sub_roots)
+                last_entry = entry
+                if decisions is not None:
+                    entry.plan_json["admission"] = {
+                        "decisions": [g.to_json() for g in decisions],
+                        "degrade_us":
+                            self.calibrator.constants.guard_degrade_us,
+                        "reject_us":
+                            self.calibrator.constants.guard_reject_us}
+                remaining = None
+                if deadline_us is not None:
+                    spent = (time.perf_counter() - t0) * 1e6
+                    remaining = max(deadline_us - spent, 0.0)
+                    if remaining <= 0.0 and progress:
+                        # the budget died before this group launched
+                        # anything: answer its lanes with classified
+                        # empties (the FIRST group always runs — a
+                        # request makes progress, the budget only stops
+                        # further work)
+                        for i in lanes:
+                            out[i] = self._degraded_result()
+                            report.skipped_roots.append(roots[i])
+                        report.skipped_buckets += len(entry.buckets)
+                        self._m_deadline_skipped.inc(len(entry.buckets))
+                        continue
+                if clamp is not None:
+                    # a guard-degraded re-dispatch spends the SAME bounded
+                    # retry budget as overflow retries; an exhausted budget
+                    # degrades further, to the empty classified answer
+                    if not self.retry_policy.spend():
+                        self._m_retry_denied.inc(len(lanes))
+                        for i in lanes:
+                            out[i] = self._degraded_result()
+                            report.denied_roots.append(roots[i])
+                        continue
+                    report.degraded_roots.extend(
+                        (roots[i], clamp) for i in lanes)
+                progress = True
+                warm = entry.served > 0  # dispatches compiled here
+                warm_all = warm_all and warm
+                if warm:
+                    sub_out, rep = self._execute(
+                        entry, check_overflow, observe=True,
+                        deadline_us=remaining)
+                else:
+                    # first serve of this entry in this process: the span
+                    # makes jit compilation visible (it dominates cold
+                    # latency)
+                    with _trace.trace_span("compile",
+                                           engine=entry.choice.label):
+                        sub_out, rep = self._execute(
+                            entry, check_overflow, observe=False,
+                            deadline_us=remaining)
+                self._note_dispatch_report(rep, report, roots, lanes)
+                template = next((r for r in sub_out
+                                 if r is not SKIPPED), None)
+                for pos, i in enumerate(lanes):
+                    r = sub_out[pos]
+                    if r is SKIPPED:
+                        report.skipped_roots.append(roots[i])
+                        r = self._degraded_result(template)
+                    out[i] = r
+                entry.served += 1
+            rattrs["warm"] = warm_all
             self.last_latency_us = (time.perf_counter() - t0) * 1e6
             rattrs["latency_us"] = self.last_latency_us
+            if report.truncated:
+                rattrs["truncated"] = True
         self._m_latency.observe(self.last_latency_us)
         self._m_roots.inc(len(out))
         self._m_hits.inc(self.plan_hits - hits0)
         self._m_misses.inc(self.plan_misses - misses0)
-        entry.last_latency_us = self.last_latency_us
-        entry.served += 1
+        if last_entry is not None:
+            last_entry.last_latency_us = self.last_latency_us
         if (self.calibrate_every > 0
                 and self.calibrator.count - self._last_refit_count
                 >= self.calibrate_every):
@@ -511,10 +832,36 @@ class ServingSession:
         through the reach-bucketed path with per-bucket lane counts, its
         multi-lane buckets plan (and almost always pick) the bit-parallel
         ``multiquery`` engine: up to :data:`~repro.core.engine.WORD_LANES`
-        queued roots ride the bits of one frontier word."""
+        queued roots ride the bits of one frontier word.
+
+        The front door applies here too: invalid roots raise
+        :class:`InvalidRequestError` NOW (not at flush), a batch already
+        holding :data:`~repro.core.engine.WORD_LANES` pending roots for
+        this shape refuses the next one (a coalesced word has 32 lanes —
+        callers flush and re-enqueue), and a root the guard ladder would
+        REJECT raises :class:`AdmissionError` immediately (degrade
+        decisions are applied at flush, by ``submit``)."""
         logical = self._logical_for(sql)
+        [root] = self._validate_request(logical, [root], op="enqueue")
+        key = shape_key(logical)
+        if len(self._pending.get(key, ())) >= WORD_LANES:
+            raise InvalidRequestError(
+                f"enqueue: this query shape already has {WORD_LANES} "
+                "pending roots (one coalesced word) — call flush() "
+                "before enqueueing more")
+        if self.guards:
+            decision = admit_roots(self.ds, logical.direction, [root],
+                                   logical.max_depth,
+                                   self.calibrator.constants)[0]
+            if decision.decision == "reject":
+                self._m_admit_reject.inc()
+                _trace.trace_event("admission", root=decision.root,
+                                   decision="reject",
+                                   est_us=decision.est_us,
+                                   threshold_us=decision.threshold_us)
+                raise AdmissionError(decision)
         ticket = PendingResult()
-        self._pending.setdefault(shape_key(logical), []).append(
+        self._pending.setdefault(key, []).append(
             (sql, int(root), ticket))
         return ticket
 
@@ -591,6 +938,13 @@ class ServingSession:
             "latency_us_p99": lat["p99"],
             "overflow_retries": int(self._m_retries.value),
             "overflow_lane_evictions": int(self._m_lane_evictions.value),
+            "admission_traverse": int(self._m_admit_traverse.value),
+            "admission_degrade": int(self._m_admit_degrade.value),
+            "admission_reject": int(self._m_admit_reject.value),
+            "deadline_skipped_buckets": int(
+                self._m_deadline_skipped.value),
+            "retry_denied": int(self._m_retry_denied.value),
+            "retry_budget_spent": self.retry_policy.spent,
             "coalesced_dispatches": int(self._m_coalesced.value),
             "coalesced_roots": int(self._m_coalesced_roots.value),
             "pending_requests": sum(len(v)

@@ -1,0 +1,255 @@
+"""Chaos suite: every injected fault ends in a CLASSIFIED degraded answer
+or a typed error — never a crash, a hang, or silently-wrong rows.
+
+Each test arms one :mod:`repro.obs.faultinject` point (or feeds garbage
+input, which needs no seam), drives the serving front door through it, and
+asserts three things: (1) the session stays alive and keeps answering,
+(2) the fault is VISIBLE — a typed exception, a ``RequestReport`` flag, a
+metric, or a warning, and (3) rows on non-faulted lanes are bit-identical
+to a fault-free baseline (row parity — a fault may truncate an answer,
+never corrupt one).
+
+The seam itself is also under test: ``injected()`` must disarm on every
+exit path, so one chaos test can never leak a fault into the next.
+"""
+import json
+import math
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import EngineCaps
+from repro.core.engine import Dataset
+from repro.data.treegen import TreeSpec, make_edge_table
+from repro.obs import faultinject
+from repro.planner import ServingSession, paper_listing
+from repro.planner.guards import AdmissionError, InvalidRequestError
+from repro.planner.plan_store import load_store, save_session
+
+CAPS = EngineCaps(frontier=2048, result=4096)
+ROOTS = [0, 1, 5, 77, 500, 1500, 2999]
+
+
+@pytest.fixture(scope="module")
+def tree_ds():
+    spec = TreeSpec(num_vertices=3000, height=10, payload_cols=2, seed=11)
+    return Dataset.prepare(make_edge_table(spec), spec.num_vertices)
+
+
+@pytest.fixture(scope="module")
+def sql():
+    return paper_listing(1, root=0, depth=6)
+
+
+@pytest.fixture(scope="module")
+def baseline(tree_ds, sql):
+    session = ServingSession(tree_ds, caps=CAPS)
+    return session.submit(sql, ROOTS)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_faults():
+    faultinject.clear()
+    yield
+    assert not faultinject.armed(), "a chaos test leaked an armed fault"
+    faultinject.clear()
+
+
+def _assert_parity(got, want):
+    n = int(want.count)
+    assert int(got.count) == n
+    assert np.array_equal(np.asarray(got.values["id"])[:n],
+                          np.asarray(want.values["id"])[:n])
+
+
+# ---------------------------------------------------------------------------
+# the seam
+# ---------------------------------------------------------------------------
+
+def test_seam_disarms_on_every_exit_path():
+    with faultinject.injected("bucket_overflow"):
+        assert faultinject.armed()
+    assert not faultinject.armed()
+    with pytest.raises(RuntimeError, match="boom"):
+        with faultinject.injected("straggler_sleep", 0.5):
+            raise RuntimeError("boom")
+    assert not faultinject.armed()
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faultinject.inject("not_a_point")
+
+
+def test_consume_decrements_times():
+    faultinject.inject("bucket_overflow", times=2)
+    assert faultinject.consume("bucket_overflow")
+    assert faultinject.consume("bucket_overflow")
+    assert faultinject.consume("bucket_overflow") is None
+    assert not faultinject.armed()
+
+
+# ---------------------------------------------------------------------------
+# fault class 1: bucket overflow -> bounded retry, identical rows
+# ---------------------------------------------------------------------------
+
+def test_forced_overflow_retries_and_keeps_row_parity(
+        tree_ds, sql, baseline):
+    session = ServingSession(tree_ds, caps=CAPS)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with faultinject.injected("bucket_overflow", times=1):
+            out = session.submit(sql, ROOTS)
+    rep = session.last_report
+    assert rep.retries >= 1                       # the fault was VISIBLE
+    assert session.stats["retry_budget_spent"] >= 1
+    for got, want in zip(out, baseline):          # ...and harmless
+        _assert_parity(got, want)
+
+
+# ---------------------------------------------------------------------------
+# fault class 2: stragglers under a deadline -> truncated, never hung
+# ---------------------------------------------------------------------------
+
+def test_straggler_under_deadline_truncates_with_parity(
+        tree_ds, sql, baseline):
+    session = ServingSession(tree_ds, caps=CAPS)
+    session.submit(sql, ROOTS)                    # warm the plan + jit
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faultinject.injected("straggler_sleep", 0.05, times=None):
+            out = session.submit(sql, ROOTS, deadline_us=20_000.0)
+    rep = session.last_report
+    assert rep.truncated                          # classified, not silent
+    assert rep.skipped_buckets >= 1
+    assert rep.skipped_roots                      # named, per root
+    assert session.stats["deadline_skipped_buckets"] >= 1
+    assert any("deadline" in str(x.message).lower() for x in w)
+    skipped = set(rep.skipped_roots)
+    for r, got, want in zip(ROOTS, out, baseline):
+        if r in skipped:
+            assert int(got.count) == 0            # degraded: empty, typed
+        else:
+            _assert_parity(got, want)             # non-faulted lane parity
+
+
+def test_no_deadline_means_no_truncation(tree_ds, sql, baseline):
+    session = ServingSession(tree_ds, caps=CAPS)
+    with faultinject.injected("straggler_sleep", 0.01, times=2):
+        out = session.submit(sql, ROOTS)
+    assert not session.last_report.truncated
+    for got, want in zip(out, baseline):
+        _assert_parity(got, want)
+
+
+# ---------------------------------------------------------------------------
+# fault class 3: corrupted plan store -> warn + cold start + re-save
+# ---------------------------------------------------------------------------
+
+def test_corrupt_plan_store_cold_starts_and_recovers(
+        tree_ds, sql, baseline, tmp_path):
+    path = str(tmp_path / "store.json")
+    writer = ServingSession(tree_ds, caps=CAPS)
+    writer.submit(sql, ROOTS)
+    save_session(writer, path)
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faultinject.injected("plan_store_corrupt"):
+            session = ServingSession(tree_ds, caps=CAPS, plan_store=path)
+    assert any("cold-start" in str(x.message) for x in w)
+    assert not session._plans                     # nothing half-loaded
+    out = session.submit(sql, ROOTS)              # ...and it still serves
+    for got, want in zip(out, baseline):
+        _assert_parity(got, want)
+    # the recovered session re-saves a VALID store over the corpse
+    save_session(session, path)
+    assert load_store(path)["schema_version"] >= 6
+
+
+@pytest.mark.parametrize("garbage", [
+    "", "{not json", '{"kind": "plan_store"',
+    json.dumps({"kind": "something_else"}),
+    json.dumps({"kind": "plan_store", "schema_version": 99}),
+])
+def test_garbage_store_bytes_cold_start(tree_ds, sql, tmp_path, garbage):
+    path = str(tmp_path / "store.json")
+    with open(path, "w") as f:
+        f.write(garbage)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        session = ServingSession(tree_ds, caps=CAPS, plan_store=path)
+    assert any("cold-start" in str(x.message) for x in w)
+    assert int(session.submit(sql, [0])[0].count) > 0
+
+
+def test_direct_load_still_raises_typed(tmp_path):
+    """The HARDENING lives in the session front door; the plan-store API
+    itself keeps raising typed errors for tooling that wants them."""
+    path = str(tmp_path / "store.json")
+    with open(path, "w") as f:
+        f.write("{definitely not json")
+    with pytest.raises(json.JSONDecodeError):
+        load_store(path)
+
+
+# ---------------------------------------------------------------------------
+# fault class 4: poisoned calibrator observations -> discarded, finite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("poison", [float("nan"), float("inf"), -5.0])
+def test_poisoned_observations_never_corrupt_constants(
+        tree_ds, sql, baseline, poison):
+    session = ServingSession(tree_ds, caps=CAPS, calibrate_every=4)
+    with faultinject.injected("calibrator_poison", poison, times=None):
+        for _ in range(3):
+            out = session.submit(sql, ROOTS)
+    cal = session.calibrator
+    assert cal.discarded > 0                      # the defense fired
+    assert cal.count == 0                         # nothing poisoned entered
+    c = cal.constants
+    for v in (c.base_us, c.level_us, c.bytes_per_us, c.kernel_factor):
+        assert v is None or (math.isfinite(v) and v > 0)
+    for got, want in zip(out, baseline):
+        _assert_parity(got, want)
+
+
+def test_huge_but_finite_poison_cannot_flip_constants_sign(tree_ds, sql):
+    session = ServingSession(tree_ds, caps=CAPS, calibrate_every=4)
+    with faultinject.injected("calibrator_poison", 1e12, times=None):
+        for _ in range(8):
+            session.submit(sql, ROOTS)
+    c = session.calibrator.constants
+    for v in (c.base_us, c.level_us, c.bytes_per_us, c.kernel_factor):
+        assert v is None or (math.isfinite(v) and v > 0)
+
+
+# ---------------------------------------------------------------------------
+# fault class 5: garbage requests -> typed errors, session stays alive
+# ---------------------------------------------------------------------------
+
+def test_garbage_roots_typed_then_session_still_serves(
+        tree_ds, sql, baseline):
+    session = ServingSession(tree_ds, caps=CAPS)
+    for bad in ([-1], [tree_ds.num_vertices], [1.5], np.array(["x"])):
+        with pytest.raises(InvalidRequestError):
+            session.submit(sql, bad)
+    out = session.submit(sql, ROOTS)
+    for got, want in zip(out, baseline):
+        _assert_parity(got, want)
+
+
+def test_rejected_root_leaves_other_requests_untouched(
+        tree_ds, sql, baseline):
+    from repro.planner.calibrate import Calibrator
+    from repro.planner.cost import DEFAULT_CONSTANTS
+    tight = DEFAULT_CONSTANTS._replace(guard_degrade_us=1e-6,
+                                       guard_reject_us=1e-3)
+    session = ServingSession(tree_ds, caps=CAPS,
+                             calibrator=Calibrator(prior=tight))
+    with pytest.raises(AdmissionError):
+        session.submit(sql, ROOTS)
+    # same session, guards off the hook for cheap traffic: still alive
+    session.guards = False
+    out = session.submit(sql, ROOTS)
+    for got, want in zip(out, baseline):
+        _assert_parity(got, want)

@@ -20,6 +20,22 @@ def test_straggler_warmup_never_flags():
     assert not m.record(0.001)
 
 
+def test_expected_is_zero_until_warm():
+    """The serving deadline budget reads ``expected`` for skip-vs-launch:
+    a COLD monitor must predict 0.0 (never veto a launch); a warm one
+    predicts the EMA."""
+    m = StragglerMonitor(warmup_steps=3)
+    assert m.expected == 0.0
+    m.record(100.0)
+    assert m.expected == 0.0          # still warming: no veto
+    m.record(100.0)
+    m.record(100.0)
+    assert m.expected > 0.0
+    for _ in range(20):
+        m.record(10.0)
+    assert 10.0 <= m.expected < 100.0  # tracks the recent regime
+
+
 def test_elastic_plan_512_to_256():
     p = ElasticPlan(old_devices=512, new_devices=256, model_parallel=16)
     assert p.old_dp == 32 and p.new_dp == 16

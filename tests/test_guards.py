@@ -1,0 +1,237 @@
+"""Admission guard ladder + front-door validation.
+
+The load-bearing guarantees:
+
+* the ladder is a PURE function of (estimate, constants, max_depth):
+  deterministic for a fixed (graph digest, constants) pair;
+* MONOTONE: tightening either budget can only move a root DOWN the ladder
+  (traverse -> degrade -> reject) — never reject -> traverse;
+* a DEGRADED answer is a depth-truncation PREFIX of the full traversal:
+  exactly the rows an unguarded run of the same query at ``max_depth =
+  clamp_depth`` returns, never a different row set;
+* the front door rejects malformed input (bad roots, non-positive depth,
+  unknown columns, oversized enqueue batches) with TYPED errors before
+  tracing or JIT — not as opaque shape errors deep inside a dispatch;
+* default budgets admit every root of the test graphs (guards are
+  invisible until a root is actually expensive).
+"""
+import numpy as np
+import pytest
+
+from repro.core import EngineCaps
+from repro.core.engine import Dataset, WORD_LANES
+from repro.data.treegen import TreeSpec, make_edge_table
+from repro.planner import ServingSession, paper_listing
+from repro.planner.ast import ParseError
+from repro.planner.calibrate import Calibrator
+from repro.planner.cost import CostConstants, DEFAULT_CONSTANTS
+from repro.planner.guards import (AdmissionError, GuardResult,
+                                  InvalidRequestError, admit_roots, decide,
+                                  guard_cost_us)
+from repro.planner.stats import RootEstimate
+
+CAPS = EngineCaps(frontier=2048, result=4096)
+RANK = {"traverse": 0, "degrade": 1, "reject": 2}
+
+
+@pytest.fixture(scope="module")
+def tree_ds():
+    spec = TreeSpec(num_vertices=3000, height=10, payload_cols=2, seed=11)
+    return Dataset.prepare(make_edge_table(spec), spec.num_vertices)
+
+
+def _ids(r):
+    return sorted(np.asarray(r.values["id"])[:int(r.count)].tolist())
+
+
+def _tight(degrade_us, reject_us):
+    return DEFAULT_CONSTANTS._replace(guard_degrade_us=float(degrade_us),
+                                      guard_reject_us=float(reject_us))
+
+
+# ---------------------------------------------------------------------------
+# the ladder as a pure function
+# ---------------------------------------------------------------------------
+
+def test_default_budgets_admit_test_graphs(tree_ds):
+    decisions = admit_roots(tree_ds, "outbound", list(range(64)), 7,
+                            DEFAULT_CONSTANTS)
+    assert [d.decision for d in decisions] == ["traverse"] * 64
+
+
+def test_ladder_decisions_by_budget():
+    est = RootEstimate(root=5, reach_rows=10_000.0, max_level_rows=4000.0,
+                       depth=6, exact=True)
+    full = guard_cost_us(est, DEFAULT_CONSTANTS, depth=6)
+    r = decide(est, _tight(full + 1, full + 2), max_depth=6)
+    assert r.decision == "traverse" and r.clamp_depth is None
+    r = decide(est, _tight(full - 1, full + 1), max_depth=6)
+    assert r.decision == "degrade" and 1 <= r.clamp_depth < 6
+    r = decide(est, _tight(full / 4, full - 1), max_depth=6)
+    assert r.decision == "reject"
+
+
+def test_degrade_clamp_is_deepest_fitting_prefix():
+    est = RootEstimate(root=0, reach_rows=50_000.0, max_level_rows=9000.0,
+                       depth=8, exact=False)
+    mid = guard_cost_us(est, DEFAULT_CONSTANTS, depth=5)
+    c = _tight(mid, guard_cost_us(est, DEFAULT_CONSTANTS, depth=8) + 1)
+    r = decide(est, c, max_depth=8)
+    assert r.decision == "degrade"
+    assert r.clamp_depth == 5          # cost(5) == budget fits, cost(6) > it
+    # a request whose own depth bound already fits the budget traverses
+    r2 = decide(est, c, max_depth=3)
+    assert r2.decision == "traverse"
+
+
+def test_guard_cost_monotone_in_depth():
+    est = RootEstimate(root=0, reach_rows=7777.0, max_level_rows=900.0,
+                       depth=9, exact=False)
+    costs = [guard_cost_us(est, DEFAULT_CONSTANTS, depth=d)
+             for d in range(1, 10)]
+    assert costs == sorted(costs)
+
+
+def test_reject_carries_the_estimate(tree_ds):
+    c = _tight(1e-6, 1e-3)
+    session = ServingSession(tree_ds, calibrator=Calibrator(prior=c))
+    with pytest.raises(AdmissionError) as ei:
+        session.submit(paper_listing(1, root=0, depth=6), [0])
+    res = ei.value.result
+    assert isinstance(res, GuardResult) and res.decision == "reject"
+    assert res.root == 0 and res.est_us > res.threshold_us
+    assert session.stats["admission_reject"] == 1
+
+
+# ---------------------------------------------------------------------------
+# properties: monotonicity, determinism (hypothesis or the fallback engine)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                        # pragma: no cover
+    pytest.skip("hypothesis unavailable", allow_module_level=True)
+
+# integer-only strategies so the suite ALSO runs under the deterministic
+# fallback engine (tests/_hypothesis_fallback.py has no st.floats/builds)
+reach_st = st.integers(0, 10**9)
+budget_st = st.integers(1, 10**9)          # µs, scaled by 1e-3 below
+pct_st = st.integers(0, 100)
+
+
+def _est(root, reach, depth, exact):
+    return RootEstimate(root=root, reach_rows=float(reach),
+                        max_level_rows=float(reach) / max(depth, 1),
+                        depth=depth, exact=exact)
+
+
+@settings(max_examples=120, deadline=None)
+@given(root=st.integers(0, 999), reach=reach_st,
+       depth=st.integers(0, 16), exact=st.booleans(),
+       degrade=budget_st, reject=budget_st,
+       tighten_d=pct_st, tighten_r=pct_st, max_depth=st.integers(1, 16))
+def test_tightening_budgets_never_relaxes_decision(
+        root, reach, depth, exact, degrade, reject, tighten_d, tighten_r,
+        max_depth):
+    est = _est(root, reach, depth, exact)
+    loose = _tight(degrade * 1e-3, reject * 1e-3)
+    tight = _tight(degrade * 1e-3 * tighten_d / 100.0,
+                   reject * 1e-3 * tighten_r / 100.0)
+    a = decide(est, loose, max_depth=max_depth)
+    b = decide(est, tight, max_depth=max_depth)
+    assert RANK[b.decision] >= RANK[a.decision]
+    if a.decision == "degrade" and b.decision == "degrade":
+        # a tighter degrade budget admits at most the same depth
+        assert b.clamp_depth <= a.clamp_depth
+
+
+@settings(max_examples=60, deadline=None)
+@given(root=st.integers(0, 999), reach=reach_st,
+       depth=st.integers(0, 16), exact=st.booleans(),
+       degrade=budget_st, reject=budget_st, max_depth=st.integers(1, 16))
+def test_decision_is_deterministic(root, reach, depth, exact, degrade,
+                                   reject, max_depth):
+    est = _est(root, reach, depth, exact)
+    c = _tight(degrade * 1e-3, reject * 1e-3)
+    assert decide(est, c, max_depth=max_depth) \
+        == decide(est, c, max_depth=max_depth)
+
+
+# ---------------------------------------------------------------------------
+# degraded answers are depth-truncation prefixes
+# ---------------------------------------------------------------------------
+
+def test_degraded_answer_is_depth_prefix(tree_ds):
+    sql = paper_listing(1, root=0, depth=6)
+    full = ServingSession(tree_ds, caps=CAPS, guards=False)
+    want_full = full.submit(sql, [0])[0]
+
+    est = admit_roots(tree_ds, "outbound", [0], 6, DEFAULT_CONSTANTS)[0]
+    # budget between cost(1) and full cost -> root 0 degrades
+    lo = guard_cost_us(est.estimate, DEFAULT_CONSTANTS, depth=1)
+    c = _tight((lo + est.est_us) / 2, est.est_us + 1)
+    guarded = ServingSession(tree_ds, caps=CAPS,
+                             calibrator=Calibrator(prior=c))
+    got = guarded.submit(sql, [0])[0]
+    rep = guarded.last_report
+    assert rep.degraded_roots and rep.degraded_roots[0][0] == 0
+    clamp = rep.degraded_roots[0][1]
+    assert 1 <= clamp < 6
+
+    # the degraded rows are EXACTLY the unguarded rows at max_depth=clamp
+    want_clamped = full.submit(paper_listing(1, root=0, depth=clamp),
+                               [0])[0]
+    assert _ids(got) == _ids(want_clamped)
+    # ...and a SUBSET (prefix) of the full traversal's rows
+    assert set(_ids(got)) <= set(_ids(want_full))
+    # stamped into the plan doc (schema v6)
+    entry = next(iter(guarded._plans.values()))
+    adm = entry.plan_json["admission"]
+    assert adm is not None and adm["decisions"][0]["decision"] == "degrade"
+
+
+# ---------------------------------------------------------------------------
+# front-door validation: typed errors before tracing / JIT
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("roots", [[-1], [-7, 0], [3000], [0, 99_999]])
+def test_out_of_range_roots_raise(tree_ds, roots):
+    session = ServingSession(tree_ds, caps=CAPS)
+    with pytest.raises(InvalidRequestError, match="out of range"):
+        session.submit(paper_listing(1, root=0, depth=4), roots)
+
+
+def test_non_integer_roots_raise(tree_ds):
+    session = ServingSession(tree_ds, caps=CAPS)
+    with pytest.raises(InvalidRequestError, match="integers"):
+        session.submit(paper_listing(1, root=0, depth=4), [0.5])
+
+
+def test_non_positive_depth_raises(tree_ds):
+    session = ServingSession(tree_ds, caps=CAPS)
+    with pytest.raises(InvalidRequestError, match="max_depth"):
+        session.submit(paper_listing(1, root=0, depth=0), [0])
+
+
+def test_unknown_column_raises_parse_error(tree_ds):
+    session = ServingSession(tree_ds, caps=CAPS)
+    with pytest.raises(ParseError, match="unknown column"):
+        session.submit(paper_listing(2, root=0, depth=4, payload_cols=5),
+                       [0])
+
+
+def test_empty_root_batch_is_a_noop(tree_ds):
+    session = ServingSession(tree_ds, caps=CAPS)
+    assert session.submit(paper_listing(1, root=0, depth=4), []) == []
+
+
+def test_enqueue_validates_and_bounds_the_word(tree_ds):
+    sql = paper_listing(1, root=0, depth=4)
+    session = ServingSession(tree_ds, caps=CAPS)
+    with pytest.raises(InvalidRequestError):
+        session.enqueue(sql, -1)
+    for r in range(WORD_LANES):
+        session.enqueue(sql, r)
+    with pytest.raises(InvalidRequestError, match="pending"):
+        session.enqueue(sql, WORD_LANES)
+    assert session.flush() == 1

@@ -248,7 +248,7 @@ def test_engine_emits_dispatch_span_and_level_events(tree_ds):
 
 def _assert_exact(doc):
     a = doc["analyze"]
-    assert doc["schema_version"] == 5
+    assert doc["schema_version"] == 6
     assert a["actual"]["rows"] == a["result_count"]
     assert a["predicted"]["rows"] == pytest.approx(a["actual"]["rows"])
     assert a["predicted"]["levels"] == a["actual"]["levels"]
@@ -483,7 +483,7 @@ def test_serving_explain_analyze_groups_by_bucket(tree_ds):
     session = ServingSession(tree_ds, caps=CAPS)
     roots = [0, 1, 2, 7]
     doc = session.explain_analyze(sql, roots)
-    assert doc["schema_version"] == 5
+    assert doc["schema_version"] == 6
     an = doc["analyze"]
     assert an["mode"] == "serving"
     seen_roots = []

@@ -251,7 +251,7 @@ def test_v3_plan_doc_and_store_load_under_v4_reader(tmp_path):
     del v3["analyze"]
 
     migrated = migrate_plan_doc(v3)
-    assert migrated["schema_version"] == PLAN_SCHEMA_VERSION == 5
+    assert migrated["schema_version"] == PLAN_SCHEMA_VERSION == 6
     assert migrated["analyze"] is None
     # everything else survives untouched (the v4 writer added one slot)
     assert {k: v for k, v in migrated.items()
@@ -285,6 +285,53 @@ def test_v3_plan_doc_and_store_load_under_v4_reader(tmp_path):
 def test_migrate_rejects_unknown_versions():
     with pytest.raises(ValueError, match="schema_version"):
         migrate_plan_doc({"schema_version": 99})
+
+
+def test_v5_plan_doc_and_store_load_under_v6_reader(tmp_path):
+    """The PR-10 migration contract: a schema-version-5 document (the PR-8
+    writer — everything but the ``admission`` slot and the guard budgets)
+    migrates to v6 with ``admission`` conservatively null and the default
+    guard budgets, and a v5-shaped store loads."""
+    from repro.planner.cost import CostConstants, DEFAULT_CONSTANTS
+    from repro.planner.explain import PLAN_SCHEMA_VERSION
+
+    ds = _dataset()
+    sql = paper_listing(1, root=0, depth=3)
+    session = ServingSession(ds, caps=CAPS)
+    session.submit(sql, [0, 1])
+    v6 = session.plan_json(sql, [0, 1])
+    v5 = json.loads(json.dumps(v6))
+    v5["schema_version"] = 5
+    del v5["admission"]
+    for k in ("guard_degrade_us", "guard_reject_us"):
+        del v5["cost_constants"][k]
+
+    migrated = migrate_plan_doc(v5)
+    assert migrated["schema_version"] == PLAN_SCHEMA_VERSION == 6
+    assert migrated["admission"] is None
+    constants = CostConstants.from_json(migrated["cost_constants"])
+    assert constants.guard_degrade_us == DEFAULT_CONSTANTS.guard_degrade_us
+    assert constants.guard_reject_us == DEFAULT_CONSTANTS.guard_reject_us
+    report = report_from_json(v5)
+    assert [c.label for c in report.ranked] \
+        == [c["label"] for c in v6["candidates"]]
+
+    store_path = tmp_path / "store.json"
+    save_session(session, str(store_path))
+    doc = json.loads(store_path.read_text())
+    doc["schema_version"] = 5
+    for s in doc["shapes"]:
+        s["schema_version"] = 5
+        s.pop("admission", None)
+    for e in doc["entries"]:
+        e["plan_json"]["schema_version"] = 5
+        e["plan_json"].pop("admission", None)
+    store_path.write_text(json.dumps(doc))
+    loaded = load_store(str(store_path))
+    assert loaded["schema_version"] == PLAN_SCHEMA_VERSION
+    session2 = rehydrate_session(_dataset(), str(store_path), caps=CAPS)
+    assert session2.plan_json(sql, [0, 1])["schema_version"] \
+        == PLAN_SCHEMA_VERSION
 
 
 # ---------------------------------------------------------------------------

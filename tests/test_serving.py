@@ -415,8 +415,9 @@ def test_plan_json_schema_and_roundtrip(tree_ds):
     doc = session.plan_json(sql, [0, 1, 2])
     text = json.dumps(doc)                     # strict-JSON serializable
     doc2 = json.loads(text)
-    assert doc2["schema_version"] == 5
+    assert doc2["schema_version"] == 6
     assert doc2["analyze"] is None      # v4: filled by explain_analyze only
+    assert doc2["admission"] is None    # v6: stamped by a guarded submit
     assert doc2["chosen"] in [c["label"] for c in doc2["candidates"]]
     assert sum(c["chosen"] for c in doc2["candidates"]) == 1
     assert doc2["logical"]["max_depth"] == 4
